@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing + result emission."""
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("BENCH_OUT", "results/bench")
+
+
+def emit(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (post-warmup, blocked)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,81 @@
+"""Fig. 10 reproduction: area/power efficiency trade-off space.
+
+Design points (p, c) = (MC-IPU precision, cluster size) for 8- and
+16-input tiles, INT4 TOPS vs *effective* FP16 TFLOPS (simulator-derived
+multi-cycle factors on the forward study cases). NO-OPT = Baseline2.
+
+Paper Pareto: (12,1) and (16,1) on the power-efficiency frontier;
+(16,1) achieving ~+25% TFLOPS/mm2 and ~+46% TOPS/mm2 over NO-OPT.
+"""
+import dataclasses
+
+from benchmarks.common import emit, row
+from repro.core import simulator as sim
+from repro.core import workloads as wl
+from repro.core.area_power import (FP16, INT4, IPUDesign, baseline_design,
+                                   efficiency)
+from repro.core.simulator import TileConfig
+
+
+def _mc_factor(n_inputs: int, w: int, cluster: int) -> float:
+    """Effective FP16 slowdown at FP32 accumulation (sw precision 28 —
+    matching the paper's +25%/+40% FP16 headline, which implies an
+    mc factor of ~1.2 at the (16,1) point)."""
+    base = sim.BASELINE1 if n_inputs == 8 else sim.BASELINE2
+    tile = dataclasses.replace(base, adder_w=w, cluster_size=cluster)
+    layers = wl.resnet50()
+    return sim.normalized_exec_time(layers, tile, base,
+                                    source=sim.FORWARD_SOURCE)
+
+
+def run(verbose: bool = True):
+    results = {}
+    for n_inputs in (8, 16):
+        tile = TileConfig() if n_inputs == 16 else dataclasses.replace(
+            TileConfig(), c_unroll=8, k_unroll=8)
+        points = [(w, c) for w in (12, 16, 20, 28)
+                  for c in (1, 4, tile.ipus_per_tile)]
+        for (w, c) in points:
+            mc = _mc_factor(n_inputs, w, c)
+            d = IPUDesign(f"mc{w}c{c}", 4, 4, w, True,
+                          dataclasses.replace(tile, adder_w=w,
+                                              cluster_size=c),
+                          cluster_size=c, fp_mc_factor=mc)
+            a_int, p_int = efficiency(d, INT4)
+            a_fp, p_fp = efficiency(d, FP16)
+            key = f"{n_inputs}in/w{w}c{c}"
+            results[key] = {"tops_mm2": a_int, "tops_w": p_int,
+                            "tflops_mm2": a_fp, "tflops_w": p_fp,
+                            "mc_factor": mc}
+            if verbose:
+                row(f"fig10/{key}", 0.0,
+                    f"TOPS/mm2={a_int:.1f} TFLOPS/mm2={a_fp:.2f} "
+                    f"TOPS/W={p_int:.2f} TFLOPS/W={p_fp:.3f} mc={mc:.2f}")
+    base = baseline_design(16)
+    ab_int, pb_int = efficiency(base, INT4)
+    ab_fp, pb_fp = efficiency(base, FP16)
+    results["NO-OPT"] = {"tops_mm2": ab_int, "tops_w": pb_int,
+                         "tflops_mm2": ab_fp, "tflops_w": pb_fp}
+    opt = results["16in/w16c1"]
+    results["headline"] = {
+        "tops_mm2_gain": opt["tops_mm2"] / ab_int - 1,
+        "tflops_mm2_gain": opt["tflops_mm2"] / ab_fp - 1,
+        "tops_w_gain": opt["tops_w"] / pb_int - 1,
+        "tflops_w_gain": opt["tflops_w"] / pb_fp - 1,
+    }
+    emit("fig10_tradeoff", results)
+    return results
+
+
+def main():
+    res = run()
+    h = res["headline"]
+    print(f"fig10 headline (16-input (16,1) vs NO-OPT): "
+          f"TOPS/mm2 {h['tops_mm2_gain']:+.0%} (paper +46%), "
+          f"TFLOPS/mm2 {h['tflops_mm2_gain']:+.0%} (paper +25%), "
+          f"TOPS/W {h['tops_w_gain']:+.0%} (paper +63%), "
+          f"TFLOPS/W {h['tflops_w_gain']:+.0%} (paper +40%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Fig. 3 reproduction: error of the approximate FP-IP vs IPU precision.
+
+For each accumulator (FP16/FP32) and input distribution (Laplace, Normal,
+Uniform — the paper's synthetic proxies for DNN tensors), measure the
+median absolute error, absolute relative error (%), and contaminated
+bits against the FP32-CPU (f64 here) reference, over IPU precisions.
+
+Paper's conclusions to reproduce:
+  * FP16 accumulation: errors < 1e-6 and 0 contaminated bits at w >= 16
+  * FP32 accumulation: errors < 1e-5 at w >= 26; min contaminated at 27-28
+"""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, row, time_fn
+from repro.core.ipu import IPUConfig, fp16_inner_product_raw
+
+N = 16          # IPU width
+LENGTH = 64     # inner-product length
+SAMPLES = 400   # inner products per cell (median reported)
+
+
+@functools.lru_cache(maxsize=None)
+def _raw_fn(cfg: IPUConfig):
+    return jax.jit(lambda a, b: fp16_inner_product_raw(a, b, cfg))
+
+
+def approx_value(a, b, cfg) -> np.ndarray:
+    """Raw non-normalized accumulator value in f64 — the paper's Fig.-3
+    metric isolates the IPU-precision truncation error BEFORE the output
+    format rounds it (an FP16-rounded output is never within 1e-6 of the
+    reference; the accumulator is)."""
+    acc, exp = _raw_fn(cfg)(jnp.asarray(a), jnp.asarray(b))
+    hi = np.asarray(acc.hi, np.float64)
+    lo = np.asarray(acc.lo, np.float64)
+    e = np.asarray(exp, np.int64)
+    return (hi * 2.0 ** 24 + lo) * np.exp2(np.clip(e, -200, 200) - 30.0)
+
+
+def draw(rng, dist, shape):
+    if dist == "laplace":
+        return rng.laplace(0, 1, shape)
+    if dist == "normal":
+        return rng.normal(0, 1, shape)
+    return rng.uniform(-1, 1, shape)
+
+
+def contaminated_bits(approx: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    """Differing mantissa bits vs the f32 reference (paper's metric)."""
+    a = np.asarray(approx, np.float32).view(np.uint32).astype(np.int64)
+    r = np.asarray(ref, np.float32).view(np.uint32).astype(np.int64)
+    x = np.bitwise_xor(a, r)
+    out = np.zeros_like(x)
+    nz = x != 0
+    out[nz] = np.floor(np.log2(x[nz])) + 1
+    return np.minimum(out, 32)
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    precisions = [8, 10, 12, 14, 16, 20, 22, 24, 26, 27, 28]
+    results = {}
+    for accum in ("fp16", "fp32"):
+        for dist in ("laplace", "normal", "uniform"):
+            a = np.asarray(draw(rng, dist, (SAMPLES, LENGTH)), np.float16)
+            b = np.asarray(draw(rng, dist, (SAMPLES, LENGTH)), np.float16)
+            ref = (a.astype(np.float64) * b.astype(np.float64)).sum(-1)
+            ref32 = ref.astype(np.float32)
+            for w in precisions:
+                if accum == "fp16" and w > 16:
+                    continue
+                # w < 10 is modelled as a 10-bit datapath with the
+                # software mask at w (the truncation study of §3.1)
+                cfg = IPUConfig(n=N, w=max(min(w, 28), 10), accum=accum,
+                                sw_precision=w)
+                got = approx_value(a, b, cfg)
+                abs_err = np.abs(got - ref)
+                rel = np.abs(got - ref) / np.maximum(np.abs(ref), 1e-30)
+                cb = contaminated_bits(got, ref32)
+                key = f"{accum}/{dist}/w{w}"
+                results[key] = {
+                    "median_abs_err": float(np.median(abs_err)),
+                    "median_rel_err_pct": float(np.median(rel) * 100),
+                    "median_contaminated_bits": float(np.median(cb)),
+                    "mean_contaminated_bits": float(np.mean(cb)),
+                }
+                if verbose:
+                    r = results[key]
+                    row(f"fig3/{key}", 0.0,
+                        f"abs={r['median_abs_err']:.2e} "
+                        f"rel%={r['median_rel_err_pct']:.2e} "
+                        f"cbits={r['median_contaminated_bits']:.1f}")
+    # paper-claim checks (functional forms; the paper's absolute 1e-6 at
+    # w=16 depends on its input scaling — see EXPERIMENTS.md reproduction
+    # notes. The operative claims: w=16 error is far below FP16's own
+    # representational noise (2^-11 relative), so 16b suffices for FP16
+    # accumulation; w>=26-28 is exact to the FP32 reference.)
+    fp16_ulp_rel = 100 * 2.0 ** -11  # percent
+    claims = {
+        "fp16_w16_below_fp16_noise": (
+            results["fp16/laplace/w16"]["median_rel_err_pct"]
+            < 0.1 * fp16_ulp_rel),
+        "fp16_monotone": (
+            results["fp16/laplace/w12"]["median_abs_err"]
+            >= results["fp16/laplace/w14"]["median_abs_err"]
+            >= results["fp16/laplace/w16"]["median_abs_err"]),
+        "fp32_w26_zero_contam":
+            results["fp32/laplace/w26"]["median_contaminated_bits"] == 0,
+        "fp32_w28_zero_contam":
+            results["fp32/laplace/w28"]["median_contaminated_bits"] == 0,
+        "fp32_monotone": (
+            results["fp32/normal/w12"]["median_abs_err"]
+            >= results["fp32/normal/w20"]["median_abs_err"]
+            >= results["fp32/normal/w28"]["median_abs_err"]),
+    }
+    results["claims"] = claims
+    emit("fig3_error", results)
+    return results
+
+
+def main():
+    res = run()
+    print("fig3 claims:", res["claims"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Fig. 7 reproduction: area/power breakdown of MC-IPU tiles.
+
+Columns: INT-only, MC-IPU(12..28), NVDLA-like 38b baseline, for 8- and
+16-input tiles; component categories (FAcc, WBuf, ShCNT, MULT, Shft, AT).
+Also prints the §4.2 deltas the paper calls out.
+"""
+import dataclasses
+
+from benchmarks.common import emit, row
+from repro.core.area_power import (IPUDesign, area_breakdown, fig7_deltas,
+                                   power_breakdown, tile_area_mm2,
+                                   tile_power_w)
+from repro.core.simulator import TileConfig
+
+
+def run(verbose: bool = True):
+    results = {"deltas": fig7_deltas()}
+    for n_inputs in (8, 16):
+        tile = TileConfig() if n_inputs == 16 else dataclasses.replace(
+            TileConfig(), c_unroll=8, k_unroll=8)
+        variants = {"INT": IPUDesign("INT", 4, 4, 12, False, tile)}
+        for w in (12, 16, 20, 24, 28, 38):
+            variants[f"MC-IPU({w})"] = IPUDesign(f"mc{w}", 4, 4, w, True,
+                                                 tile)
+        for name, d in variants.items():
+            key = f"{n_inputs}in/{name}"
+            results[key] = {
+                "area_mm2": tile_area_mm2(d),
+                "power_w": tile_power_w(d),
+                "area_breakdown": area_breakdown(d),
+                "power_breakdown": power_breakdown(d),
+            }
+            if verbose:
+                ab = results[key]["area_breakdown"]
+                top = max(ab, key=ab.get)
+                row(f"fig7/{key}", 0.0,
+                    f"area={results[key]['area_mm2']:.4f}mm2 "
+                    f"power={results[key]['power_w']:.3f}W top={top}"
+                    f"({ab[top]:.0%})")
+    emit("fig7_breakdown", results)
+    return results
+
+
+def main():
+    res = run()
+    d = res["deltas"]
+    print(f"fig7 deltas: 38->28 {d['adder_38_to_28']:+.1%} (paper -17%), "
+          f"38->12 {d['adder_38_to_12']:+.1%} (paper -39%), "
+          f"INT->MC12 {d['int_to_mcipu12']:+.1%} (paper +43%)")
+
+
+if __name__ == "__main__":
+    main()

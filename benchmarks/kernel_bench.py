@@ -1,0 +1,72 @@
+"""Kernel wall-time benchmarks (CPU, XLA backend of the same math).
+
+Measures the fidelity-path FP-IP emulation matmul — paper-faithful
+nine-plane vs fused single-plane (the §Perf beyond-paper optimization) —
+against the plain f32 matmul and the integer deployment path. Interpret-
+mode Pallas numbers are reported once for reference (interpreter
+overhead dominates; correctness is covered by tests)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, row, time_fn
+from repro.core.ipu import IPUConfig
+from repro.kernels import ops
+
+M = N = 256
+K = 512
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    a16 = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float16)
+    b16 = jnp.asarray(rng.normal(0, 1, (K, N)), jnp.float16)
+    a8 = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    b8 = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    cfg = IPUConfig(n=16, w=16, accum="fp32")
+    cfg28 = IPUConfig(n=16, w=28, accum="fp32")
+
+    results = {}
+
+    def bench(name, fn, *args, flops=2 * M * N * K):
+        us = time_fn(fn, *args)
+        results[name] = {"us": us, "gflops": flops / us / 1e3}
+        if verbose:
+            row(f"kernel/{name}", us,
+                f"{results[name]['gflops']:.2f} GFLOP/s-equiv")
+
+    bench("f32_matmul",
+          jax.jit(lambda a, b: a.astype(jnp.float32)
+                  @ b.astype(jnp.float32)), a16, b16)
+    bench("int8_qmm_xla",
+          lambda a, b: ops.int8_matmul(a, b, backend="xla"), a8, b8)
+    bench("mpmm_faithful_w16",
+          lambda a, b: ops.mp_matmul(a, b, cfg, backend="xla"), a16, b16)
+    bench("mpmm_fused_w16",
+          lambda a, b: ops.mp_matmul(a, b, cfg, fused=True,
+                                     backend="xla"), a16, b16)
+    bench("mpmm_faithful_w28",
+          lambda a, b: ops.mp_matmul(a, b, cfg28, backend="xla"), a16, b16)
+    bench("mpmm_fused_w28",
+          lambda a, b: ops.mp_matmul(a, b, cfg28, fused=True,
+                                     backend="xla"), a16, b16)
+
+    results["fused_speedup_w16"] = (results["mpmm_faithful_w16"]["us"]
+                                    / results["mpmm_fused_w16"]["us"])
+    results["fused_speedup_w28"] = (results["mpmm_faithful_w28"]["us"]
+                                    / results["mpmm_fused_w28"]["us"])
+    results["emulation_overhead_vs_f32"] = (
+        results["mpmm_fused_w16"]["us"] / results["f32_matmul"]["us"])
+    emit("kernel_bench", results)
+    return results
+
+
+def main():
+    res = run()
+    print(f"kernel: fused speedup w16 {res['fused_speedup_w16']:.2f}x, "
+          f"w28 {res['fused_speedup_w28']:.2f}x; emulation overhead vs "
+          f"f32 {res['emulation_overhead_vs_f32']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

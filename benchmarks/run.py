@@ -1,0 +1,25 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark and writes
+JSON artifacts to results/bench/ (consumed by EXPERIMENTS.md).
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig3_error, fig7_breakdown, fig8_perf,
+                            fig9_expdiff, fig10_tradeoff, kernel_bench,
+                            serve_bench, table1)
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    for mod in (table1, fig7_breakdown, fig9_expdiff, fig8_perf,
+                fig10_tradeoff, fig3_error, kernel_bench, serve_bench):
+        name = mod.__name__.split(".")[-1]
+        print(f"# --- {name} ---", flush=True)
+        mod.main()
+    print(f"# all benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,58 @@
+"""Serving throughput bench: decode tok/s under each precision policy.
+
+The paper's kind is inference acceleration — this measures the actual
+serving stack (ServingEngine continuous batching on the reduced qwen2
+model) across the policies the IPU datapath motivates, on CPU wall time.
+Not a TPU number; the relative policy costs and the engine overheads are
+the object of measurement."""
+import dataclasses
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, row
+from repro.configs import reduced
+from repro.launch.serve import Request, ServingEngine
+from repro.models import registry
+
+
+def run(verbose: bool = True):
+    results = {}
+    for policy in ("bf16", "int8_serving", "int4_serving", "paper_hybrid"):
+        cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                                  precision_policy=policy)
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        engine = ServingEngine(cfg, api, params, batch_slots=4,
+                               cache_len=128)
+        rng = np.random.default_rng(0)
+        for rid in range(6):
+            engine.submit(Request(
+                rid=rid, prompt=rng.integers(0, cfg.vocab, 8,
+                                             dtype=np.int32),
+                max_new_tokens=8))
+        t0 = time.time()
+        ticks = engine.run_until_drained()
+        dt = time.time() - t0
+        new_tokens = sum(len(r.tokens) - len(r.prompt)
+                        for r in engine.completed.values())
+        results[policy] = {"tok_per_s": new_tokens / dt, "ticks": ticks,
+                           "seconds": dt}
+        if verbose:
+            row(f"serve/{policy}", dt * 1e6 / max(new_tokens, 1),
+                f"{new_tokens / dt:.1f} tok/s, {ticks} ticks")
+    emit("serve_bench", results)
+    return results
+
+
+def main():
+    res = run()
+    base = res["bf16"]["tok_per_s"]
+    print("serve: " + ", ".join(
+        f"{k}={v['tok_per_s']:.1f} tok/s ({v['tok_per_s']/base:.2f}x bf16)"
+        for k, v in res.items()))
+
+
+if __name__ == "__main__":
+    main()

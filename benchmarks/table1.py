@@ -1,0 +1,42 @@
+"""Table 1 reproduction: TOPS/mm^2 and TOPS/W across the design-space
+sensitivity study (MC-SER / MC-IPU4 / MC-IPU84 / MC-IPU8 / NVDLA / FP16 /
+INT8 / INT4) x workloads (4x4, 8x4, 8x8, FP16xFP16)."""
+import numpy as np
+
+from benchmarks.common import emit, row
+from repro.core.area_power import (PAPER_TABLE1, WORKLOAD_TYPES,
+                                   table1_model)
+
+
+def run(verbose: bool = True):
+    model = table1_model()
+    results = {}
+    errs = []
+    for design, rows in model.items():
+        for wlk, (a, p) in rows.items():
+            pa, pp = PAPER_TABLE1[design][wlk]
+            results[f"{design}/{wlk}"] = {
+                "model_tops_mm2": a, "paper_tops_mm2": pa,
+                "model_tops_w": p, "paper_tops_w": pp,
+            }
+            if a is not None and pa is not None:
+                errs += [abs(a / pa - 1), abs(p / pp - 1)]
+            if verbose:
+                fmt = lambda v: f"{v:.2f}" if v is not None else "--"
+                row(f"table1/{design}/{wlk}", 0.0,
+                    f"area {fmt(a)} (paper {fmt(pa)}) "
+                    f"power {fmt(p)} (paper {fmt(pp)})")
+    results["median_abs_rel_err"] = float(np.median(errs))
+    results["max_abs_rel_err"] = float(np.max(errs))
+    emit("table1", results)
+    return results
+
+
+def main():
+    res = run()
+    print(f"table1: median |rel err| {res['median_abs_rel_err']:.1%}, "
+          f"max {res['max_abs_rel_err']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Architecture registry: get_config(arch_id) / reduced(arch_id).
+
+Each <arch>.py holds the exact published configuration; ``reduced()``
+produces a family-preserving tiny variant for CPU smoke tests (same
+block pattern, same attention/MoE/recurrence structure, small widths).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (InputShape, ModelConfig, MoESpec, SHAPES,
+                                shape_applicable)
+from repro.configs import (gemma2_9b, glm4_9b, internvl2_1b, mixtral_8x7b,
+                           qwen2_0_5b, qwen3_moe_30b_a3b, recurrentgemma_9b,
+                           rwkv6_1_6b, seamless_m4t_medium, stablelm_12b)
+
+_MODULES = {
+    "qwen2-0.5b": qwen2_0_5b,
+    "gemma2-9b": gemma2_9b,
+    "stablelm-12b": stablelm_12b,
+    "glm4-9b": glm4_9b,
+    "rwkv6-1.6b": rwkv6_1_6b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "mixtral-8x7b": mixtral_8x7b,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "internvl2-1b": internvl2_1b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].config()
+
+
+def reduced(arch_id: str) -> ModelConfig:
+    """Family-preserving tiny config for CPU smoke tests."""
+    cfg = get_config(arch_id)
+    kv = max(1, min(cfg.n_kv_heads, 2))
+    moe = None
+    if cfg.moe:
+        moe = MoESpec(n_experts=min(cfg.moe.n_experts, 4),
+                      top_k=min(cfg.moe.top_k, 2), d_expert=32,
+                      capacity_factor=2.0)
+    n_layers = {"lm": 2, "rwkv": 2, "vlm": 2, "encdec": 2,
+                "griffin": 5}[cfg.family]
+    if cfg.attn_pattern == "alt_local_global":
+        n_layers = 2
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=kv,
+        head_dim=16,
+        d_ff=128,
+        vocab=512,
+        moe=moe,
+        d_rnn=64 if cfg.d_rnn else None,
+        window=min(cfg.window, 16) if cfg.window else None,
+        n_enc_layers=2 if cfg.n_enc_layers else None,
+        frontend_dim=16 if cfg.frontend_dim else None,
+        n_patches=8 if cfg.n_patches else None,
+        vit_dim=32 if cfg.vit_dim else None,
+        remat="none",
+    )

@@ -1,0 +1,124 @@
+"""Architecture config schema + the assigned input-shape grid."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+    dispatch: str = "einsum"   # einsum | gather (see layers/moe.py)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. ``family`` selects the model implementation:
+    'lm' (decoder-only), 'encdec', 'rwkv', 'griffin', 'vlm'."""
+
+    arch_id: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    act: str = "silu"
+    norm: str = "rms"                       # rms | rms_zc | ln
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0
+    # attention pattern: 'full' | 'swa' | 'alt_local_global' (gemma-2)
+    attn_pattern: str = "full"
+    window: Optional[int] = None
+    logit_softcap: Optional[float] = None
+    attn_softcap: Optional[float] = None
+    post_norms: bool = False                # gemma-2 post-block norms
+    tied_embeddings: bool = True
+    attn_scale: Optional[float] = None
+    moe: Optional[MoESpec] = None
+    # rwkv / griffin
+    d_rnn: Optional[int] = None
+    conv_width: int = 4
+    rec_pattern: Tuple[str, ...] = ()       # e.g. ('rec','rec','attn')
+    # encdec
+    n_enc_layers: Optional[int] = None
+    frontend_dim: Optional[int] = None      # stub modality embedding dim
+    # vlm
+    n_patches: Optional[int] = None
+    vit_dim: Optional[int] = None
+    # numerics / policy
+    precision_policy: str = "bf16"
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"                     # none | dots | full
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a shardable multiple of 64 (the extra
+        logit columns are masked in the head; see models/*._head)."""
+        return -(-self.vocab // 64) * 64
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Bounded state/window per token -> long_500k-capable."""
+        if self.family in ("rwkv", "griffin"):
+            return True
+        return self.attn_pattern == "swa" and self.window is not None
+
+    def params_count(self) -> int:
+        """Approximate parameter count (embeddings included once)."""
+        d, hd = self.d_model, self.head_dim_
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        if self.moe:
+            ffn = 3 * d * self.moe.d_expert * self.moe.n_experts \
+                + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        layers = self.n_layers * (attn + ffn)
+        emb = self.vocab * d * (1 if self.tied_embeddings else 2)
+        return layers + emb
+
+    def active_params_count(self) -> int:
+        if not self.moe:
+            return self.params_count()
+        d = self.d_model
+        hd = self.head_dim_
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        ffn = 3 * d * self.moe.d_expert * self.moe.top_k
+        return self.n_layers * (attn + ffn) + self.vocab * d
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k needs sub-quadratic attention (assignment rule)."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True

@@ -1,0 +1,31 @@
+"""Gemma-2 9B [arXiv:2408.00118; hf:google/gemma-2-9b].
+
+42L, d_model 3584, 16 heads (GQA kv=8, head_dim 256), d_ff 14336,
+vocab 256000. Alternating local(4096)/global attention, logit softcap 30,
+attention softcap 50, GeGLU, zero-centered RMSNorm with pre+post block
+norms, query scale 1/sqrt(256), tied embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="gemma2-9b",
+        family="lm",
+        n_layers=42,
+        d_model=3584,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=256,
+        d_ff=14336,
+        vocab=256000,
+        norm="rms_zc",
+        act="gelu_tanh",
+        attn_pattern="alt_local_global",
+        window=4096,
+        logit_softcap=30.0,
+        attn_softcap=50.0,
+        post_norms=True,
+        attn_scale=0.0625,  # 1/sqrt(query_pre_attn_scalar=256)
+        tied_embeddings=True,
+    )

@@ -1,0 +1,27 @@
+"""GLM-4 9B [hf:THUDM/glm-4-9b].
+
+40L, d_model 4096, 32 heads (GQA kv=2, head_dim 128), d_ff 13696,
+vocab 151552. QKV bias, partial rotary (50%, GLM 2D RoPE approximated as
+half-rotary), RMSNorm, SwiGLU, untied.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="glm4-9b",
+        family="lm",
+        n_layers=40,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=2,
+        head_dim=128,
+        d_ff=13696,
+        vocab=151552,
+        qkv_bias=True,
+        norm="rms",
+        act="silu",
+        rotary_pct=0.5,
+        attn_pattern="full",
+        tied_embeddings=False,
+    )

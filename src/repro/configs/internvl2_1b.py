@@ -1,0 +1,30 @@
+"""InternVL2-1B [arXiv:2404.16821; hf:OpenGVLab/InternVL2-1B].
+
+Qwen2-0.5B language backbone (24L, d_model 896, 14 heads GQA kv=2,
+d_ff 4864, vocab 151655) + InternViT stub frontend: input_specs()
+provides precomputed patch embeddings (256 tokens after pixel-shuffle,
+dim 1024) mapped through a 2-layer MLP projector.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="internvl2-1b",
+        family="vlm",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=4864,
+        vocab=151655,
+        qkv_bias=True,
+        norm="rms",
+        act="silu",
+        rope_theta=1e6,
+        attn_pattern="full",
+        tied_embeddings=True,
+        n_patches=256,
+        vit_dim=1024,
+    )

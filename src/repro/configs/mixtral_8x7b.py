@@ -1,0 +1,28 @@
+"""Mixtral 8x7B [arXiv:2401.04088; hf:mistralai/Mixtral-8x7B-v0.1].
+
+32L, d_model 4096, 32 heads (GQA kv=8, head_dim 128), vocab 32000,
+MoE: 8 experts, top-2, d_expert 14336. Sliding-window attention (4096)
+bounds the KV cache -> long_500k-capable.
+"""
+from repro.configs.base import ModelConfig, MoESpec
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="mixtral-8x7b",
+        family="lm",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab=32000,
+        norm="rms",
+        act="silu",
+        rope_theta=1e6,
+        attn_pattern="swa",
+        window=4096,
+        moe=MoESpec(n_experts=8, top_k=2, d_expert=14336),
+        tied_embeddings=False,
+    )

@@ -1,0 +1,26 @@
+"""Qwen2-0.5B [arXiv:2407.10671; hf:Qwen/Qwen2-0.5B].
+
+24L, d_model 896, 14 heads (GQA kv=2, head_dim 64), d_ff 4864,
+vocab 151936. QKV bias, RMSNorm, SwiGLU, tied embeddings, rope 1e6.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="qwen2-0.5b",
+        family="lm",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=4864,
+        vocab=151936,
+        qkv_bias=True,
+        norm="rms",
+        act="silu",
+        rope_theta=1e6,
+        attn_pattern="full",
+        tied_embeddings=True,
+    )

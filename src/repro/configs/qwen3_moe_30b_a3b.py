@@ -1,0 +1,28 @@
+"""Qwen3-MoE 30B-A3B [hf:Qwen/Qwen3-30B-A3B].
+
+48L, d_model 2048, 32 heads (GQA kv=4, head_dim 128), vocab 151936,
+MoE: 128 experts, top-8, d_expert 768. QK-norm, no QKV bias, full
+attention, rope 1e6.
+"""
+from repro.configs.base import ModelConfig, MoESpec
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="qwen3-moe-30b-a3b",
+        family="lm",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=768,
+        vocab=151936,
+        norm="rms",
+        act="silu",
+        qk_norm=True,
+        rope_theta=1e6,
+        attn_pattern="full",
+        moe=MoESpec(n_experts=128, top_k=8, d_expert=768),
+        tied_embeddings=False,
+    )

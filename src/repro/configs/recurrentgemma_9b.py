@@ -1,0 +1,30 @@
+"""RecurrentGemma-9B (Griffin) [arXiv:2402.19427].
+
+38L, d_model 4096, RG-LRU recurrence + local attention 1:2
+(rec, rec, attn triples; 2 trailing rec), 16 heads MQA (kv=1,
+head_dim 256), d_ff 12288, d_rnn 4096, window 2048, vocab 256000.
+Gemma-style zero-centered RMSNorm + GeGLU. Sub-quadratic.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="recurrentgemma-9b",
+        family="griffin",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab=256000,
+        norm="rms_zc",
+        act="gelu_tanh",
+        attn_pattern="swa",
+        window=2048,
+        d_rnn=4096,
+        conv_width=4,
+        rec_pattern=("rec", "rec", "attn"),
+        tied_embeddings=True,
+    )

@@ -1,0 +1,22 @@
+"""RWKV-6 "Finch" 1.6B [arXiv:2404.05892].
+
+24L, d_model 2048, attention-free (32 heads of size 64 in the wkv state),
+d_ff 7168, vocab 65536. Data-dependent decay via LoRA; LayerNorm;
+sub-quadratic (long_500k-capable).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="rwkv6-1.6b",
+        family="rwkv",
+        n_layers=24,
+        d_model=2048,
+        n_heads=32,          # wkv heads (head size 64)
+        n_kv_heads=32,
+        d_ff=7168,
+        vocab=65536,
+        norm="ln",
+        tied_embeddings=False,
+    )

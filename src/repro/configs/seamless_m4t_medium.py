@@ -1,0 +1,29 @@
+"""SeamlessM4T-medium backbone [arXiv:2308.11596].
+
+Enc-dec transformer: 12 encoder + 12 decoder layers, d_model 1024,
+16 heads (MHA, kv=16), d_ff 4096, vocab 256206. The speech frontend is a
+STUB per the assignment: input_specs() provides precomputed frame
+embeddings (seq/4 frames at dim 160); positions use RoPE as the backbone
+approximation (documented in DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="seamless-m4t-medium",
+        family="encdec",
+        n_layers=12,            # decoder layers
+        n_enc_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab=256206,
+        norm="ln",
+        act="gelu",
+        frontend_dim=160,
+        attn_pattern="full",
+        tied_embeddings=False,
+    )

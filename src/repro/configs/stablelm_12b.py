@@ -1,0 +1,25 @@
+"""StableLM-2 12B [hf:stabilityai/stablelm-2-12b; arXiv:2402.17834].
+
+40L, d_model 5120, 32 heads (GQA kv=8, head_dim 160), d_ff 13824,
+vocab 100352. LayerNorm, partial rotary (25%), SwiGLU, untied.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="stablelm-12b",
+        family="lm",
+        n_layers=40,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=160,
+        d_ff=13824,
+        vocab=100352,
+        norm="ln",
+        act="silu",
+        rotary_pct=0.25,
+        attn_pattern="full",
+        tied_embeddings=False,
+    )

@@ -1,0 +1,21 @@
+"""Core numerics of the mixed-precision IPU (the paper's contribution).
+
+Layers:
+  fp16        - IEEE field codecs as int32 JAX ops
+  fixedpoint  - two-limb int32 accumulator arithmetic
+  nibble      - 5-bit signed nibble temporal decomposition
+  ehu         - exponent handling unit + MC-IPU schedule
+  ipu         - bit-exact approximate FP-IP / MC-IPU / INT-mode emulation
+  exact_ref   - independent Python-int oracle
+  error_bounds- Theorem 1 bounds
+  simulator   - cycle-accurate tile/cluster performance model
+  area_power  - calibrated 7nm area/power model (Fig. 7 / Table 1)
+  workloads   - ResNet/Inception/LM layer shape sets for the simulator
+"""
+from repro.core.ipu import (  # noqa: F401
+    IPUConfig,
+    fp16_inner_product,
+    fp16_inner_product_raw,
+    int_inner_product,
+)
+from repro.core.fp16 import FP16, FP32, BF16, TF32, FPFormat  # noqa: F401

@@ -1,0 +1,101 @@
+"""Exponent Handling Unit (EHU) — paper §2.2 and Fig. 5.
+
+The EHU computes, per FP-IP operation (shared across all nine nibble
+iterations, which is how the hardware amortizes it):
+
+  1. element-wise product exponents  c_k = exp(a_k) + exp(b_k)
+  2. the maximum product exponent    max_c
+  3. alignment shift amounts         s_k = max_c - c_k
+  4. software-precision masking      s_k > P  ->  product contributes 0
+  5. (MC-IPU only) the multi-cycle service schedule: partition k serves
+     products whose shift lies in [k*sp, (k+1)*sp), one partition per
+     cycle (Fig. 5's ``serv_i`` bits / threshold walk).
+
+All functions operate on int32 arrays with a trailing reduction axis (the
+IPU's n inputs) and are jit/vmap-safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel for "no product" lanes (padding): treated as -inf exponent.
+NEG_INF_EXP = -(1 << 20)
+
+
+class EHUOut(NamedTuple):
+    max_exp: jax.Array     # (...,)  max product exponent per group
+    shift: jax.Array       # (..., n) alignment shift per product
+    active: jax.Array      # (..., n) bool: survives software masking
+
+
+def product_exponents(exp_a: jax.Array, exp_b: jax.Array,
+                      valid: Optional[jax.Array] = None) -> jax.Array:
+    """Stage 1: element-wise exponent sums; padded lanes get -inf."""
+    c = exp_a.astype(jnp.int32) + exp_b.astype(jnp.int32)
+    if valid is not None:
+        c = jnp.where(valid, c, NEG_INF_EXP)
+    return c
+
+
+def run(exp_a: jax.Array, exp_b: jax.Array, sw_precision: int,
+        valid: Optional[jax.Array] = None, axis: int = -1) -> EHUOut:
+    """Stages 1-4 of the EHU for one (group of) FP-IP operation(s)."""
+    c = product_exponents(exp_a, exp_b, valid)
+    max_c = jnp.max(c, axis=axis)
+    shift = jnp.expand_dims(max_c, axis) - c
+    active = shift <= sw_precision
+    if valid is not None:
+        active = active & valid
+    # All-padding groups: max is NEG_INF_EXP; nothing active.
+    return EHUOut(max_c, shift, active)
+
+
+def partition_index(shift: jax.Array, sp: int) -> jax.Array:
+    """MC-IPU partition k for each product: k = shift // sp (paper §3.2)."""
+    return shift // sp
+
+
+def num_cycles(shift: jax.Array, active: jax.Array, sp: int,
+               skip_empty: bool = False, axis: int = -1) -> jax.Array:
+    """Cycles an MC-IPU needs for one nibble iteration's alignment.
+
+    Fig. 5's threshold walk serves partition k in cycle k, so the faithful
+    count is ``max occupied partition + 1`` (empty intermediate partitions
+    still burn a cycle). ``skip_empty=True`` models a smarter scheduler
+    that skips unoccupied partitions (counts distinct occupied partitions)
+    — an optimization knob we ablate in the simulator benches.
+
+    Inactive (masked) products take no service. A group with no active
+    products still costs 1 cycle (the adder tree produces a zero).
+    """
+    k = partition_index(shift, sp)
+    k_masked = jnp.where(active, k, -1)
+    if not skip_empty:
+        cycles = jnp.max(k_masked, axis=axis) + 1
+        return jnp.maximum(cycles, 1).astype(jnp.int32)
+    # distinct occupied partitions: one-hot over partitions, OR-reduce.
+    # Max meaningful partition index is 58 // sp.
+    kmax = 58 // sp + 1
+    ks = jnp.arange(kmax, dtype=jnp.int32)
+    occupied = jnp.any(
+        jnp.expand_dims(k_masked, -1) == ks, axis=axis
+    )  # (..., kmax)
+    cycles = jnp.sum(occupied, axis=-1).astype(jnp.int32)
+    return jnp.maximum(cycles, 1)
+
+
+def service_schedule(shift: jax.Array, active: jax.Array, sp: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per-product (cycle_index, local_shift) under the MC-IPU schedule.
+
+    cycle_index = partition k (served in cycle k); local_shift = shift
+    remainder within the partition, guaranteed < sp <= w - 9, hence exact
+    by Proposition 1. Masked products get cycle_index = -1.
+    """
+    k = partition_index(shift, sp)
+    local = shift - k * sp
+    cycle = jnp.where(active, k, -1)
+    return cycle.astype(jnp.int32), local.astype(jnp.int32)

@@ -1,0 +1,249 @@
+"""Exact Python-integer oracle for the approximate FP-IP operation.
+
+This is a second, independent implementation of the paper's Fig.-2
+semantics using arbitrary-precision Python ints — no JAX, no limb tricks,
+no f32 detours. The JAX emulation in ``core.ipu`` must agree with this
+oracle bit-for-bit (tested in tests/test_ipu_exact.py); agreement of two
+independently-written implementations is the correctness argument for the
+whole numerics stack.
+
+Also provides the infinitely-precise dot product (``exact_dot``) as a
+Fraction, used to *measure* approximation error against Theorem 1.
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.ipu import IPUConfig
+
+_FMT = {
+    "fp16": dict(exp_bits=5, mant=10, bias=15),
+    "bf16": dict(exp_bits=8, mant=7, bias=127),
+    "fp32": dict(exp_bits=8, mant=23, bias=127),
+}
+
+
+def decompose_fp16(x) -> Tuple[int, int, int]:
+    """(sign, unbiased exp, integer magnitude) of a python/np scalar as
+    FP16. value = sign * mag * 2**(exp - 10)."""
+    bits = int(np.float16(x).view(np.uint16))
+    s = 1 - 2 * (bits >> 15)
+    e = (bits >> 10) & 0x1F
+    m = bits & 0x3FF
+    if e == 0x1F:
+        raise ValueError("Inf/NaN not supported by the IPU datapath")
+    if e == 0:
+        return s, -14, m
+    return s, e - 15, m | 0x400
+
+
+def decompose_bf16(x) -> Tuple[int, int, int]:
+    """BF16 fields: value = sign * mag * 2**(exp - 7), mag 8 bits."""
+    import jax.numpy as jnp
+    bits = int(np.asarray(jnp.asarray(float(x), jnp.bfloat16)
+                          ).view(np.uint16))
+    s = 1 - 2 * (bits >> 15)
+    e = (bits >> 7) & 0xFF
+    m = bits & 0x7F
+    if e == 0xFF:
+        raise ValueError("Inf/NaN not supported by the IPU datapath")
+    if e == 0:
+        return s, -126, m
+    return s, e - 127, m | 0x80
+
+
+def decompose_tf32(x) -> Tuple[int, int, int]:
+    """f32 -> TF32 fields (RNE 24->11 bit magnitude).
+    value = sign * mag * 2**(exp - 10)."""
+    bits = int(np.float32(x).view(np.uint32))
+    s = 1 - 2 * (bits >> 31)
+    e = (bits >> 23) & 0xFF
+    m = bits & 0x7FFFFF
+    if e == 0xFF:
+        raise ValueError("Inf/NaN not supported by the IPU datapath")
+    if e == 0:
+        e_u, mag = -126, m
+    else:
+        e_u, mag = e - 127, m | 0x800000
+    q = mag >> 13
+    rb = (mag >> 12) & 1
+    sticky = (mag & 0xFFF) != 0
+    if rb and (sticky or (q & 1)):
+        q += 1
+    if q >= (1 << 11):
+        q >>= 1
+        e_u += 1
+    return s, e_u, q
+
+
+def tf32_value(x) -> Fraction:
+    s, e, m = decompose_tf32(x)
+    return Fraction(s * m) * Fraction(2) ** (e - 10)
+
+
+def fp16_value(x) -> Fraction:
+    s, e, m = decompose_fp16(x)
+    return Fraction(s * m) * Fraction(2) ** (e - 10)
+
+
+def bf16_value(x) -> Fraction:
+    s, e, m = decompose_bf16(x)
+    return Fraction(s * m) * Fraction(2) ** (e - 7)
+
+
+def exact_dot(a: Sequence, b: Sequence, operand: str = "fp16") -> Fraction:
+    """Infinitely precise sum of FP16/BF16/TF32 products."""
+    val = {"fp16": fp16_value, "bf16": bf16_value,
+           "tf32": tf32_value}[operand]
+    return sum((val(x) * val(y) for x, y in zip(a, b)), Fraction(0))
+
+
+def _planes(sign: int, mag: int) -> List[int]:
+    n2 = sign * ((mag >> 7) & 0xF)
+    n1 = sign * ((mag >> 3) & 0xF)
+    n0 = sign * ((mag & 0x7) << 1)
+    return [n0, n1, n2]
+
+
+def _planes_bf16(sign: int, mag: int) -> List[int]:
+    return [sign * (mag & 0xF), sign * ((mag >> 4) & 0xF)]
+
+
+def _shr(v: int, s: int, rounding: str) -> int:
+    if s <= 0:
+        return v << (-s)
+    if rounding == "floor":
+        return v >> s
+    sgn = -1 if v < 0 else 1
+    return sgn * (abs(v) >> s)
+
+
+def round_value_to_fp(sign: int, mag: int, scale_exp: int, fmt: str):
+    """RNE-round ``sign * mag * 2**scale_exp`` to fp16/fp32. Exact ints."""
+    spec = _FMT[fmt]
+    mant, bias = spec["mant"], spec["bias"]
+    mt = mant + 1
+    min_exp, max_exp = 1 - bias, (1 << spec["exp_bits"]) - 2 - bias
+    def out(v):
+        if fmt == "fp16":
+            return np.float16(v)
+        if fmt == "bf16":
+            import jax.numpy as jnp
+            return np.asarray(jnp.asarray(v, jnp.bfloat16))
+        return np.float32(v)
+
+    if mag == 0:
+        return out(0.0)
+    nb = mag.bit_length() - 1
+    e_val = scale_exp + nb
+    keep = nb + 1 - mt + max(min_exp - e_val, 0)
+    if keep > 0:
+        q = mag >> keep
+        rb = (mag >> (keep - 1)) & 1
+        sticky = (mag & ((1 << (keep - 1)) - 1)) != 0
+        if rb and (sticky or (q & 1)):
+            q += 1
+    else:
+        q = mag << (-keep)
+    if q >= (1 << mt):
+        q >>= 1
+        e_val += 1
+    e_q = max(e_val, min_exp)
+    if e_q > max_exp:
+        return out(float("inf") * sign)
+    if q < (1 << mant):
+        e_field = 0
+    else:
+        e_field = e_q + bias
+    sign_bit = 1 if sign < 0 else 0
+    if fmt == "fp16":
+        bits = (sign_bit << 15) | (e_field << 10) | (q & ((1 << 10) - 1))
+        return np.uint16(bits).view(np.float16)
+    if fmt == "bf16":
+        import jax.numpy as jnp
+        bits = (sign_bit << 15) | (e_field << 7) | (q & ((1 << 7) - 1))
+        return np.asarray(np.uint16(bits)).view(jnp.bfloat16)
+    bits = (sign_bit << 31) | (e_field << 23) | (q & ((1 << 23) - 1))
+    return np.uint32(bits).view(np.float32)
+
+
+def approx_fp_ip(a: Sequence, b: Sequence, cfg: IPUConfig):
+    """Oracle for ipu.fp16_inner_product on 1-D inputs. Returns np scalar."""
+    if cfg.operand == "fp16":
+        decomp, planes = decompose_fp16, _planes
+        a = [np.float16(x) for x in a]
+        b = [np.float16(x) for x in b]
+    elif cfg.operand == "tf32":
+        decomp, planes = decompose_tf32, _planes
+        a = [np.float32(x) for x in a]
+        b = [np.float32(x) for x in b]
+    else:
+        decomp, planes = decompose_bf16, _planes_bf16
+        a = [float(x) for x in a]
+        b = [float(x) for x in b]
+    assert len(a) == len(b) and len(a) > 0
+    n = cfg.n
+    pairs = cfg.iteration_pairs()
+    thresh = cfg.mask_threshold
+    acc = 0
+    exp_acc = None
+
+    for g0 in range(0, len(a), n):
+        ga = a[g0:g0 + n]
+        gb = b[g0:g0 + n]
+        dec_a = [decomp(x) for x in ga]
+        dec_b = [decomp(x) for x in gb]
+        c = [da[1] + db[1] for da, db in zip(dec_a, dec_b)]
+        max_c = max(c)
+        shift = [max_c - ck for ck in c]
+        active = [s <= thresh for s in shift]
+        pl_a = [planes(s, m) for s, _, m in dec_a]
+        pl_b = [planes(s, m) for s, _, m in dec_b]
+
+        for (i, j) in pairs:
+            pre = cfg.pre_shift(i, j)
+            if not cfg.multi_cycle:
+                s_tree = 0
+                for k in range(len(ga)):
+                    if not active[k]:
+                        continue
+                    d = pl_a[k][i] * pl_b[k][j]
+                    s_tree += _shr(d << (cfg.w - 9), shift[k], cfg.rounding)
+                acc, exp_acc = _acc_update(acc, exp_acc, s_tree, max_c, pre,
+                                           0, cfg)
+            else:
+                for cyc in range(cfg.num_cycles_static):
+                    s_tree = 0
+                    for k in range(len(ga)):
+                        if not active[k] or shift[k] // cfg.sp != cyc:
+                            continue
+                        d = pl_a[k][i] * pl_b[k][j]
+                        local = shift[k] - cyc * cfg.sp
+                        s_tree += _shr(d << (cfg.w - 9), local, cfg.rounding)
+                    acc, exp_acc = _acc_update(acc, exp_acc, s_tree, max_c,
+                                               pre, cyc * cfg.sp, cfg)
+
+    if exp_acc is None or acc == 0:
+        exp_acc = 0
+    sign = -1 if acc < 0 else 1
+    return round_value_to_fp(sign, abs(acc), exp_acc - 30, cfg.accum)
+
+
+def _acc_update(acc: int, exp_acc, s_tree: int, max_c: int, pre: int,
+                extra: int, cfg: IPUConfig):
+    if exp_acc is None:
+        exp_acc = max_c
+    if max_c > exp_acc:
+        acc = _shr(acc, max_c - exp_acc, cfg.rounding)
+        exp_acc = max_c
+    inc_shift = pre + extra + (exp_acc - max_c)
+    wide = s_tree << (33 - cfg.w)
+    acc += _shr(wide, inc_shift, cfg.rounding) if inc_shift >= 0 else 0
+    return acc, exp_acc
+
+
+def int_dot(a: Iterable[int], b: Iterable[int]) -> int:
+    return int(sum(int(x) * int(y) for x, y in zip(a, b)))

@@ -1,0 +1,236 @@
+"""Two-limb int32 signed fixed-point arithmetic (base 2**24).
+
+The IPU accumulator register is ``33 + t + l`` bits wide (paper §2.2,
+Fig. 1) — wider than int32. JAX disables int64 by default and Pallas TPU
+kernels prefer 32-bit lanes, so we carry the accumulator as two int32
+limbs::
+
+    V = hi * 2**24 + lo,   lo in [0, 2**24),   hi signed
+
+which represents |V| < 2**54 exactly — enough for the 33+t+l <= 48-bit
+register of any practical IPU configuration. All ops are branchless,
+elementwise, jit/vmap-safe, and usable inside Pallas kernel bodies.
+
+Shift semantics: the paper's datapath is sign-magnitude ("5b x 5b sign
+multipliers"), so right shifts truncate toward zero (shift the magnitude,
+reapply the sign). ``shr_floor`` implements the two's-complement
+alternative for comparison (see DESIGN.md "Shift semantics").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LIMB_BITS = 24
+LIMB_MASK = (1 << LIMB_BITS) - 1
+
+
+class FX(NamedTuple):
+    """Two-limb fixed-point value. hi*2**24 + lo with lo in [0, 2**24)."""
+
+    hi: jax.Array
+    lo: jax.Array
+
+
+def canon(hi: jax.Array, lo: jax.Array) -> FX:
+    """Normalize so lo is in [0, 2**24). Arithmetic >> gives a floor carry,
+    which is correct for negative lo as well."""
+    carry = lo >> LIMB_BITS
+    return FX((hi + carry).astype(jnp.int32), (lo & LIMB_MASK).astype(jnp.int32))
+
+
+def zero_like(x: jax.Array) -> FX:
+    z = jnp.zeros_like(x, dtype=jnp.int32)
+    return FX(z, z)
+
+
+def from_int32(x: jax.Array) -> FX:
+    return canon(jnp.zeros_like(x, dtype=jnp.int32), x.astype(jnp.int32))
+
+
+def add(a: FX, b: FX) -> FX:
+    return canon(a.hi + b.hi, a.lo + b.lo)
+
+
+def neg(a: FX) -> FX:
+    return canon(-a.hi, -a.lo)
+
+
+def is_neg(a: FX) -> jax.Array:
+    return a.hi < 0
+
+
+def is_zero(a: FX) -> jax.Array:
+    return (a.hi == 0) & (a.lo == 0)
+
+
+def abs_(a: FX) -> Tuple[jax.Array, FX]:
+    """Return (sign in {-1,+1}, |a|). sign(0) = +1."""
+    n = is_neg(a)
+    sign = jnp.where(n, -1, 1).astype(jnp.int32)
+    na = neg(a)
+    return sign, FX(jnp.where(n, na.hi, a.hi), jnp.where(n, na.lo, a.lo))
+
+
+def mul_sign(sign: jax.Array, a: FX) -> FX:
+    na = neg(a)
+    neg_sel = sign < 0
+    return FX(jnp.where(neg_sel, na.hi, a.hi), jnp.where(neg_sel, na.lo, a.lo))
+
+
+def _shr_unsigned(a: FX, s: jax.Array) -> FX:
+    """Logical right shift of a NON-NEGATIVE two-limb value by a per-element
+    dynamic amount s >= 0 (values >= 48 yield 0). All lane shifts <= 31."""
+    s = s.astype(jnp.int32)
+    # --- branch A: s in [0, 24) ---
+    sa = jnp.clip(s, 0, LIMB_BITS - 1)
+    hi_a = a.hi >> sa
+    cross = (a.hi & ((1 << sa) - 1)) << (LIMB_BITS - sa)  # < 2**24, no overflow
+    lo_a = cross | (a.lo >> sa)
+    # --- branch B: s in [24, 48) ---
+    sb = jnp.clip(s - LIMB_BITS, 0, LIMB_BITS - 1)
+    lo_b = a.hi >> sb
+    # --- select ---
+    ge48 = s >= 2 * LIMB_BITS
+    in_b = (s >= LIMB_BITS) & ~ge48
+    hi = jnp.where(ge48 | in_b, 0, hi_a)
+    lo = jnp.where(ge48, 0, jnp.where(in_b, lo_b, lo_a))
+    return FX(hi.astype(jnp.int32), lo.astype(jnp.int32))
+
+
+def _dropped_nonzero(mag: FX, s: jax.Array) -> jax.Array:
+    """True where shifting non-negative mag right by s drops a nonzero bit,
+    i.e. any of bits [0, s) is set."""
+    s = s.astype(jnp.int32)
+    sa = jnp.clip(s, 0, LIMB_BITS - 1)
+    low_a = (mag.lo & ((1 << sa) - 1)) != 0
+    sb = jnp.clip(s - LIMB_BITS, 0, LIMB_BITS - 1)
+    low_b = ((mag.hi & ((1 << sb) - 1)) != 0) | (mag.lo != 0)
+    ge48 = s >= 2 * LIMB_BITS
+    any_bits = (mag.hi != 0) | (mag.lo != 0)
+    return jnp.where(ge48, any_bits, jnp.where(s >= LIMB_BITS, low_b, low_a))
+
+
+def shr_trunc(a: FX, s: jax.Array) -> FX:
+    """Right shift truncating toward zero (sign-magnitude datapath)."""
+    sign, mag = abs_(a)
+    return mul_sign(sign, _shr_unsigned(mag, s))
+
+
+def shr_floor(a: FX, s: jax.Array) -> FX:
+    """Arithmetic right shift (floor) — two's-complement datapath variant."""
+    sign, mag = abs_(a)
+    shifted = _shr_unsigned(mag, s)
+    dropped = _dropped_nonzero(mag, s)
+    res = mul_sign(sign, shifted)
+    # floor(-m / 2**s) = -(m >> s) - 1 when bits were dropped
+    adj = jnp.where((sign < 0) & dropped, 1, 0).astype(jnp.int32)
+    return canon(res.hi, res.lo - adj)
+
+
+def shl(a: FX, s: int) -> FX:
+    """Static left shift by s in [0, 24). Caller guarantees no overflow of
+    the 2**54 range. (The IPU needs at most 33 - w <= 21.)"""
+    if s == 0:
+        return a
+    if not 0 < s < LIMB_BITS:
+        raise ValueError("static shl must be in [0, 24); IPU needs <= 21")
+    hi = (a.hi << s) | (a.lo >> (LIMB_BITS - s))
+    lo = (a.lo << s) & LIMB_MASK
+    return FX(hi.astype(jnp.int32), lo.astype(jnp.int32))
+
+
+def shl_dyn(a: FX, s: jax.Array, max_s: int = LIMB_BITS - 1) -> FX:
+    """Dynamic left shift by per-element s in [0, max_s], max_s < 24."""
+    s = jnp.clip(s.astype(jnp.int32), 0, max_s)
+    hi = (a.hi << s) | jnp.where(s == 0, 0, a.lo >> (LIMB_BITS - s))
+    lo = (a.lo << s) & LIMB_MASK
+    return FX(hi.astype(jnp.int32), lo.astype(jnp.int32))
+
+
+def to_float32(a: FX) -> jax.Array:
+    """Value as f32 — EXACT only when |V| <~ 2**24; for diagnostics."""
+    return a.hi.astype(jnp.float32) * float(1 << LIMB_BITS) + a.lo.astype(
+        jnp.float32
+    )
+
+
+def select(pred: jax.Array, t: FX, f: FX) -> FX:
+    return FX(jnp.where(pred, t.hi, f.hi), jnp.where(pred, t.lo, f.lo))
+
+
+def msb_index(mag: FX) -> jax.Array:
+    """floor(log2(V)) of a non-negative two-limb value in canonical form.
+
+    Exact: each limb < 2**24 is exactly representable in f32. Returns 0 for
+    V == 0 (caller must mask)."""
+    _, e_hi = jnp.frexp(mag.hi.astype(jnp.float32))
+    _, e_lo = jnp.frexp(mag.lo.astype(jnp.float32))
+    return jnp.where(
+        mag.hi > 0, LIMB_BITS + e_hi.astype(jnp.int32) - 1,
+        jnp.maximum(e_lo.astype(jnp.int32) - 1, 0),
+    ).astype(jnp.int32)
+
+
+def _bit_at(mag: FX, pos: jax.Array) -> jax.Array:
+    """Bit ``pos`` (>=0, <48) of a non-negative two-limb value, as bool."""
+    pos = pos.astype(jnp.int32)
+    in_hi = pos >= LIMB_BITS
+    p_lo = jnp.clip(pos, 0, LIMB_BITS - 1)
+    p_hi = jnp.clip(pos - LIMB_BITS, 0, LIMB_BITS - 1)
+    b_lo = (mag.lo >> p_lo) & 1
+    b_hi = (mag.hi >> p_hi) & 1
+    return jnp.where(in_hi, b_hi, b_lo).astype(jnp.bool_)
+
+
+def round_to_fp(acc: FX, exp: jax.Array, fmt) -> jax.Array:
+    """Round the non-normalized accumulator to an IEEE format, RNE.
+
+    Accumulator semantics (paper §2.2): value = acc * 2**(exp - 30) —
+    sign + (3+t+l) integer bits + 30 fraction bits w.r.t. ``exp``.
+
+    Implements normalize -> round-to-nearest-even -> pack, handling
+    subnormal outputs and overflow-to-inf, entirely in int32 ops.
+    """
+    from repro.core import fp16 as fp16mod  # local import to avoid cycle
+
+    sign, mag = abs_(acc)
+    zero = is_zero(mag)
+    nb = msb_index(mag)  # MSB position; value in [2**nb, 2**(nb+1))
+    # Unbiased exponent of the value: value = M * 2**(exp-30)
+    e_val = exp - 30 + nb
+    mt = fmt.mag_bits  # target magnitude bits incl hidden
+    # Drop ``keep`` bits so the kept magnitude has mt bits.
+    keep = nb + 1 - mt
+    # Subnormal squeeze: if e_val < min_exp we must drop extra bits.
+    extra = jnp.maximum(fmt.min_exp - e_val, 0)
+    keep = keep + extra
+    keep_pos = jnp.maximum(keep, 0)
+
+    q = _shr_unsigned(mag, keep_pos)
+    rb_pos = jnp.maximum(keep_pos - 1, 0)
+    rb = _bit_at(mag, rb_pos) & (keep_pos > 0)
+    sticky = _dropped_nonzero(mag, rb_pos)
+    q_lsb = (q.lo & 1).astype(jnp.bool_)
+    round_up = rb & (sticky | q_lsb)
+    q = select(round_up, add(q, from_int32(jnp.ones_like(q.lo))), q)
+    # q now fits 25 bits worst case; flatten to a plain int32.
+    qi = q.hi * (1 << LIMB_BITS) + q.lo
+    # keep < 0: value has fewer bits than the target mantissa — left-pad so
+    # the hidden bit lands at position mt-1 (exact, no rounding happened).
+    pad = jnp.clip(-keep, 0, mt - 1)
+    qi = jnp.where(keep < 0, qi << pad, qi)
+    # Rounding carry: q == 2**mt -> halve and bump exponent.
+    carried = qi >= (1 << mt)
+    qi = jnp.where(carried, qi >> 1, qi)
+    e_q = jnp.where(carried, e_val + 1, e_val)
+    e_q = jnp.maximum(e_q, fmt.min_exp)  # subnormal exponent pin
+    overflow = e_q > fmt.max_exp
+    out = fp16mod.compose(sign, e_q, qi.astype(jnp.int32), fmt)
+    inf = fp16mod.make_inf(sign, fmt)
+    out = jnp.where(overflow, inf, out)
+    zero_val = fp16mod.compose(jnp.ones_like(sign), jnp.full_like(e_q, fmt.min_exp),
+                               jnp.zeros_like(qi), fmt)
+    return jnp.where(zero, zero_val, out)

@@ -1,0 +1,149 @@
+"""IEEE-754 binary16/binary32 field codecs as pure integer JAX ops.
+
+The IPU datapath (paper §2.2, Appendix A.2) operates on the *signed
+magnitude* and *unbiased exponent* of FP operands:
+
+  value(a) = sign * mag * 2**(exp - MANT_BITS)
+
+where ``mag`` is the integer magnitude including the hidden bit
+(``1.mantissa`` for normals, ``0.mantissa`` for subnormals) and ``exp`` is
+the unbiased exponent with the subnormal adjustment ``exp = 1 - bias``
+(paper Fig. 12 note: "exp(x) = x's exponent - bias + 1 for subnormal").
+
+All functions are jit/vmap-safe and use only int32 arithmetic, so they can
+also be inlined into Pallas kernel bodies.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FPFormat(NamedTuple):
+    """Static description of an IEEE-like binary FP format."""
+
+    name: str
+    exp_bits: int
+    mant_bits: int  # explicit mantissa bits (no hidden bit)
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def mag_bits(self) -> int:
+        # magnitude incl. hidden bit
+        return self.mant_bits + 1
+
+    @property
+    def min_exp(self) -> int:
+        # unbiased exponent of subnormals and of the smallest normal
+        return 1 - self.bias
+
+    @property
+    def max_exp(self) -> int:
+        return (1 << self.exp_bits) - 2 - self.bias
+
+
+FP16 = FPFormat("fp16", 5, 10)
+BF16 = FPFormat("bf16", 8, 7)
+FP32 = FPFormat("fp32", 8, 23)
+# Nvidia TF32: 8-bit exponent, 10-bit mantissa (paper Appendix B).
+TF32 = FPFormat("tf32", 8, 10)
+
+FORMATS = {f.name: f for f in (FP16, BF16, FP32, TF32)}
+
+_BITCAST_DTYPE = {16: jnp.uint16, 32: jnp.uint32}
+
+
+def _storage_bits(fmt: FPFormat) -> int:
+    return 16 if fmt.exp_bits + fmt.mant_bits + 1 <= 16 else 32
+
+
+def _native_dtype(fmt: FPFormat):
+    return {"fp16": jnp.float16, "bf16": jnp.bfloat16, "fp32": jnp.float32}[
+        fmt.name
+    ]
+
+
+def decompose(x: jax.Array, fmt: FPFormat = FP16) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Split an FP array into (sign, unbiased exp, integer magnitude).
+
+    Returns int32 arrays with ``value = sign * mag * 2**(exp - fmt.mant_bits)``.
+    sign is +-1 (sign of +-0 is +1 for magnitude 0; downstream arithmetic is
+    insensitive to the sign of a zero magnitude). Inf/NaN are NOT handled by
+    the IPU datapath (paper Fig. 12 assumes "neither INF nor NaN"): use
+    :func:`is_finite` to validate inputs first.
+    """
+    if fmt is TF32:
+        raise ValueError("TF32 has no native storage here; decompose from fp32")
+    nbits = _storage_bits(fmt)
+    bits = jax.lax.bitcast_convert_type(x, _BITCAST_DTYPE[nbits]).astype(jnp.int32)
+    sign_bit = (bits >> (nbits - 1)) & 1
+    sign = (1 - 2 * sign_bit).astype(jnp.int32)
+    e = (bits >> fmt.mant_bits) & ((1 << fmt.exp_bits) - 1)
+    m = bits & ((1 << fmt.mant_bits) - 1)
+    is_sub = e == 0
+    mag = jnp.where(is_sub, m, m | (1 << fmt.mant_bits)).astype(jnp.int32)
+    exp = jnp.where(is_sub, fmt.min_exp, e - fmt.bias).astype(jnp.int32)
+    return sign, exp, mag
+
+
+def compose(sign: jax.Array, exp: jax.Array, mag: jax.Array, fmt: FPFormat = FP16) -> jax.Array:
+    """Inverse of :func:`decompose` for in-range (sign, exp, mag) triples.
+
+    Assumes canonical fields: for normals ``mag`` has the hidden bit set and
+    ``exp`` in [min_exp, max_exp]; for subnormals ``exp == min_exp`` and
+    ``mag < 2**mant_bits``. Exact (no rounding).
+    """
+    nbits = _storage_bits(fmt)
+    is_sub = (mag < (1 << fmt.mant_bits)) | (exp < fmt.min_exp)
+    e_field = jnp.where(is_sub, 0, exp + fmt.bias).astype(jnp.int32)
+    m_field = (mag & ((1 << fmt.mant_bits) - 1)).astype(jnp.int32)
+    sign_bit = jnp.where(sign < 0, 1, 0).astype(jnp.int32)
+    bits = (sign_bit << (nbits - 1)) | (e_field << fmt.mant_bits) | m_field
+    return jax.lax.bitcast_convert_type(
+        bits.astype(_BITCAST_DTYPE[nbits]), _native_dtype(fmt)
+    )
+
+
+def make_inf(sign: jax.Array, fmt: FPFormat = FP16) -> jax.Array:
+    """+-Inf with the given sign (+1/-1), as the format's native dtype."""
+    nbits = _storage_bits(fmt)
+    sign_bit = jnp.where(sign < 0, 1, 0).astype(jnp.int32)
+    bits = (sign_bit << (nbits - 1)) | (((1 << fmt.exp_bits) - 1) << fmt.mant_bits)
+    return jax.lax.bitcast_convert_type(
+        bits.astype(_BITCAST_DTYPE[nbits]), _native_dtype(fmt)
+    )
+
+
+def is_finite(x: jax.Array, fmt: FPFormat = FP16) -> jax.Array:
+    nbits = _storage_bits(fmt)
+    bits = jax.lax.bitcast_convert_type(x, _BITCAST_DTYPE[nbits]).astype(jnp.int32)
+    e = (bits >> fmt.mant_bits) & ((1 << fmt.exp_bits) - 1)
+    return e != ((1 << fmt.exp_bits) - 1)
+
+
+def product_exponent_range(fmt: FPFormat = FP16) -> Tuple[int, int]:
+    """Range of the exponent of a product of two numbers of ``fmt``.
+
+    For FP16: [-28, 30] (paper §2.2), hence worst-case alignment 58.
+    """
+    return 2 * fmt.min_exp, 2 * fmt.max_exp
+
+
+def max_alignment(fmt: FPFormat = FP16) -> int:
+    lo, hi = product_exponent_range(fmt)
+    return hi - lo
+
+
+def floor_log2(x: jax.Array) -> jax.Array:
+    """floor(log2(x)) for int32 x in [1, 2**24). Exact via f32 frexp.
+
+    Every int below 2**24 is exactly representable in f32, so frexp of the
+    cast is exact and the returned exponent is floor(log2(x)) + 1.
+    """
+    _, e = jnp.frexp(x.astype(jnp.float32))
+    return (e - 1).astype(jnp.int32)

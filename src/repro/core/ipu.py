@@ -1,0 +1,382 @@
+"""Bit-exact emulation of the mixed-precision inner-product unit (IPU).
+
+Implements the paper's approximate FP-IP operation (Fig. 2) and the
+multi-cycle MC-IPU variant (§3.2) as vectorized, jit/vmap-safe JAX integer
+arithmetic:
+
+  * FP16 operands are decomposed into 3 signed 5-bit nibble planes
+    (``nibble.fp16_planes``); the 9 nibble iterations run as tensorized
+    integer ops (the TPU-native realization of the paper's temporal
+    decomposition — see DESIGN.md).
+  * Per-iteration alignment: each 9-bit nibble product is left-shifted by
+    ``w - 9``, right-shifted by its EHU alignment amount with truncation,
+    and summed in a ``w``-bit adder tree (w = "IPU precision").
+  * The accumulator is the paper's non-normalized (33+t+l)-bit register,
+    carried as a two-limb int32 fixed-point value with 30 fraction bits
+    w.r.t. the running exponent; swap-and-shift on exponent increase.
+  * MC-IPU(w): alignments beyond the safe precision ``sp = w - 9`` are
+    served in multiple cycles; partition k's products are locally shifted
+    by ``shift - k*sp`` (exact, Proposition 1) and the adder output takes
+    the extra ``k*sp`` shift into the accumulator.
+
+INT mode (§2.1) runs the same datapath with zero alignment and exact
+results for INT4/8/12 operands.
+
+Numerical ranges are chosen so everything is exact in int32 lanes:
+|nibble product| <= 225 < 2**8, adder sums < 2**31 for n <= 16, w <= 28,
+and the accumulator < 2**48 in two int32 limbs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ehu, fixedpoint as fx, fp16 as fpmod, nibble
+
+NEG_INF_EXP = ehu.NEG_INF_EXP
+
+
+@dataclasses.dataclass(frozen=True)
+class IPUConfig:
+    """Static configuration of one IPU / MC-IPU.
+
+    Attributes:
+      n: number of IPU inputs (products per group); paper uses 8 or 16.
+      w: IPU precision — adder-tree width and max local alignment shift.
+      accum: accumulator target format, 'fp16' or 'fp32'.
+      sw_precision: software precision P (EHU stage-4 mask threshold).
+        Defaults to the paper's accuracy-preserving minima: 16 for FP16
+        accumulation, 28 for FP32 accumulation (§3.1).
+      multi_cycle: MC-IPU(w) mode — serve alignments up to P over
+        ceil((P+1)/sp) cycles instead of truncating at w.
+      rounding: 'trunc' (sign-magnitude, paper datapath) or 'floor'
+        (two's-complement arithmetic shift) for alignment truncation.
+      iter_order: 'asc' iterates nibble pairs (i,j) in Fig.-2 order
+        (ascending significance); 'desc' most-significant-first.
+      acc_l: l = ceil(log2(max accumulation depth d)); register is
+        33 + ceil(log2 n) + l bits and must stay < 54 for two limbs.
+    """
+
+    n: int = 16
+    w: int = 16
+    accum: str = "fp32"
+    sw_precision: Optional[int] = None
+    multi_cycle: bool = False
+    rounding: str = "trunc"
+    iter_order: str = "asc"
+    acc_l: int = 10
+    # operand format (paper Appendix B): 'fp16' (3 nibble planes, 9
+    # iterations); 'bf16' (8-bit exponents, 2 planes, 4 iterations);
+    # 'tf32' (8-bit exponents with the FP16 11-bit magnitude -> the FP16
+    # plane path on an 8-bit EHU; inputs are f32 RNE-rounded to TF32).
+    operand: str = "fp16"
+
+    def __post_init__(self):
+        if self.w < 10:
+            raise ValueError("IPU precision w must be >= 10 (sp = w-9 >= 1)")
+        if self.accum not in ("fp16", "fp32", "bf16"):
+            raise ValueError(f"bad accum {self.accum}")
+        if self.operand not in ("fp16", "bf16", "tf32"):
+            raise ValueError(f"bad operand {self.operand}")
+        if self.accum == "bf16" and self.sw_precision is None:
+            raise ValueError("accum='bf16' needs an explicit sw_precision")
+        if self.rounding not in ("trunc", "floor"):
+            raise ValueError(f"bad rounding {self.rounding}")
+        # int32 adder-tree overflow guard: n * 225 * 2**(w-9) < 2**31
+        if self.n * 225 * (1 << (self.w - 9)) >= (1 << 31):
+            raise ValueError(f"n={self.n}, w={self.w} overflows int32 adder")
+        t = math.ceil(math.log2(self.n))
+        if 33 + t + self.acc_l >= 54:
+            raise ValueError("accumulator exceeds two-limb range")
+
+    @property
+    def precision(self) -> int:
+        """Effective software precision P."""
+        if self.sw_precision is not None:
+            return self.sw_precision
+        return 16 if self.accum == "fp16" else 28
+
+    @property
+    def sp(self) -> int:
+        """Safe precision: max exact local alignment (Proposition 1)."""
+        return self.w - 9
+
+    @property
+    def mask_threshold(self) -> int:
+        """Alignment beyond this contributes zero. Plain IPU cannot shift
+        past its adder width; MC-IPU serves the full software precision."""
+        return self.precision if self.multi_cycle else min(self.w, self.precision)
+
+    @property
+    def num_cycles_static(self) -> int:
+        """Static upper bound on MC cycles per nibble iteration."""
+        if not self.multi_cycle:
+            return 1
+        return self.mask_threshold // self.sp + 1
+
+    @property
+    def accum_format(self) -> fpmod.FPFormat:
+        return {"fp16": fpmod.FP16, "fp32": fpmod.FP32,
+                "bf16": fpmod.BF16}[self.accum]
+
+    @property
+    def operand_format(self) -> fpmod.FPFormat:
+        return {"fp16": fpmod.FP16, "bf16": fpmod.BF16,
+                "tf32": fpmod.TF32}[self.operand]
+
+    @property
+    def num_planes(self) -> int:
+        return 2 if self.operand == "bf16" else 3
+
+    def plane_fn(self):
+        return (nibble.bf16_planes if self.operand == "bf16"
+                else nibble.fp16_planes)
+
+    def pre_shift(self, i, j):
+        """Accumulator pre-shift 4*(2(K-1) - i - j) for plane pair (i,j);
+        works on traced ints inside fori loops."""
+        return 4 * (2 * (self.num_planes - 1) - i - j)
+
+    def iteration_pairs(self) -> List[Tuple[int, int]]:
+        k = self.num_planes
+        pairs = [(i, j) for i in range(k) for j in range(k)]
+        if self.iter_order == "desc":
+            pairs = sorted(pairs, key=lambda p: -(p[0] + p[1]))
+        return pairs
+
+
+def _shr(v: fx.FX, s: jax.Array, rounding: str) -> fx.FX:
+    return fx.shr_trunc(v, s) if rounding == "trunc" else fx.shr_floor(v, s)
+
+
+def _shr_i32(d: jax.Array, s: jax.Array, rounding: str) -> jax.Array:
+    """Right shift int32 products with the configured truncation.
+
+    |d| < 2**31; shifts >= 31 are clamped (result 0 / -1 handled below)."""
+    s = jnp.minimum(s.astype(jnp.int32), 31)
+    if rounding == "trunc":
+        mag = jnp.abs(d)
+        return jnp.sign(d) * (mag >> s)
+    return d >> s  # arithmetic shift == floor
+
+
+def accumulate(acc: fx.FX, exp_acc: jax.Array, s_tree: jax.Array,
+               max_c: jax.Array, pre_shift, extra_shift: jax.Array,
+               cfg: IPUConfig) -> Tuple[fx.FX, jax.Array]:
+    """One accumulator update (paper §2.2 right-hand side of Fig. 1).
+
+    ``s_tree`` is the adder-tree output (int32, w + log2 n bits);
+    ``pre_shift`` the static nibble-significance shift 4*(4-i-j);
+    ``extra_shift`` the MC-IPU per-cycle k*sp (0 for plain IPU).
+
+    The hardware concatenates (33 - w) zero bits then right-shifts by
+    pre_shift + extra_shift + (exp_acc' - max_c); we apply the equivalent
+    net shift to avoid widening past two limbs.
+    """
+    swap = max_c > exp_acc
+    exp_new = jnp.maximum(exp_acc, max_c)
+    acc = fx.select(swap, _shr(acc, jnp.minimum(exp_new - exp_acc, 63),
+                               cfg.rounding), acc)
+    inc_shift = pre_shift + extra_shift + (exp_new - max_c)
+    net = inc_shift - (33 - cfg.w)  # >0: right shift; <0: exact left shift
+    # Left shifts are exact; 23 is the static FX-safe bound (|s_tree| <
+    # 2**30 -> < 2**53). Faithful mode needs at most 33-w <= 23; the fused
+    # kernel mode can need (33-w)+1 via its negative pre_shift.
+    v = fx.from_int32(s_tree)
+    v = fx.shl_dyn(v, jnp.clip(-net, 0, 23), max_s=23)
+    v = _shr(v, jnp.clip(net, 0, 1 << 20), cfg.rounding)
+    return fx.add(acc, v), exp_new
+
+
+def _prepare_groups(a: jax.Array, b: jax.Array, cfg: "IPUConfig"):
+    """Decompose, pad to a multiple of n, reshape to (..., G, n) and move
+    the G axis to the front for fori_loop indexing."""
+    n = cfg.n
+    dt = {"fp16": jnp.float16, "bf16": jnp.bfloat16,
+          "tf32": jnp.float32}[cfg.operand]
+    a = jnp.asarray(a, dt)
+    b = jnp.asarray(b, dt)
+    a, b = jnp.broadcast_arrays(a, b)
+    if a.ndim == 0 or a.shape[-1] == 0:
+        raise ValueError("inputs must have a non-empty last axis")
+    length = a.shape[-1]
+    g = -(-length // n)
+    pad = g * n - length
+    if pad:
+        pw = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+        a = jnp.pad(a, pw)
+        b = jnp.pad(b, pw)
+    valid = (jnp.arange(g * n) < length).reshape((1,) * (a.ndim - 1) + (g, n))
+    valid = jnp.broadcast_to(valid, a.shape[:-1] + (g, n))
+
+    if cfg.operand == "tf32":
+        sa, ea, ma = _decompose_tf32(a)
+        sb, eb, mb = _decompose_tf32(b)
+    else:
+        fmt = cfg.operand_format
+        sa, ea, ma = fpmod.decompose(a, fmt)
+        sb, eb, mb = fpmod.decompose(b, fmt)
+    pa = cfg.plane_fn()(sa, ma)  # num_planes x (..., G*n)
+    pb = cfg.plane_fn()(sb, mb)
+
+    def to_front(x):
+        x = x.reshape(x.shape[:-1] + (g, n))
+        return jnp.moveaxis(x, -2, 0)  # (G, ..., n)
+
+    pa = [to_front(p) for p in pa]
+    pb = [to_front(p) for p in pb]
+    ea = to_front(ea)
+    eb = to_front(eb)
+    valid = jnp.moveaxis(valid, -2, 0)
+    return pa, pb, ea, eb, valid, g
+
+
+def _decompose_tf32(x: jax.Array):
+    """f32 -> TF32 fields: RNE-round the 24-bit magnitude to 11 bits.
+    Returns (sign, unbiased exp, 11-bit magnitude): value = s*m*2**(e-10)
+    after rounding — the TF32 input quantization TensorCores apply."""
+    s, e, m = fpmod.decompose(x, fpmod.FP32)
+    keep = 13  # 24 -> 11 bits
+    q = m >> keep
+    rb = (m >> (keep - 1)) & 1
+    sticky = (m & ((1 << (keep - 1)) - 1)) != 0
+    q = q + jnp.where((rb == 1) & (sticky | ((q & 1) == 1)), 1, 0)
+    carry = q >= (1 << 11)
+    q = jnp.where(carry, q >> 1, q)
+    e = jnp.where(carry, e + 1, e)
+    # subnormal f32 inputs keep mag < 2**10 (already representable)
+    return s, e, q.astype(jnp.int32)
+
+
+def fp16_inner_product_raw(a: jax.Array, b: jax.Array, cfg: IPUConfig
+                           ) -> Tuple[fx.FX, jax.Array]:
+    """Approximate FP-IP over the last axis; returns the non-normalized
+    accumulator (two-limb FX, exponent) before output rounding.
+
+    a, b: float16 arrays broadcastable to a common shape (..., N). The
+    reduction runs in N/n groups of the IPU width n, 9 nibble iterations
+    per group, exactly as the hardware schedules it.
+    """
+    pa, pb, ea, eb, valid, g = _prepare_groups(a, b, cfg)
+    batch_shape = ea.shape[1:-1]
+
+    # EHU (stages 1-4), shared across the 9 nibble iterations per group.
+    out = ehu.run(ea, eb, cfg.mask_threshold, valid=valid, axis=-1)
+    max_c, shift, active = out.max_exp, out.shift, out.active  # (G,...), (G,...,n)
+
+    pairs = cfg.iteration_pairs()
+    # Iteration order as lookup tables so the nibble loop can be a small
+    # lax.fori_loop body (XLA-CPU compiles unrolled 9x/90x bodies in
+    # minutes; dynamic indexing keeps the module tiny).
+    it_i = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    it_j = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    pa_st = jnp.stack(pa)  # (3, G, ..., n)
+    pb_st = jnp.stack(pb)
+
+    if cfg.multi_cycle:
+        cyc, local = ehu.service_schedule(shift, active, cfg.sp)
+
+    def group_body(gi, carry):
+        acc_hi, acc_lo, exp_acc = carry
+        mc = jax.lax.dynamic_index_in_dim(max_c, gi, 0, keepdims=False)
+        act = jax.lax.dynamic_index_in_dim(active, gi, 0, keepdims=False)
+        pa_g = jax.lax.dynamic_index_in_dim(pa_st, gi, 1, keepdims=False)
+        pb_g = jax.lax.dynamic_index_in_dim(pb_st, gi, 1, keepdims=False)
+        if cfg.multi_cycle:
+            cy_g = jax.lax.dynamic_index_in_dim(cyc, gi, 0, keepdims=False)
+            lo_g = jax.lax.dynamic_index_in_dim(local, gi, 0, keepdims=False)
+        else:
+            sh_g = jax.lax.dynamic_index_in_dim(shift, gi, 0, keepdims=False)
+
+        def iter_body(it, carry2):
+            acc_hi2, acc_lo2, exp2 = carry2
+            acc2 = fx.FX(acc_hi2, acc_lo2)
+            i = it_i[it]
+            j = it_j[it]
+            na = jax.lax.dynamic_index_in_dim(pa_g, i, 0, keepdims=False)
+            nb = jax.lax.dynamic_index_in_dim(pb_g, j, 0, keepdims=False)
+            d = na * nb  # |d| <= 225
+            dw = d << (cfg.w - 9)
+            pre = cfg.pre_shift(i, j)  # 4*(2(K-1)-i-j), dynamic
+
+            if not cfg.multi_cycle:
+                aligned = _shr_i32(dw, sh_g, cfg.rounding)
+                aligned = jnp.where(act, aligned, 0)
+                s_tree = jnp.sum(aligned, axis=-1)
+                acc2, exp2 = accumulate(acc2, exp2, s_tree, mc, pre,
+                                         jnp.zeros_like(mc), cfg)
+                return acc2.hi, acc2.lo, exp2
+
+            def cycle_body(k, carry3):
+                acc_hi3, acc_lo3, exp3 = carry3
+                acc3 = fx.FX(acc_hi3, acc_lo3)
+                sel = cy_g == k
+                aligned = _shr_i32(dw, lo_g, cfg.rounding)
+                aligned = jnp.where(sel, aligned, 0)
+                s_tree = jnp.sum(aligned, axis=-1)
+                acc3, exp3 = accumulate(acc3, exp3, s_tree, mc, pre,
+                                         jnp.full_like(mc, k * cfg.sp), cfg)
+                return acc3.hi, acc3.lo, exp3
+
+            return jax.lax.fori_loop(0, cfg.num_cycles_static, cycle_body,
+                                     (acc2.hi, acc2.lo, exp2))
+
+        return jax.lax.fori_loop(0, len(pairs), iter_body,
+                                 (acc_hi, acc_lo, exp_acc))
+
+    z = jnp.zeros(batch_shape, jnp.int32)
+    exp0 = jnp.full(batch_shape, NEG_INF_EXP, jnp.int32)
+    hi, lo, exp_acc = jax.lax.fori_loop(0, g, group_body, (z, z, exp0))
+    return fx.FX(hi, lo), exp_acc
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_fp_ip(cfg: IPUConfig):
+    def f(a, b):
+        acc, exp_acc = fp16_inner_product_raw(a, b, cfg)
+        return fx.round_to_fp(acc, exp_acc, cfg.accum_format)
+    return jax.jit(f)
+
+
+def fp16_inner_product(a: jax.Array, b: jax.Array,
+                       cfg: IPUConfig = IPUConfig()) -> jax.Array:
+    """Approximate FP-IP (paper Fig. 2) rounded to the accumulator format.
+
+    Returns float16 for cfg.accum='fp16', float32 for 'fp32'. Jitted and
+    cached per config so repeated same-shape calls are cheap.
+    """
+    return _jitted_fp_ip(cfg)(a, b)
+
+
+def int_inner_product(a: jax.Array, b: jax.Array, a_bits: int, b_bits: int,
+                      cfg: IPUConfig = IPUConfig()) -> jax.Array:
+    """INT-mode inner product over the last axis (paper §2.1). Exact.
+
+    a, b: int32 arrays of two's-complement values fitting a_bits/b_bits.
+    Nibble-decomposed and accumulated exactly as the hardware (result is
+    bit-identical to the wide integer dot product). Returns int32.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    a, b = jnp.broadcast_arrays(a, b)
+    pa = nibble.int_planes(a, a_bits)
+    pb = nibble.int_planes(b, b_bits)
+    acc = fx.zero_like(a[..., 0])
+    for i, p in enumerate(pa):
+        for j, q in enumerate(pb):
+            d = p * q
+            s = jnp.sum(d, axis=-1)
+            acc = fx.add(acc, fx.shl(fx.from_int32(s), 4 * (i + j)))
+    out = acc.hi * (1 << fx.LIMB_BITS) + acc.lo  # caller range: < 2**31
+    return out.astype(jnp.int32)
+
+
+def fp16_inner_product_exact_fp32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference: FP-IP in f32 (products exact, f32-rounded sum) — the
+    'GPU-like' baseline used in accuracy comparisons, NOT the oracle."""
+    return jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32), axis=-1)

@@ -1,0 +1,116 @@
+"""Per-layer mixed-precision policy — the paper's technique as a
+first-class framework feature.
+
+A PrecisionPolicy maps parameter paths (regex over 'block/attn/wq'-style
+names) to a PrecisionSpec. Every projection in the model zoo routes its
+matmul through layers.mplinear according to the spec:
+
+  mode:
+    'bf16' / 'fp32'  — plain dense matmul in that dtype.
+    'int8' / 'int4'  — quantized path. ``exact=False`` (default) runs
+        fake-quant (quantize-dequantize with a straight-through
+        estimator): MXU-friendly, shardable, usable at scale — this is
+        what the accelerator would compute up to the final dequant
+        rounding. ``exact=True`` routes through the integer Pallas
+        kernels (kernels.ops) — bit-exact INT mode, CPU/fidelity runs.
+    'fp16_ipu'       — the approximate FP-IP datapath: ``exact=True``
+        uses kernels.ops.mp_matmul (bit-exact IPU(w) emulation);
+        ``exact=False`` approximates it as fp16-cast inputs + f32 dot,
+        which §3.1 shows is indistinguishable at w >= 28 (and is what
+        a w>=28 IPU computes up to accumulator granularity).
+
+The paper's hybrid scheme (Appendix B) — a few FP16 layers, the rest
+INT-quantized — is the 'paper_hybrid' preset.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.ipu import IPUConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionSpec:
+    mode: str = "bf16"            # bf16|fp32|int8|int4|fp16_ipu
+    exact: bool = False           # route through bit-exact kernels
+    ipu: Optional[IPUConfig] = None   # for fp16_ipu exact mode
+
+    def __post_init__(self):
+        if self.mode not in ("bf16", "fp32", "int8", "int4", "fp16_ipu"):
+            raise ValueError(self.mode)
+
+    @property
+    def weight_bits(self) -> Optional[int]:
+        return {"int8": 8, "int4": 4}.get(self.mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Ordered (regex, spec) rules; first match wins; default last."""
+
+    name: str
+    rules: Tuple[Tuple[str, PrecisionSpec], ...] = ()
+    default: PrecisionSpec = PrecisionSpec("bf16")
+
+    def spec_for(self, path: str) -> PrecisionSpec:
+        for pattern, spec in self.rules:
+            if re.search(pattern, path):
+                return spec
+        return self.default
+
+
+BF16 = PrecisionPolicy("bf16")
+FP32 = PrecisionPolicy("fp32", default=PrecisionSpec("fp32"))
+
+# INT8 serving: everything quantized except the router/logits.
+INT8_SERVING = PrecisionPolicy(
+    "int8_serving",
+    rules=(
+        (r"router|lm_head", PrecisionSpec("bf16")),
+    ),
+    default=PrecisionSpec("int8"),
+)
+
+# INT4 serving: the common case the IPU is built for.
+INT4_SERVING = PrecisionPolicy(
+    "int4_serving",
+    rules=(
+        (r"router|lm_head", PrecisionSpec("bf16")),
+    ),
+    default=PrecisionSpec("int4"),
+)
+
+# Paper hybrid (Appendix B): sensitive projections in FP16 on the IPU
+# datapath, the bulk in INT4. First/last blocks and attention outputs are
+# the classic FP16 keeps.
+PAPER_HYBRID = PrecisionPolicy(
+    "paper_hybrid",
+    rules=(
+        (r"router|lm_head|embed", PrecisionSpec("fp16_ipu",
+                                                ipu=IPUConfig(n=16, w=28))),
+        (r"attn/wo", PrecisionSpec("fp16_ipu", ipu=IPUConfig(n=16, w=16))),
+    ),
+    default=PrecisionSpec("int4"),
+)
+
+# Fidelity: bit-exact IPU emulation everywhere (tiny models / tests).
+FIDELITY_FP16_IPU = PrecisionPolicy(
+    "fidelity_fp16_ipu",
+    default=PrecisionSpec("fp16_ipu", exact=True,
+                          ipu=IPUConfig(n=16, w=16, accum="fp32")),
+)
+
+FIDELITY_INT8 = PrecisionPolicy(
+    "fidelity_int8",
+    default=PrecisionSpec("int8", exact=True),
+)
+
+POLICIES = {p.name: p for p in (
+    BF16, FP32, INT8_SERVING, INT4_SERVING, PAPER_HYBRID,
+    FIDELITY_FP16_IPU, FIDELITY_INT8)}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    return POLICIES[name]

@@ -1,0 +1,173 @@
+"""Pallas TPU kernel: bounded-alignment approximate FP-IP matmul.
+
+This is the paper's FP16 arithmetic (core.ipu semantics) at matmul scale —
+the *fidelity path* that bit-exactly reproduces what the IPU(w) hardware
+would compute for every output element. Because every partial product
+takes a data-dependent alignment shift before summation, the inner loop is
+elementwise VPU work over a (bm, g, bn) product cube rather than an MXU
+dot; this kernel is intentionally compute-inflated (that is the price of
+bit-exact hardware emulation, quantified in EXPERIMENTS.md §Perf).
+
+Mapping of the paper's microarchitecture onto the TPU grid:
+  * one K-group of size g == IPUConfig.n is one kernel invocation's block
+    reduction (the EHU runs once per block, amortized over nibble planes,
+    mirroring the shared-EHU hardware);
+  * the 9 temporal nibble iterations run as a fori_loop over stacked
+    5-bit planes held in VMEM;
+  * the (33+t+l)-bit accumulator is a two-limb int32 pair + exponent,
+    persisted across k grid steps in revisited output blocks
+    (o[m,n] index map independent of k, k innermost and sequential);
+  * output rounding (round-to-nearest-even into fp16/fp32) happens in a
+    cheap jnp epilogue outside the kernel.
+
+A ``fused`` variant computes the full 22-bit mantissa product in one pass
+(one plane instead of nine) — different (slightly *more* accurate)
+truncation semantics, ~9x less VPU work; this is the beyond-paper
+optimized mode benchmarked against the faithful mode in §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fixedpoint as fx, fp16 as fpmod, nibble
+from repro.core.ipu import IPUConfig, NEG_INF_EXP, _shr_i32, accumulate
+
+
+def _mpmm_kernel(a_ref, b_ref, hi_ref, lo_ref, exp_ref, *, cfg: IPUConfig,
+                 fused: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+        exp_ref[...] = jnp.full_like(exp_ref, NEG_INF_EXP)
+
+    a = a_ref[...]  # (bm, g) f16
+    b = b_ref[...]  # (g, bn) f16
+    sa, ea, ma = fpmod.decompose(a, fpmod.FP16)
+    sb, eb, mb = fpmod.decompose(b, fpmod.FP16)
+
+    # EHU: product exponents for the whole block, once for all planes.
+    c = ea[:, :, None] + eb[None, :, :]            # (bm, g, bn)
+    mx = jnp.max(c, axis=1)                        # (bm, bn)
+    shift = mx[:, None, :] - c
+    active = shift <= cfg.mask_threshold
+
+    acc = fx.FX(hi_ref[...], lo_ref[...])
+    exp_acc = exp_ref[...]
+
+    if fused:
+        # Single-plane fused mode: full 22-bit mantissa products, one
+        # alignment+truncation at a w_f = min(w, 26)-bit fused datapath
+        # (keeps |aligned| < 2**26 so the g-way int32 sum cannot overflow);
+        # the w - w_f difference folds into the accumulator pre-shift
+        # pre = 1 + w_f - w (may be negative; accumulate() left-shifts).
+        w_f = min(cfg.w, 26)
+        pre = 1 + w_f - cfg.w
+        d = (sa * ma)[:, :, None] * (sb * mb)[None, :, :]  # |d| < 2**22
+        rs = shift + (22 - w_f)  # net right shift; < 0 -> exact left shift
+        aligned = _shr_i32(d, jnp.maximum(rs, 0), cfg.rounding)
+        aligned = aligned << jnp.clip(-rs, 0, max(w_f - 22, 0))
+        aligned = jnp.where(active, aligned, 0)
+        s_tree = jnp.sum(aligned, axis=1)
+        acc, exp_acc = accumulate(acc, exp_acc, s_tree, mx,
+                                  jnp.full_like(mx, pre),
+                                  jnp.zeros_like(mx), cfg)
+    else:
+        pa = jnp.stack(nibble.fp16_planes(sa, ma))  # (3, bm, g)
+        pb = jnp.stack(nibble.fp16_planes(sb, mb))  # (3, g, bn)
+
+        def iter_body(it, carry):
+            hi2, lo2, exp2 = carry
+            acc2 = fx.FX(hi2, lo2)
+            # (i, j) from the flat index — pallas forbids captured constant
+            # tables. Within a group the 9 updates commute (the accumulator
+            # exponent pins to the group max on the first update), so the
+            # enumeration order does not change the result.
+            i = it // 3
+            j = it % 3
+            na = jax.lax.dynamic_index_in_dim(pa, i, 0, keepdims=False)
+            nb = jax.lax.dynamic_index_in_dim(pb, j, 0, keepdims=False)
+            d = na[:, :, None] * nb[None, :, :]    # (bm, g, bn), |d|<=225
+            dw = d << (cfg.w - 9)
+            pre = 4 * (4 - i - j)
+            aligned = _shr_i32(dw, shift, cfg.rounding)
+            aligned = jnp.where(active, aligned, 0)
+            s_tree = jnp.sum(aligned, axis=1)      # (bm, bn)
+            acc2, exp2 = accumulate(acc2, exp2, s_tree, mx, pre,
+                                    jnp.zeros_like(mx), cfg)
+            return acc2.hi, acc2.lo, exp2
+
+        hi2, lo2, exp_acc = jax.lax.fori_loop(
+            0, 9, iter_body, (acc.hi, acc.lo, exp_acc))
+        acc = fx.FX(hi2, lo2)
+
+    hi_ref[...] = acc.hi
+    lo_ref[...] = acc.lo
+    exp_ref[...] = exp_acc
+
+
+def _pad_axis(x, axis, mult):
+    pad = -x.shape[axis] % mult
+    if pad:
+        pw = [(0, 0)] * x.ndim
+        pw[axis] = (0, pad)
+        x = jnp.pad(x, pw)
+    return x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "bm", "bn", "fused", "interpret"))
+def mp_matmul(a: jax.Array, b: jax.Array, cfg: IPUConfig = IPUConfig(),
+              *, bm: int = 16, bn: int = 128, fused: bool = False,
+              interpret: bool = True) -> jax.Array:
+    """Approximate FP-IP matmul: (M, K) f16 x (K, N) f16 -> accum format.
+
+    Bit-exact to core.ipu.fp16_inner_product with the same cfg (K grouped
+    in cfg.n chunks, zero-padded — value-neutral, see DESIGN.md). The k
+    grid dimension is innermost/sequential; accumulator state lives in
+    revisited int32 output blocks.
+    """
+    if cfg.multi_cycle:
+        raise NotImplementedError(
+            "kernel implements plain IPU(w); MC-IPU emulation is the "
+            "vmapped core.ipu path (bit-different truncation points)")
+    if cfg.operand != "fp16":
+        raise NotImplementedError(
+            "mpmm kernel is FP16-operand; BF16 runs via core.ipu")
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    g = cfg.n
+    a = _pad_axis(_pad_axis(jnp.asarray(a, jnp.float16), 0, bm), 1, g)
+    b = _pad_axis(_pad_axis(jnp.asarray(b, jnp.float16), 1, bn), 0, g)
+    mp_, kp = a.shape
+    _, np_ = b.shape
+    grid = (mp_ // bm, np_ // bn, kp // g)
+    kern = functools.partial(_mpmm_kernel, cfg=cfg, fused=fused)
+    hi, lo, exp = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, g), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((g, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+            pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+            pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp_, np_), jnp.int32),
+            jax.ShapeDtypeStruct((mp_, np_), jnp.int32),
+            jax.ShapeDtypeStruct((mp_, np_), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)
+    out = fx.round_to_fp(fx.FX(hi, lo), exp, cfg.accum_format)
+    return out[:m, :n]

@@ -1,0 +1,82 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``backend`` selection:
+  * 'pallas'  — pl.pallas_call. On this CPU container it runs in
+    interpret mode (the kernel body executes as traced jnp ops); on TPU
+    the same call compiles to Mosaic.
+  * 'xla'     — the pure-jnp reference path (ref.py). Identical math;
+    used for wall-time measurement on CPU (interpret mode adds
+    interpreter overhead that would pollute §Perf numbers) and as the
+    oracle in kernel tests.
+
+Quantized matmul wrappers fold per-channel scales in an epilogue, which
+is how the deployment path (quant/ + layers/mplinear.py) consumes them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ipu import IPUConfig
+from repro.kernels import mpmm as _mpmm
+from repro.kernels import qmm as _qmm
+from repro.kernels import ref as _ref
+
+_INTERPRET = True  # no TPU in this container; flipped by launch scripts
+
+
+def pack_int4(w: jax.Array) -> jax.Array:
+    """Pack (K, N) int4-valued int8 weights into (K//2, N) bytes."""
+    if w.shape[0] % 2:
+        raise ValueError("K must be even to pack nibbles")
+    return _ref.pack_int4_ref(w)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    return _ref.unpack_int4_ref(packed)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def int8_matmul(a: jax.Array, b: jax.Array, *, backend: str = "pallas"
+                ) -> jax.Array:
+    """(M,K) int8 x (K,N) int8 -> (M,N) int32."""
+    if backend == "xla":
+        return _ref.qmm_ref(a, b)
+    return _qmm.qmm(a, b, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def int4_matmul_packed(a: jax.Array, b_packed: jax.Array, *,
+                       backend: str = "pallas") -> jax.Array:
+    """(M,K) int8 activations x (K//2,N) packed int4 weights -> int32."""
+    if backend == "xla":
+        return _ref.qmm_ref(a, _ref.unpack_int4_ref(b_packed))
+    return _qmm.qmm_packed(a, b_packed, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def quantized_matmul(a_q: jax.Array, b_q: jax.Array, scale_a: jax.Array,
+                     scale_b: jax.Array, *, backend: str = "pallas"
+                     ) -> jax.Array:
+    """Dequantizing matmul: int8/int4-valued operands with per-row (M,)
+    activation scales and per-column (N,) weight scales -> f32."""
+    acc = int8_matmul(a_q, b_q, backend=backend)
+    return (acc.astype(jnp.float32)
+            * scale_a[:, None].astype(jnp.float32)
+            * scale_b[None, :].astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "fused", "backend"))
+def mp_matmul(a: jax.Array, b: jax.Array, cfg: IPUConfig = IPUConfig(),
+              *, fused: bool = False, backend: str = "pallas"
+              ) -> jax.Array:
+    """Approximate FP-IP matmul (fidelity path): f16 x f16 -> accum fmt.
+
+    ``fused=False`` is the paper-faithful nine-plane datapath;
+    ``fused=True`` the optimized single-plane variant (§Perf)."""
+    if backend == "xla":
+        return _ref.mp_matmul_xla(a, b, cfg, fused=fused)
+    return _mpmm.mp_matmul(a, b, cfg, fused=fused, interpret=_INTERPRET)

@@ -1,0 +1,28 @@
+"""Production meshes. Functions, not module constants — importing this
+module never touches jax device state (dry-run sets device flags first).
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — batch
+shards over (pod, data); parameters replicate across pods (gradient
+all-reduce over the pod axis is the cross-pod DCI collective).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Small mesh for CPU subprocess tests (8 forced host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))

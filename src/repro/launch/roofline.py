@@ -1,0 +1,182 @@
+"""Roofline terms from compiled dry-run artifacts (no hardware needed).
+
+Per the assignment:
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+Sources: compiled.cost_analysis() gives per-partition flops/bytes (the
+SPMD module is the per-device program — multiply by chips for the global
+figure). Collective bytes are parsed from the post-SPMD HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+operand, weighted by the ring traffic factor of its replica-group size.
+
+Hardware constants (TPU v5e-class, per assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|f8e4m3fn|f8e5m2|c64|c128)"
+                       r"\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,\s]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [num_groups, group_size] iota format
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return default
+
+
+def _ring_factor(op: str, group: int) -> float:
+    """Per-chip link traffic as a multiple of the (per-chip) payload,
+    assuming ring algorithms: all-reduce moves 2(n-1)/n, gather/scatter
+    (n-1)/n, all-to-all (n-1)/n, permute 1."""
+    if group <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (group - 1) / group
+    if op == "collective-permute":
+        return 1.0
+    return (group - 1) / group
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: float = 0.0            # per-chip link bytes
+    by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, op: str, nbytes: float):
+        self.total_bytes += nbytes
+        self.by_op[op] = self.by_op.get(op, 0.0) + nbytes
+        self.count += 1
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    """Sum per-chip link traffic over all collective ops in (post-SPMD,
+    per-device) HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(3)
+        # operand bytes: shapes inside the call parens (per-device payload)
+        call = line[m.end():]
+        payload = _shape_bytes(call)
+        if op == "all-gather":
+            # output = gathered; operand is the per-device shard
+            out_shape = m.group(1) or m.group(2) or ""
+            payload = _shape_bytes(out_shape) / max(
+                _group_size(line, default_group), 1)
+        group = _group_size(line, default_group)
+        stats.add(op, payload * _ring_factor(op, group))
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # global (all chips)
+    hlo_bytes: float            # global HBM traffic
+    collective_bytes: float     # global link traffic
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time: how close the dominant term
+        lets us get to the MODEL_FLOPS roofline."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        return ideal / bound if bound > 0 else 0.0
+
+    @property
+    def flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — useful fraction of compiled compute
+        (catches remat/redundancy waste)."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> Dict:
+        return {**dataclasses.asdict(self),
+                "bottleneck": self.bottleneck,
+                "roofline_fraction": self.roofline_fraction,
+                "flops_ratio": self.flops_ratio}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D train (N active params, D tokens); 2*N*D
+    prefill; 2*N per decoded token x batch."""
+    n = cfg.active_params_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # one decode step
+
+
+def terms_from_compiled(arch: str, shape, mesh_name: str, chips: int,
+                        cost: Dict, hlo_text: str, cfg) -> RooflineTerms:
+    per_dev_flops = float(cost.get("flops", 0.0))
+    per_dev_bytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text, default_group=chips)
+    return RooflineTerms(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=per_dev_flops * chips,
+        hlo_bytes=per_dev_bytes * chips,
+        collective_bytes=coll.total_bytes * chips,
+        model_flops=model_flops(cfg, shape),
+        compute_s=per_dev_flops / PEAK_FLOPS,
+        memory_s=per_dev_bytes / HBM_BW,
+        collective_s=coll.total_bytes / LINK_BW,
+    )

@@ -1,0 +1,151 @@
+"""Top-k Mixture-of-Experts with capacity-based GShard-style dispatch.
+
+Dense one-hot dispatch/combine einsums: SPMD-friendly (the expert axis
+shards over the mesh 'model' axis when n_experts divides it — expert
+parallelism with XLA-inserted all-to-alls — otherwise d_ff shards, pure
+TP). Router runs in f32 (softmax sensitivity); experts take the
+mixed-precision policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import activation, dense_init
+from repro.layers.mplinear import mp_linear
+from repro.parallel import act_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_expert: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    router_noise: float = 0.0
+    # 'einsum': GShard one-hot dispatch/combine matmuls (simple, but the
+    # dispatch einsum costs G*S*E*C*d MACs — for 128-expert configs that
+    # is orders of magnitude more FLOPs than the experts themselves).
+    # 'gather': index-based dispatch/combine (scatter token ids into the
+    # (E, C) queue, gather activations) — removes the dispatch FLOPs
+    # entirely (§Perf hillclimb on qwen3-moe).
+    dispatch: str = "einsum"
+
+
+def init(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert
+
+    def stack(k, din, dout):
+        kk = jax.random.split(k, e)
+        return jnp.stack([dense_init(kk[i], din, dout, dtype)
+                          for i in range(e)])
+
+    return {
+        "router": {"w": dense_init(ks[0], d, e, jnp.float32)},
+        "w_gate": {"w": stack(ks[1], d, f)},
+        "w_up": {"w": stack(ks[2], d, f)},
+        "w_down": {"w": stack(ks[3], f, d)},
+    }
+
+
+def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    cap = int(cfg.capacity_factor * tokens_per_group * cfg.top_k
+              / cfg.n_experts)
+    return max(cap, cfg.top_k)
+
+
+def forward(params, cfg: MoEConfig, x, policy, path: str):
+    """x: (B, S, d) -> (B, S, d), plus aux load-balancing loss.
+
+    GShard-style *grouped* dispatch: each sequence is its own routing
+    group with capacity proportional to S — the dispatch one-hot is
+    (G, S, E, C_g), linear in total tokens. (A flat dispatch over all
+    B*S tokens would be quadratic: C grows with T, giving T*E*C ~ T^2 —
+    hundreds of TB at train_4k scale.) Groups ride the data axes; the
+    expert dim shards over 'model' (EP) when divisible.
+    """
+    b, s, d = x.shape
+    cap = _capacity(s, cfg)
+
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)           # (G, S, E)
+
+    # top-k selection -> (G, S, k) expert ids + renormalized gates
+    gate_vals, expert_ids = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert queue, per group
+    onehot = jax.nn.one_hot(expert_ids, cfg.n_experts,
+                            dtype=jnp.int32)          # (G, S, k, E)
+    flat = onehot.reshape(b, s * cfg.top_k, cfg.n_experts)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(
+        b, s, cfg.top_k, cfg.n_experts)
+    pos = (pos_in_expert * onehot).sum(-1)            # (G, S, k)
+    fits = pos < cap
+    gate_vals = gate_vals * fits
+
+    if cfg.dispatch == "gather":
+        # scatter token ids into the expert queues, gather activations
+        gidx = jnp.arange(b, dtype=jnp.int32)[:, None, None]
+        s_ids = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, :, None],
+            (b, s, cfg.top_k))
+        pos_safe = jnp.where(fits, pos, cap)  # overflow slot dropped
+        sidx = jnp.full((b, cfg.n_experts, cap + 1), -1, jnp.int32)
+        sidx = sidx.at[gidx, expert_ids, pos_safe].set(s_ids)
+        sidx = sidx[:, :, :cap]                       # (G, E, C)
+        valid = sidx >= 0
+        xe = x[jnp.arange(b, dtype=jnp.int32)[:, None, None],
+               jnp.maximum(sidx, 0)]                  # (G, E, C, d)
+        xe = jnp.where(valid[..., None], xe, 0)
+    else:
+        # dispatch (G, S, E, C) one-hot and combine weights
+        disp = (jax.nn.one_hot(expert_ids, cfg.n_experts, dtype=x.dtype)
+                [..., None]
+                * jax.nn.one_hot(pos, cap, dtype=x.dtype)[..., None, :]
+                * fits[..., None, None].astype(x.dtype))  # (G, S, k, E, C)
+        combine = (disp * gate_vals[..., None, None].astype(x.dtype)
+                   ).sum(2)                               # (G, S, E, C)
+        disp = disp.sum(2)                                # (G, S, E, C)
+        xe = jnp.einsum("gsd,gsec->gecd", x, disp)        # (G, E, C, d)
+    xe = act_sharding.constrain(xe, act_sharding.DP, act_sharding.MDL)
+    spec = policy.spec_for(f"{path}/experts")
+    fn = activation(cfg.act)
+    wg, wu, wd = (params["w_gate"]["w"], params["w_up"]["w"],
+                  params["w_down"]["w"])
+    if spec.weight_bits:  # per-expert per-out-channel fake-quant
+        from repro.quant.quantize import fake_quant
+        wg = fake_quant(wg.astype(jnp.float32), spec.weight_bits, axis=1)
+        wu = fake_quant(wu.astype(jnp.float32), spec.weight_bits, axis=1)
+        wd = fake_quant(wd.astype(jnp.float32), spec.weight_bits, axis=1)
+    g = jnp.einsum("gecd,edf->gecf", xe.astype(jnp.bfloat16),
+                   wg.astype(jnp.bfloat16))
+    u = jnp.einsum("gecd,edf->gecf", xe.astype(jnp.bfloat16),
+                   wu.astype(jnp.bfloat16))
+    h = fn(g.astype(jnp.float32)).astype(jnp.bfloat16) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, wd.astype(jnp.bfloat16))
+    if cfg.dispatch == "gather":
+        # combine: gather each (token, k)'s expert output, weight, sum
+        flat = (expert_ids * cap + pos_safe.clip(0, cap - 1)).reshape(
+            b, -1)                                    # (G, S*k)
+        yk = jnp.take_along_axis(
+            ye.reshape(b, cfg.n_experts * cap, d),
+            flat[..., None], axis=1).reshape(b, s, cfg.top_k, d)
+        gatesz = (gate_vals * fits).astype(ye.dtype)
+        y = jnp.einsum("gskd,gsk->gsd", yk, gatesz).astype(x.dtype)
+    else:
+        y = jnp.einsum("gecd,gsec->gsd", ye.astype(x.dtype), combine)
+
+    # aux load-balance loss (Switch): E * sum(frac_tokens * frac_probs)
+    frac_tokens = (onehot.sum(2) > 0).astype(jnp.float32).mean((0, 1))
+    frac_probs = probs.mean((0, 1))
+    aux = cfg.n_experts * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

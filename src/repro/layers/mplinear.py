@@ -1,0 +1,76 @@
+"""Mixed-precision linear layer: every model projection routes through
+here, and the PrecisionPolicy decides which datapath executes it.
+
+Paths:
+  bf16 / fp32  — dense jnp.dot in the compute dtype.
+  int8 / int4  — fake-quant (default; MXU + shardable + STE gradients)
+                 or exact integer Pallas kernels (fidelity).
+  fp16_ipu     — exact=False: fp16-cast operands, f32 accumulation (what
+                 a w>=28 IPU computes up to accumulator granularity);
+                 exact=True: bit-exact kernels.ops.mp_matmul.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionSpec
+from repro.kernels import ops as kops
+from repro.layers.common import dense_init
+from repro.quant.quantize import fake_quant, quantize_symmetric
+
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.float32):
+    p = {"w": dense_init(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def mp_linear(params, x: jax.Array, spec: PrecisionSpec,
+              compute_dtype=jnp.bfloat16) -> jax.Array:
+    """y = x @ w (+ b) under the precision spec. x: (..., d_in)."""
+    w = params["w"]
+    b = params.get("b")
+
+    if spec.mode in ("bf16", "fp32"):
+        dt = jnp.bfloat16 if spec.mode == "bf16" else jnp.float32
+        y = jnp.dot(x.astype(dt), w.astype(dt),
+                    preferred_element_type=jnp.float32)
+
+    elif spec.mode in ("int8", "int4"):
+        bits = spec.weight_bits
+        if not spec.exact:
+            # fake-quant both operands; per-out-channel weight scales
+            wq = fake_quant(w.astype(jnp.float32), bits, axis=0)
+            xq = fake_quant(x.astype(jnp.float32), bits if bits == 8 else 8)
+            y = jnp.dot(xq.astype(compute_dtype), wq.astype(compute_dtype),
+                        preferred_element_type=jnp.float32)
+        else:
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, x.shape[-1])
+            aq, sa = quantize_symmetric(x2, 8, axis=1)
+            wq, sw = quantize_symmetric(w, bits, axis=0)
+            y = kops.quantized_matmul(aq, wq, sa[:, 0], sw[0, :])
+            y = y.reshape(*lead, -1)
+
+    elif spec.mode == "fp16_ipu":
+        if not spec.exact:
+            y = jnp.dot(x.astype(jnp.float16), w.astype(jnp.float16),
+                        preferred_element_type=jnp.float32)
+        else:
+            cfg = spec.ipu
+            lead = x.shape[:-1]
+            x2 = x.astype(jnp.float16).reshape(-1, x.shape[-1])
+            y = kops.mp_matmul(x2, w.astype(jnp.float16), cfg,
+                               backend="xla")
+            y = y.astype(jnp.float32).reshape(*lead, -1)
+    else:
+        raise ValueError(spec.mode)
+
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y.astype(compute_dtype)

@@ -1,0 +1,138 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)  (data-dependent decay, c=8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training runs an associative scan over sequence chunks; decode is the
+O(1) recurrence (long_500k-capable). The full recurrent block is
+conv1d(width 4) -> RG-LRU inside a gated (GeGLU-style) branch pair, as in
+the Griffin paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import dense_init
+from repro.layers.mplinear import linear_init, mp_linear
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    conv_width: int = 4
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array        # (B, d_rnn) recurrent state
+    conv: jax.Array     # (B, conv_width - 1, d_rnn) conv tail
+
+
+def init(key, cfg: RGLRUConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    d, dr = cfg.d_model, cfg.d_rnn
+    # Lambda init so decay a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1
+    return {
+        "w_in_rnn": linear_init(ks[0], d, dr, False, dtype),   # x branch
+        "w_in_gate": linear_init(ks[1], d, dr, False, dtype),  # gate branch
+        "w_out": linear_init(ks[2], dr, d, False, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, dr),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": dense_init(ks[4], dr, dr, dtype),
+        "b_a": jnp.zeros((dr,), dtype),
+        "w_x": dense_init(ks[6], dr, dr, dtype),
+        "b_x": jnp.zeros((dr,), dtype),
+        "lambda": lam.astype(dtype),
+    }
+
+
+def init_state(batch: int, cfg: RGLRUConfig, dtype=jnp.float32
+               ) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+    )
+
+
+def _causal_conv(x, w, b, tail):
+    """Depthwise causal conv1d. x: (B,S,dr); tail: (B,W-1,dr)."""
+    wdt = x.dtype
+    full = jnp.concatenate([tail.astype(wdt), x], axis=1)
+    width = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        seg = full[:, i:i + x.shape[1]]
+        out = out + seg.astype(jnp.float32) * w[width - 1 - i].astype(
+            jnp.float32)
+    new_tail = full[:, -(width - 1):] if width > 1 else tail
+    return (out + b.astype(jnp.float32)).astype(wdt), new_tail
+
+
+def _gates(params, xr):
+    r = jax.nn.sigmoid(xr.astype(jnp.float32)
+                       @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xr.astype(jnp.float32)
+                       @ params["w_x"].astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(
+        params["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) \
+        * (i * xr.astype(jnp.float32))
+    return a, gated
+
+
+def _scan_rglru(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a,b: (B,S,dr)."""
+    def combine(u, v):
+        au, bu = u
+        av, bv = v
+        return au * av, bu * av + bv
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = a_s * h0[:, None] + b_s
+    return h, h[:, -1]
+
+
+def forward(params, cfg: RGLRUConfig, x, state: RGLRUState, policy,
+            path: str) -> Tuple[jax.Array, RGLRUState]:
+    """Full recurrent block over (B, S, d)."""
+    sp = policy.spec_for
+    xr = mp_linear(params["w_in_rnn"], x, sp(f"{path}/w_in_rnn"))
+    gate = mp_linear(params["w_in_gate"], x, sp(f"{path}/w_in_gate"))
+    xr, new_tail = _causal_conv(xr, params["conv_w"], params["conv_b"],
+                                state.conv)
+    a, b = _gates(params, xr)
+    h, h_last = _scan_rglru(a, b, state.h)
+    out = h * jax.nn.gelu(gate.astype(jnp.float32))
+    out = mp_linear(params["w_out"], out.astype(x.dtype),
+                    sp(f"{path}/w_out"))
+    return out, RGLRUState(h_last, new_tail)
+
+
+def decode_step(params, cfg: RGLRUConfig, x, state: RGLRUState, policy,
+                path: str) -> Tuple[jax.Array, RGLRUState]:
+    """x: (B, 1, d)."""
+    sp = policy.spec_for
+    xr = mp_linear(params["w_in_rnn"], x, sp(f"{path}/w_in_rnn"))
+    gate = mp_linear(params["w_in_gate"], x, sp(f"{path}/w_in_gate"))
+    xr, new_tail = _causal_conv(xr, params["conv_w"], params["conv_b"],
+                                state.conv)
+    a, b = _gates(params, xr)
+    h = a[:, 0] * state.h + b[:, 0]
+    out = h[:, None] * jax.nn.gelu(gate.astype(jnp.float32))
+    out = mp_linear(params["w_out"], out.astype(x.dtype),
+                    sp(f"{path}/w_out"))
+    return out, RGLRUState(h, new_tail)

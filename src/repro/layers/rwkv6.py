@@ -1,0 +1,218 @@
+"""RWKV-6 "Finch" time-mix and channel-mix layers (attention-free).
+
+Time mix (per head, head size N):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: N x N state)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with data-dependent decay w_t = exp(-exp(ww_t)) produced by a LoRA on the
+token-shifted input (the paper's core novelty vs RWKV-5). Training uses a
+chunked linear-attention algorithm (intra-chunk quadratic + inter-chunk
+state carry through a lax.scan); decode is the O(1) recurrence — which is
+why this arch runs the long_500k shape.
+
+Mixed precision: projections take the policy; the recurrence itself runs
+in f32 (tiny FLOP share, wide dynamic range — see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import dense_init
+from repro.layers.mplinear import linear_init, mp_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    n_heads: int
+    d_ff: int
+    lora_rank: int = 32
+    chunk: int = 64
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array       # (B, H, N, N) wkv state
+    x_prev_t: jax.Array  # (B, d) last input of time-mix (token shift)
+    x_prev_c: jax.Array  # (B, d) last input of channel-mix
+
+
+def init(key, cfg: RWKVConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 12)
+    d, h, n = cfg.d_model, cfg.n_heads, cfg.head_dim
+    p = {
+        "w_r": linear_init(ks[0], d, d, False, dtype),
+        "w_k": linear_init(ks[1], d, d, False, dtype),
+        "w_v": linear_init(ks[2], d, d, False, dtype),
+        "w_g": linear_init(ks[3], d, d, False, dtype),
+        "w_o": linear_init(ks[4], d, d, False, dtype),
+        # token-shift mixing coefficients (static part)
+        "mu": {k: jnp.full((d,), 0.5, dtype)
+               for k in ("r", "k", "v", "g", "w")},
+        # decay LoRA: ww = tanh(x @ A) @ B + bias
+        "w_lora_a": dense_init(ks[5], d, cfg.lora_rank, dtype),
+        "w_lora_b": dense_init(ks[6], cfg.lora_rank, d, dtype),
+        "w_bias": jnp.full((d,), -6.0, dtype),
+        "u": (jax.random.normal(ks[7], (h, n), jnp.float32) * 0.1
+              ).astype(dtype),
+        # channel mix
+        "c_key": linear_init(ks[8], d, cfg.d_ff, False, dtype),
+        "c_val": linear_init(ks[9], cfg.d_ff, d, False, dtype),
+        "c_rec": linear_init(ks[10], d, d, False, dtype),
+        "c_mu": {k: jnp.full((d,), 0.5, dtype) for k in ("k", "r")},
+    }
+    return p
+
+
+def init_state(batch: int, cfg: RWKVConfig, dtype=jnp.float32) -> RWKVState:
+    h, n = cfg.n_heads, cfg.head_dim
+    return RWKVState(
+        s=jnp.zeros((batch, h, n, n), jnp.float32),
+        x_prev_t=jnp.zeros((batch, cfg.d_model), dtype),
+        x_prev_c=jnp.zeros((batch, cfg.d_model), dtype),
+    )
+
+
+def _token_shift(x, x_prev):
+    """x: (B, S, d); x_prev: (B, d) -> shifted (B, S, d), new x_prev."""
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    return shifted, x[:, -1]
+
+
+def _mix(x, shifted, mu):
+    return x + (shifted - x) * mu.astype(x.dtype)
+
+
+def _projections(params, cfg: RWKVConfig, x, shifted, policy, path):
+    b, s, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    mu = params["mu"]
+    xr = _mix(x, shifted, mu["r"])
+    xk = _mix(x, shifted, mu["k"])
+    xv = _mix(x, shifted, mu["v"])
+    xg = _mix(x, shifted, mu["g"])
+    xw = _mix(x, shifted, mu["w"])
+    sp = policy.spec_for
+    r = mp_linear(params["w_r"], xr, sp(f"{path}/w_r")).reshape(b, s, h, n)
+    k = mp_linear(params["w_k"], xk, sp(f"{path}/w_k")).reshape(b, s, h, n)
+    v = mp_linear(params["w_v"], xv, sp(f"{path}/w_v")).reshape(b, s, h, n)
+    g = mp_linear(params["w_g"], xg, sp(f"{path}/w_g"))
+    ww = (jnp.tanh(xw.astype(jnp.float32) @
+                   params["w_lora_a"].astype(jnp.float32))
+          @ params["w_lora_b"].astype(jnp.float32)
+          + params["w_bias"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, s, h, n)  # decay in (0, 1)
+    return r, k, v, g, w
+
+
+def time_mix(params, cfg: RWKVConfig, x, state: RWKVState, policy,
+             path: str) -> Tuple[jax.Array, RWKVState]:
+    """Chunked parallel form over (B, S, d). Returns output + new state."""
+    b, s, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    shifted, x_last = _token_shift(x, state.x_prev_t)
+    r, k, v, g, w = _projections(params, cfg, x, shifted, policy, path)
+    u = params["u"].astype(jnp.float32)
+
+    c = cfg.chunk
+    pad = -s % c
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)  # decay 1 = no-op
+    sp_ = s + pad
+    nc = sp_ // c
+
+    # (B, nc, c, H, N) -> f32
+    rs = r.astype(jnp.float32).reshape(b, nc, c, h, n)
+    ks_ = k.astype(jnp.float32).reshape(b, nc, c, h, n)
+    vs = v.astype(jnp.float32).reshape(b, nc, c, h, n)
+    ws = w.astype(jnp.float32).reshape(b, nc, c, h, n)
+
+    # cumulative decay within chunk: P[t] = prod_{i<=t} w_i
+    logw = jnp.log(jnp.maximum(ws, 1e-38))
+    cum = jnp.cumsum(logw, axis=2)                  # (B,nc,c,H,N)
+    p_all = jnp.exp(cum[:, :, -1:])                 # full-chunk decay
+
+    def chunk_step(s0, inp):
+        rs_, ks__, vs_, cum_, logw_, pall_ = inp
+        # inter-chunk: contribution of carried state
+        #   o_t += (r_t * prod_{i<=t-1} w) @ S0   (decay applied to r side)
+        r_dec = rs_ * jnp.exp(cum_ - logw_)         # (B,c,H,N) exclusive
+        o_inter = jnp.einsum("bchn,bhnm->bchm", r_dec, s0)
+        # intra-chunk: A[t,i] = r_t . (k_i * prod_{i<j<=t} w) for i < t
+        # k_i scaled by the inverse chunk-start decay; the exponent is
+        # clamped at 40 — pairs needing more relative decay contribute
+        # ~exp(-40) of the output (GLA-style stability compromise).
+        k_sc = ks__ * jnp.exp(jnp.clip(-cum_, None, 40.0))
+        att = jnp.einsum("bchn,bihn->bhci", r_dec, k_sc)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = att * tri[None, None]
+        o_intra = jnp.einsum("bhci,bihm->bchm", att, vs_)
+        # bonus current-token term: r_t . (u * k_t) v_t
+        bonus = jnp.einsum("bchn,bchn->bch", rs_, ks__ * u[None, None])
+        o_cur = bonus[..., None] * vs_
+        # state update: S = diag(prod w) S0 + sum_i (k_i * decay_to_end) v_i
+        decay_to_end = jnp.exp(cum_[:, -1:] - cum_)  # prod_{j>i} w
+        s_new = s0 * pall_[:, 0][..., None] + jnp.einsum(
+            "bihn,bihm->bhnm", ks__ * decay_to_end, vs_)
+        return s_new, o_inter + o_intra + o_cur
+
+    inputs = (jnp.moveaxis(rs, 1, 0), jnp.moveaxis(ks_, 1, 0),
+              jnp.moveaxis(vs, 1, 0),
+              jnp.moveaxis(cum, 1, 0), jnp.moveaxis(logw, 1, 0),
+              jnp.moveaxis(p_all, 1, 0))
+    s_fin, outs = jax.lax.scan(chunk_step, state.s, inputs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sp_, h, n)[:, :s]
+    out = out.reshape(b, s, d).astype(x.dtype)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    sp2 = policy.spec_for(f"{path}/w_o")
+    out = mp_linear(params["w_o"], out, sp2)
+    return out, RWKVState(s_fin, x_last, state.x_prev_c)
+
+
+def time_mix_step(params, cfg: RWKVConfig, x, state: RWKVState, policy,
+                  path: str) -> Tuple[jax.Array, RWKVState]:
+    """O(1) single-token decode. x: (B, 1, d)."""
+    b, _, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    shifted = state.x_prev_t[:, None]
+    r, k, v, g, w = _projections(params, cfg, x, shifted, policy, path)
+    u = params["u"].astype(jnp.float32)
+    r1, k1, v1, w1 = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))
+    kv = jnp.einsum("bhn,bhm->bhnm", k1, v1)
+    o = jnp.einsum("bhn,bhnm->bhm", r1,
+                   state.s + u[None, :, :, None] * kv)
+    s_new = state.s * w1[..., None] + kv
+    out = o.reshape(b, 1, d).astype(x.dtype)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = mp_linear(params["w_o"], out, policy.spec_for(f"{path}/w_o"))
+    return out, RWKVState(s_new, x[:, -1], state.x_prev_c)
+
+
+def channel_mix(params, cfg: RWKVConfig, x, state: RWKVState, policy,
+                path: str, single_step: bool = False
+                ) -> Tuple[jax.Array, RWKVState]:
+    if single_step:
+        shifted, x_last = state.x_prev_c[:, None], x[:, -1]
+    else:
+        shifted, x_last = _token_shift(x, state.x_prev_c)
+    xk = _mix(x, shifted, params["c_mu"]["k"])
+    xr = _mix(x, shifted, params["c_mu"]["r"])
+    sp = policy.spec_for
+    kk = mp_linear(params["c_key"], xk, sp(f"{path}/c_key"))
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = mp_linear(params["c_val"], kk, sp(f"{path}/c_val"))
+    rr = jax.nn.sigmoid(mp_linear(params["c_rec"], xr,
+                                  sp(f"{path}/c_rec")).astype(jnp.float32))
+    out = (rr * vv.astype(jnp.float32)).astype(x.dtype)
+    return out, RWKVState(state.s, state.x_prev_t, x_last)

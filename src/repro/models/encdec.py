@@ -1,0 +1,203 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, T_frames, frontend_dim); a
+linear projector maps them into the encoder. Encoder blocks are
+bidirectional; decoder blocks are causal self-attention + cross-attention
+into the encoder output.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import get_policy
+from repro.parallel import act_sharding as act
+from repro.layers import attention, mlp
+from repro.layers.attention import AttnConfig, KVCache
+from repro.layers.common import apply_norm, embed_init, norm_init, softcap
+from repro.layers.mplinear import linear_init
+
+
+def _self_cfg(cfg: ModelConfig, causal: bool) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        rope_theta=cfg.rope_theta, causal=causal)
+
+
+def _cross_cfg(cfg: ModelConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        causal=False, cross=True)
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": attention.init(k1, _self_cfg(cfg, False), dtype),
+        "ln2": norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": mlp.init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": attention.init(k1, _self_cfg(cfg, True), dtype),
+        "ln_x": norm_init(cfg.norm, cfg.d_model, dtype),
+        "xattn": attention.init(k2, _cross_cfg(cfg), dtype),
+        "ln2": norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": mlp.init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    ke, kp, k1, k2, kh = jax.random.split(key, 5)
+    return {
+        "embed": {"w": embed_init(ke, cfg.padded_vocab, cfg.d_model,
+                                  dtype)},
+        "frontend_proj": linear_init(kp, cfg.frontend_dim or cfg.d_model,
+                                     cfg.d_model, True, dtype),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+            jax.random.split(k1, n_enc)),
+        "enc_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+            jax.random.split(k2, cfg.n_layers)),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+        "lm_head": linear_init(kh, cfg.d_model, cfg.padded_vocab, False,
+                               dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T, frontend_dim) stub embeddings -> (B, T, d)."""
+    policy = get_policy(cfg.precision_policy)
+    from repro.layers.mplinear import mp_linear
+    x = mp_linear(params["frontend_proj"], frames.astype(
+        jnp.dtype(cfg.compute_dtype)), policy.spec_for("frontend_proj"))
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def step(h, bp):
+        hn = apply_norm(cfg.norm, h, bp["ln1"])
+        a = attention.forward(bp["attn"], _self_cfg(cfg, False), hn,
+                              positions, policy, "enc/attn")
+        h = h + a
+        hn = apply_norm(cfg.norm, h, bp["ln2"])
+        return h + mlp.forward(bp["mlp"], hn, policy, "enc/mlp", cfg.act), \
+            None
+
+    fn = jax.checkpoint(step) if cfg.remat != "none" else step
+    x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+    return apply_norm(cfg.norm, x, params["enc_norm"])
+
+
+def _dec_run(params, cfg, x, positions, enc_out, mode, caches, pos):
+    policy = get_policy(cfg.precision_policy)
+
+    def step(h, xs):
+        bp, gc = xs
+        hn = apply_norm(cfg.norm, h, bp["ln1"])
+        if mode == "train":
+            a = attention.forward(bp["attn"], _self_cfg(cfg, True), hn,
+                                  positions, policy, "dec/attn")
+            nc = gc
+        elif mode == "prefill":
+            a, nc = attention.prefill(bp["attn"], _self_cfg(cfg, True), hn,
+                                      positions, gc, policy, "dec/attn")
+        else:
+            a, nc = attention.decode_step(bp["attn"], _self_cfg(cfg, True),
+                                          hn, pos, gc, policy, "dec/attn")
+        h = h + a
+        hn = apply_norm(cfg.norm, h, bp["ln_x"])
+        xa = attention.forward(bp["xattn"], _cross_cfg(cfg), hn, positions,
+                               policy, "dec/xattn", kv_input=enc_out)
+        h = h + xa
+        hn = apply_norm(cfg.norm, h, bp["ln2"])
+        h = h + mlp.forward(bp["mlp"], hn, policy, "dec/mlp", cfg.act)
+        return h, nc
+
+    fn = step
+    if cfg.remat != "none" and mode == "train":
+        fn = jax.checkpoint(step)
+    x, new_caches = jax.lax.scan(fn, x, (params["dec_blocks"], caches))
+    return x, new_caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    c = attention.init_cache(batch, max_len, _self_cfg(cfg, True), dtype)
+    return KVCache(*(jnp.broadcast_to(a, (cfg.n_layers,) + a.shape)
+                     for a in c))
+
+
+def _logits(params, cfg, x):
+    logits = jnp.dot(x, params["lm_head"]["w"].astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return act.logits(logits)
+
+
+def train_logits(params, cfg: ModelConfig, tokens, frames):
+    enc_out = encode(params, cfg, frames)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"]["w"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    x, _ = _dec_run(params, cfg, x, positions, enc_out, "train", None,
+                    None)
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    return _logits(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    from repro.models.losses import fused_chunked_xent
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    enc_out = encode(params, cfg, batch["frames"])
+    b, s = inp.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"]["w"], inp, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    x, _ = _dec_run(params, cfg, x, positions, enc_out, "train", None,
+                    None)
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    loss, m = fused_chunked_xent(x, lambda xc: _logits(params, cfg, xc),
+                                 tgt)
+    return loss, {**m, "aux": jnp.zeros(())}
+
+
+def prefill(params, cfg: ModelConfig, tokens, caches, frames):
+    """Returns (logits, (kv caches, encoder output)) — the encoder output
+    is part of decode state for cross-attention."""
+    enc_out = encode(params, cfg, frames)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"]["w"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    x, new_caches = _dec_run(params, cfg, x, positions, enc_out, "prefill",
+                             caches, None)
+    x = apply_norm(cfg.norm, x[:, -1:], params["final_norm"])
+    return _logits(params, cfg, x)[:, 0], (new_caches, enc_out)
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, state):
+    caches, enc_out = state
+    x = jnp.take(params["embed"]["w"], token, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    x, new_caches = _dec_run(params, cfg, x, pos[:, None], enc_out,
+                             "decode", caches, pos)
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    return _logits(params, cfg, x)[:, 0], (new_caches, enc_out)

@@ -1,0 +1,208 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA
+attention in a repeating (rec, rec, attn) pattern; long_500k-capable
+(bounded window + O(1) recurrent state).
+
+38 layers = 12 scanned (rec, rec, attn) triples + 2 trailing rec blocks
+(kept unscanned to preserve the published depth).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import get_policy
+from repro.layers import attention, mlp, rglru
+from repro.layers.attention import AttnConfig, KVCache
+from repro.layers.common import apply_norm, embed_init, norm_init, softcap
+from repro.models import lm as lm_model
+from repro.parallel import act_sharding as act
+
+
+def _rg_cfg(cfg: ModelConfig) -> rglru.RGLRUConfig:
+    return rglru.RGLRUConfig(cfg.d_model, cfg.d_rnn or cfg.d_model,
+                             cfg.conv_width)
+
+
+def _attn_cfg(cfg: ModelConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        rope_theta=cfg.rope_theta, rotary_pct=cfg.rotary_pct,
+        window=cfg.window, causal=True, attn_softcap=cfg.attn_softcap,
+    )
+
+
+def _pattern(cfg: ModelConfig):
+    pat = cfg.rec_pattern or ("rec", "rec", "attn")
+    n_triples = cfg.n_layers // len(pat)
+    n_tail = cfg.n_layers - n_triples * len(pat)
+    return pat, n_triples, n_tail
+
+
+def _block_init(key, cfg: ModelConfig, kind: str, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": norm_init(cfg.norm, cfg.d_model, dtype),
+         "ln2": norm_init(cfg.norm, cfg.d_model, dtype)}
+    if kind == "rec":
+        p["rec"] = rglru.init(k1, _rg_cfg(cfg), dtype)
+    else:
+        p["attn"] = attention.init(k1, _attn_cfg(cfg), dtype)
+    p["mlp"] = mlp.init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    pat, n_triples, n_tail = _pattern(cfg)
+    ke, kb, kt, kh = jax.random.split(key, 4)
+
+    def group_init(gk):
+        sub = jax.random.split(gk, len(pat))
+        return {f"b{i}": _block_init(sub[i], cfg, kind, dtype)
+                for i, kind in enumerate(pat)}
+
+    params = {
+        "embed": {"w": embed_init(ke, cfg.padded_vocab, cfg.d_model,
+                                  dtype)},
+        "blocks": jax.vmap(group_init)(jax.random.split(kb, n_triples)),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    tails = jax.random.split(kt, max(n_tail, 1))
+    params["tail"] = [_block_init(tails[i], cfg, "rec", dtype)
+                      for i in range(n_tail)]
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    pat, n_triples, n_tail = _pattern(cfg)
+    rg = _rg_cfg(cfg)
+    cap = min(cfg.window or max_len, max_len)
+    group = {}
+    for i, kind in enumerate(pat):
+        if kind == "rec":
+            s = rglru.init_state(batch, rg, dtype)
+            group[f"b{i}"] = rglru.RGLRUState(
+                *(jnp.broadcast_to(a, (n_triples,) + a.shape) for a in s))
+        else:
+            c = attention.init_cache(batch, cap, _attn_cfg(cfg), dtype)
+            group[f"b{i}"] = KVCache(
+                *(jnp.broadcast_to(a, (n_triples,) + a.shape) for a in c))
+    tail = [rglru.init_state(batch, rg, dtype) for _ in range(n_tail)]
+    return {"groups": group, "tail": tail}
+
+
+def _apply_block(bp, cfg: ModelConfig, kind: str, x, positions, policy,
+                 mode: str, cache, pos):
+    h = apply_norm(cfg.norm, x, bp["ln1"])
+    if kind == "rec":
+        if mode == "decode":
+            a, cache = rglru.decode_step(bp["rec"], _rg_cfg(cfg), h, cache,
+                                         policy, "block/rec")
+        else:
+            a, cache = rglru.forward(bp["rec"], _rg_cfg(cfg), h, cache,
+                                     policy, "block/rec")
+    else:
+        acfg = _attn_cfg(cfg)
+        if mode == "train":
+            a = attention.forward(bp["attn"], acfg, h, positions, policy,
+                                  "block/attn")
+        elif mode == "prefill":
+            a, cache = attention.prefill(bp["attn"], acfg, h, positions,
+                                         cache, policy, "block/attn")
+        else:
+            a, cache = attention.decode_step(bp["attn"], acfg, h, pos,
+                                             cache, policy, "block/attn")
+    x = x + a
+    h = apply_norm(cfg.norm, x, bp["ln2"])
+    f = mlp.forward(bp["mlp"], h, policy, "block/mlp", cfg.act)
+    return x + f, cache
+
+
+def _run(params, cfg: ModelConfig, x, positions, mode, caches, pos):
+    policy = get_policy(cfg.precision_policy)
+    pat, n_triples, n_tail = _pattern(cfg)
+
+    def group_step(h, xs):
+        h = act.batch_seq(h)
+        gp, gc = xs
+        new_gc = {}
+        for i, kind in enumerate(pat):
+            h, nc = _apply_block(gp[f"b{i}"], cfg, kind, h, positions,
+                                 policy, mode, gc[f"b{i}"], pos)
+            new_gc[f"b{i}"] = nc
+        return h, new_gc
+
+    step = group_step
+    if cfg.remat != "none" and mode == "train":
+        step = jax.checkpoint(group_step)
+    x, new_groups = jax.lax.scan(step, x,
+                                 (params["blocks"], caches["groups"]))
+    new_tail = []
+    for i in range(n_tail):
+        x, nc = _apply_block(params["tail"][i], cfg, "rec", x, positions,
+                             policy, mode, caches["tail"][i], pos)
+        new_tail.append(nc)
+    return x, {"groups": new_groups, "tail": new_tail}
+
+
+def _logits(params, cfg, x):
+    w = params["embed"]["w"]
+    logits = jnp.dot(x, w.T.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return act.logits(logits)
+
+
+def train_logits(params, cfg: ModelConfig, tokens):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"]["w"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    caches = init_cache(cfg, b, max_len=s)
+    x, _ = _run(params, cfg, x, positions, "train", caches, None)
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    return _logits(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    from repro.models.losses import fused_chunked_xent
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    b, s = inp.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"]["w"], inp, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    caches = init_cache(cfg, b, max_len=s)
+    x, _ = _run(params, cfg, x, positions, "train", caches, None)
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    mask = batch.get("mask")
+    loss, m = fused_chunked_xent(
+        x, lambda xc: _logits(params, cfg, xc), tgt,
+        mask[:, 1:] if mask is not None else None)
+    return loss, {**m, "aux": jnp.zeros(())}
+
+
+def prefill(params, cfg: ModelConfig, tokens, caches):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"]["w"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    x, new_caches = _run(params, cfg, x, positions, "prefill", caches, None)
+    x = apply_norm(cfg.norm, x[:, -1:], params["final_norm"])
+    return _logits(params, cfg, x)[:, 0], new_caches
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, caches):
+    x = jnp.take(params["embed"]["w"], token, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    x, new_caches = _run(params, cfg, x, pos[:, None], "decode", caches,
+                         pos)
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    return _logits(params, cfg, x)[:, 0], new_caches

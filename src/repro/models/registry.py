@@ -1,0 +1,143 @@
+"""Uniform model API across families + dry-run input specs.
+
+build(cfg) -> ModelAPI with:
+  init(key) -> params
+  loss_fn(params, batch) -> (loss, metrics)      [train]
+  prefill(params, batch, caches) -> (logits, caches)
+  decode_step(params, batch, caches) -> (logits, caches)
+  init_cache(batch_size, max_len) -> caches
+
+input_specs(cfg, shape) -> batch of jax.ShapeDtypeStruct — the dry-run
+stand-ins (weak-type-correct, shardable, no allocation).
+
+Frontend stubs (assignment): seamless frames_len = seq_len // 4 at
+frontend_dim; internvl2 patch embeddings (n_patches, vit_dim) prepended
+to the token sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec, griffin, lm, rwkv, vlm
+
+
+class ModelAPI(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "lm":
+        return ModelAPI(
+            cfg,
+            lambda key: lm.init(key, cfg),
+            lambda p, batch: lm.loss_fn(p, cfg, batch),
+            lambda p, batch, caches: lm.prefill(p, cfg, batch["tokens"],
+                                                caches),
+            lambda p, batch, caches: lm.decode_step(
+                p, cfg, batch["token"], batch["pos"], caches),
+            lambda bsz, max_len: lm.init_cache(cfg, bsz, max_len),
+        )
+    if cfg.family == "rwkv":
+        return ModelAPI(
+            cfg,
+            lambda key: rwkv.init(key, cfg),
+            lambda p, batch: rwkv.loss_fn(p, cfg, batch),
+            lambda p, batch, caches: rwkv.prefill(p, cfg, batch["tokens"],
+                                                  caches),
+            lambda p, batch, caches: rwkv.decode_step(
+                p, cfg, batch["token"], batch["pos"], caches),
+            lambda bsz, max_len: rwkv.init_cache(cfg, bsz, max_len),
+        )
+    if cfg.family == "griffin":
+        return ModelAPI(
+            cfg,
+            lambda key: griffin.init(key, cfg),
+            lambda p, batch: griffin.loss_fn(p, cfg, batch),
+            lambda p, batch, caches: griffin.prefill(
+                p, cfg, batch["tokens"], caches),
+            lambda p, batch, caches: griffin.decode_step(
+                p, cfg, batch["token"], batch["pos"], caches),
+            lambda bsz, max_len: griffin.init_cache(cfg, bsz, max_len),
+        )
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg,
+            lambda key: encdec.init(key, cfg),
+            lambda p, batch: encdec.loss_fn(p, cfg, batch),
+            lambda p, batch, caches: encdec.prefill(
+                p, cfg, batch["tokens"], caches, batch["frames"]),
+            lambda p, batch, state: encdec.decode_step(
+                p, cfg, batch["token"], batch["pos"], state),
+            lambda bsz, max_len: encdec.init_cache(cfg, bsz, max_len),
+        )
+    if cfg.family == "vlm":
+        return ModelAPI(
+            cfg,
+            lambda key: vlm.init(key, cfg),
+            lambda p, batch: vlm.loss_fn(p, cfg, batch),
+            lambda p, batch, caches: vlm.prefill(
+                p, cfg, batch["tokens"], caches, batch["patches"]),
+            lambda p, batch, caches: vlm.decode_step(
+                p, cfg, batch["token"], batch["pos"], caches),
+            lambda bsz, max_len: vlm.init_cache(
+                cfg, bsz, max_len + (cfg.n_patches or 0)),
+        )
+    raise ValueError(cfg.family)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct batch for (arch x shape), per step kind."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    def sds(shp, dt=i32):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s + 1))}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((b, s // 4, cfg.frontend_dim), f32)
+        if cfg.family == "vlm":
+            batch["patches"] = sds((b, cfg.n_patches, cfg.vit_dim), f32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s))}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((b, s // 4, cfg.frontend_dim), f32)
+        if cfg.family == "vlm":
+            batch["patches"] = sds((b, cfg.n_patches, cfg.vit_dim), f32)
+        return batch
+    if shape.kind == "decode":
+        return {"token": sds((b, 1)), "pos": sds((b,))}
+    raise ValueError(shape.kind)
+
+
+def materialize_batch(cfg: ModelConfig, shape: InputShape, seed: int = 0
+                      ) -> Dict[str, jax.Array]:
+    """Concrete random batch matching input_specs (smoke tests)."""
+    specs = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, spec in specs.items():
+        key, k = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            if name == "pos":
+                out[name] = jnp.full(spec.shape, shape.seq_len - 1,
+                                     jnp.int32)
+            else:
+                out[name] = jax.random.randint(k, spec.shape, 0,
+                                               min(cfg.vocab, 1000))
+        else:
+            out[name] = jax.random.normal(k, spec.shape, spec.dtype)
+    return out

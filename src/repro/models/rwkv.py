@@ -1,0 +1,132 @@
+"""RWKV-6 language model (attention-free; long_500k-capable)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import get_policy
+from repro.parallel import act_sharding as act
+from repro.layers import rwkv6
+from repro.layers.common import apply_norm, embed_init, norm_init, softcap
+from repro.layers.mplinear import linear_init
+
+
+def _rwkv_cfg(cfg: ModelConfig) -> rwkv6.RWKVConfig:
+    return rwkv6.RWKVConfig(cfg.d_model, cfg.n_heads, cfg.d_ff)
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kb, kh = jax.random.split(key, 3)
+    rc = _rwkv_cfg(cfg)
+
+    def block_init(bk):
+        k1, = jax.random.split(bk, 1)
+        return {
+            "ln1": norm_init("ln", cfg.d_model, dtype),
+            "ln2": norm_init("ln", cfg.d_model, dtype),
+            "mix": rwkv6.init(k1, rc, dtype),
+        }
+
+    params = {
+        "embed": {"w": embed_init(ke, cfg.padded_vocab, cfg.d_model,
+                                  dtype)},
+        "ln_in": norm_init("ln", cfg.d_model, dtype),
+        "blocks": jax.vmap(block_init)(jax.random.split(kb, cfg.n_layers)),
+        "final_norm": norm_init("ln", cfg.d_model, dtype),
+        "lm_head": linear_init(kh, cfg.d_model, cfg.padded_vocab, False,
+                               dtype),
+    }
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0,
+               dtype=jnp.bfloat16):
+    """State is O(1) in sequence length (max_len unused)."""
+    rc = _rwkv_cfg(cfg)
+    s = rwkv6.init_state(batch, rc, jnp.dtype(cfg.compute_dtype))
+    return rwkv6.RWKVState(*(jnp.broadcast_to(a, (cfg.n_layers,) + a.shape)
+                             for a in s))
+
+
+def _run(params, cfg: ModelConfig, x, states, single_step: bool):
+    policy = get_policy(cfg.precision_policy)
+    rc = _rwkv_cfg(cfg)
+
+    def step(carry, xs):
+        h = act.batch_seq(carry)
+        bp, st = xs
+        hn = apply_norm("ln", h, bp["ln1"])
+        if single_step:
+            a, st = rwkv6.time_mix_step(bp["mix"], rc, hn, st, policy,
+                                        "block/mix")
+        else:
+            a, st = rwkv6.time_mix(bp["mix"], rc, hn, st, policy,
+                                   "block/mix")
+        h = h + a
+        hn = apply_norm("ln", h, bp["ln2"])
+        c, st = rwkv6.channel_mix(bp["mix"], rc, hn, st, policy,
+                                  "block/mix", single_step=single_step)
+        return h + c, st
+
+    fn = step
+    if cfg.remat != "none" and not single_step:
+        fn = jax.checkpoint(step)
+    x, new_states = jax.lax.scan(fn, x, (params["blocks"], states))
+    return x, new_states
+
+
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    return apply_norm("ln", x, params["ln_in"])
+
+
+def _head(params, cfg, x):
+    logits = jnp.dot(x, params["lm_head"]["w"].astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return act.logits(logits)
+
+
+def train_logits(params, cfg: ModelConfig, tokens):
+    x = _embed(params, cfg, tokens)
+    states = init_cache(cfg, tokens.shape[0])
+    x, _ = _run(params, cfg, x, states, single_step=False)
+    x = apply_norm("ln", x, params["final_norm"])
+    return _head(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    from repro.models.losses import fused_chunked_xent
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x = _embed(params, cfg, inp)
+    states = init_cache(cfg, inp.shape[0])
+    x, _ = _run(params, cfg, x, states, single_step=False)
+    x = apply_norm("ln", x, params["final_norm"])
+    mask = batch.get("mask")
+    loss, m = fused_chunked_xent(
+        x, lambda xc: _head(params, cfg, xc), tgt,
+        mask[:, 1:] if mask is not None else None)
+    return loss, {**m, "aux": jnp.zeros(())}
+
+
+def prefill(params, cfg: ModelConfig, tokens, states):
+    x = _embed(params, cfg, tokens)
+    x, new_states = _run(params, cfg, x, states, single_step=False)
+    x = apply_norm("ln", x[:, -1:], params["final_norm"])
+    return _head(params, cfg, x)[:, 0], new_states
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, states):
+    x = _embed(params, cfg, token)
+    x, new_states = _run(params, cfg, x, states, single_step=True)
+    x = apply_norm("ln", x, params["final_norm"])
+    return _head(params, cfg, x)[:, 0], new_states

@@ -1,0 +1,90 @@
+"""InternVL2-style VLM: stub vision frontend + decoder-LM backbone.
+
+Per the assignment the modality frontend is a STUB — ``input_specs()``
+provides precomputed patch embeddings (B, n_patches, vit_dim). An MLP
+projector maps them into the LM embedding space; the sequence is
+[patch embeddings ; token embeddings], loss/logits over token positions.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import get_policy
+from repro.layers.common import apply_norm
+from repro.layers.mplinear import linear_init, mp_linear
+from repro.models import lm as lm_model
+
+
+def init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    params = lm_model.init(k1, cfg)
+    params["projector"] = {
+        "fc1": linear_init(k2, cfg.vit_dim, cfg.d_model, True, dtype),
+        "fc2": linear_init(k3, cfg.d_model, cfg.d_model, True, dtype),
+    }
+    return params
+
+
+def _project(params, cfg: ModelConfig, patches):
+    policy = get_policy(cfg.precision_policy)
+    x = patches.astype(jnp.dtype(cfg.compute_dtype))
+    x = mp_linear(params["projector"]["fc1"], x,
+                  policy.spec_for("projector/fc1"))
+    x = jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+    return mp_linear(params["projector"]["fc2"], x,
+                     policy.spec_for("projector/fc2"))
+
+
+def _prefix_seq(params, cfg: ModelConfig, tokens, patches):
+    pe = _project(params, cfg, patches)            # (B, P, d)
+    te = lm_model._embed(params, cfg, tokens)      # (B, S, d)
+    return jnp.concatenate([pe, te], axis=1)
+
+
+def train_logits(params, cfg: ModelConfig, tokens, patches):
+    x = _prefix_seq(params, cfg, tokens, patches)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux, _ = lm_model._run_blocks(params, cfg, x, positions, "train")
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    n_p = patches.shape[1]
+    return lm_model._head(params, cfg, x[:, n_p:]), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    from repro.models.losses import fused_chunked_xent
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x = _prefix_seq(params, cfg, inp, batch["patches"])
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux, _ = lm_model._run_blocks(params, cfg, x, positions, "train")
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    n_p = batch["patches"].shape[1]
+    loss, m = fused_chunked_xent(
+        x[:, n_p:], lambda xc: lm_model._head(params, cfg, xc), tgt)
+    return loss + 0.01 * aux, {**m, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    return lm_model.init_cache(cfg, batch, max_len, dtype)
+
+
+def prefill(params, cfg: ModelConfig, tokens, caches, patches):
+    x = _prefix_seq(params, cfg, tokens, patches)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _, new_caches = lm_model._run_blocks(params, cfg, x, positions,
+                                            "prefill", caches=caches)
+    x = apply_norm(cfg.norm, x[:, -1:], params["final_norm"])
+    return lm_model._head(params, cfg, x)[:, 0], new_caches
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, caches):
+    return lm_model.decode_step(params, cfg, token, pos, caches)

@@ -1,0 +1,12 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+)
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.loss_scale import (  # noqa: F401
+    LossScaleState,
+    loss_scale_init,
+    loss_scale_update,
+)

@@ -1,0 +1,44 @@
+"""Dynamic loss scaling for FP16-arithmetic training (paper context:
+FP16 weights/activations with FP32 accumulation, Micikevicius et al.).
+
+Scale doubles every ``growth_interval`` clean steps and halves on a
+non-finite gradient, whose update is skipped."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LossScaleState(NamedTuple):
+    scale: jax.Array          # f32
+    good_steps: jax.Array     # i32
+
+
+def loss_scale_init(initial: float = 2.0 ** 15) -> LossScaleState:
+    return LossScaleState(jnp.float32(initial), jnp.int32(0))
+
+
+def grads_finite(grads) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(grads)
+    fin = jnp.asarray(True)
+    for g in leaves:
+        fin = fin & jnp.isfinite(g.astype(jnp.float32)).all()
+    return fin
+
+
+def loss_scale_update(state: LossScaleState, finite: jax.Array,
+                      growth_interval: int = 2000,
+                      factor: float = 2.0,
+                      min_scale: float = 1.0,
+                      max_scale: float = 2.0 ** 24
+                      ) -> LossScaleState:
+    grow = (state.good_steps + 1) >= growth_interval
+    new_scale = jnp.where(
+        finite,
+        jnp.where(grow, jnp.minimum(state.scale * factor, max_scale),
+                  state.scale),
+        jnp.maximum(state.scale / factor, min_scale))
+    new_good = jnp.where(finite & ~grow, state.good_steps + 1, 0)
+    return LossScaleState(new_scale, new_good)

@@ -1,0 +1,162 @@
+"""Bounded-alignment block-FP compressed collectives (beyond-paper).
+
+The paper's core empirical insight — exponent differences within a group
+of FP values are almost always small (Fig. 9) — applied to the roofline's
+*collective* term: gradients are quantized per block of 256 values to a
+shared max exponent + w-bit aligned mantissas (the exact arithmetic of
+the IPU's EHU + local shift path, reused from core/), all-reduced as
+int8, and dequantized. Cross-pod (DCI) gradient traffic drops ~4x for
+w=8 vs f32.
+
+Semantics: the compressed all-reduce sums *quantized* values, so the
+result equals psum(Q(g)) — an unbiased-ish approximation whose error is
+bounded exactly like Theorem 1 (each value's truncation < 1 ULP of the
+block scale 2^(max_e - w + 1)). ``make_compressed_grad_step`` wires this
+into the train step as a shard_map over the 'pod' axis: within a pod the
+usual SPMD program computes *pod-local* gradients; the explicit pod
+all-reduce is the compressed exchange.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import fp16 as fpmod
+
+BLOCK = 256
+
+
+def blockfp_quantize(x: jax.Array, w: int = 8, block: int = BLOCK):
+    """-> (mant int8, exp int8, orig_len). Per-block shared max exponent
+    (EHU stage 1-2), mantissas aligned to it and truncated to w bits
+    (local shift + truncate), exactly the IPU alignment datapath."""
+    assert 2 <= w <= 8
+    flat = x.astype(jnp.float32).ravel()
+    n = flat.shape[0]
+    pad = -n % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    _, e, m = fpmod.decompose(blocks, fpmod.FP32)  # mag 24 bits
+    sign = jnp.where(blocks < 0, -1, 1).astype(jnp.int32)
+    max_e = jnp.max(jnp.where(m > 0, e, -(1 << 20)), axis=-1,
+                    keepdims=True)
+    max_e = jnp.maximum(max_e, fpmod.FP32.min_exp)
+    shift = max_e - e
+    # keep top (w-1) magnitude bits of the aligned value
+    mant = m >> jnp.minimum(shift + (24 - (w - 1)), 31)
+    mant = (sign * mant).astype(jnp.int8)
+    return mant, max_e[:, 0].astype(jnp.int8), n
+
+
+def blockfp_dequantize(mant: jax.Array, exp: jax.Array, n: int, w: int,
+                       shape, block: int = BLOCK) -> jax.Array:
+    scale = jnp.exp2(exp.astype(jnp.float32) - (w - 2))[:, None]
+    vals = mant.astype(jnp.float32) * scale
+    return vals.ravel()[:n].reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, w: int = 8) -> jax.Array:
+    """Sum of blockfp-quantized values over a shard_map axis.
+
+    Wire-honest: the cross-participant exchange is an all-gather of INT8
+    mantissas (plus an int32 per-block exponent max) — a psum would put
+    int32 on the wire (int8 sums overflow). For an n-way ring,
+    all-gather(int8) moves (n-1)/n * 1B vs all-reduce(f32) 2(n-1)/n * 4B:
+    ~8x less DCI traffic; the reduce happens locally after the gather."""
+    mant, exp, n = blockfp_quantize(x, w)
+    # align block scales across participants (small int32 collective)
+    gmax = jax.lax.pmax(exp.astype(jnp.int32), axis_name)
+    adj = jnp.minimum(gmax[:, None] - exp.astype(jnp.int32)[:, None], 31)
+    mant_al = (mant.astype(jnp.int32) >> adj).astype(jnp.int8)
+    gathered = jax.lax.all_gather(mant_al, axis_name)   # int8 on the wire
+    total = gathered.astype(jnp.int32).sum(0)
+    return blockfp_dequantize(total, gmax.astype(jnp.int8), n, w, x.shape)
+
+
+def int8_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Simpler per-tensor int8 compressed sum (absmax scale), same
+    wire-honest gather+local-reduce structure."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / 127.0
+    scale = jax.lax.pmax(scale, axis_name)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    gathered = jax.lax.all_gather(q, axis_name)
+    return gathered.astype(jnp.int32).sum(0).astype(x.dtype) * scale
+
+
+def compress_grads(grads, axis_name: str, method: str):
+    if method == "blockfp8":
+        fn = lambda g: compressed_psum(g.astype(jnp.float32), axis_name, 8)
+    elif method == "int8":
+        fn = lambda g: int8_psum(g.astype(jnp.float32), axis_name)
+    else:
+        raise ValueError(method)
+    return jax.tree.map(fn, grads)
+
+
+def make_pod_exchange(mesh: Mesh, grad_shapes, method: str = "blockfp8",
+                      fsdp_spec_fn=None):
+    """Cross-pod gradient-exchange program (hierarchical DP).
+
+    Deployment shape: each pod runs its own SPMD train program producing
+    pod-local gradients (sharded over its data/model axes); this program
+    is the explicit DCI exchange between pods — the only cross-pod
+    collective. Gradients arrive stacked along a leading pod axis
+    (shape (n_pods, ...) sharded P('pod', <fsdp spec>)) and leave
+    pod-averaged and pod-replicated.
+
+    ``method``: 'f32' (baseline all-gather exchange), 'int8', 'blockfp8'.
+    The compressed variants put INT8 on the DCI wire — the paper's
+    bounded-alignment insight applied to the collective roofline term
+    (§Perf). A fully-manual shard_map: every mesh axis is manual, so the
+    XLA partitioner sees only concrete per-device programs.
+    """
+    from repro.parallel import sharding as shd
+
+    n_pods = mesh.shape["pod"]
+    axis_names = set(mesh.axis_names)
+
+    def leaf_exchange(g):
+        g = g / n_pods
+        if method == "f32":
+            gathered = jax.lax.all_gather(g.astype(jnp.float32), "pod")
+            return gathered.sum(0).astype(g.dtype)
+        if method == "int8":
+            return int8_psum(g.astype(jnp.float32), "pod").astype(g.dtype)
+        if method == "blockfp8":
+            return compressed_psum(g.astype(jnp.float32), "pod",
+                                   8).astype(g.dtype)
+        raise ValueError(method)
+
+    def body(grads):
+        return jax.tree.map(leaf_exchange, grads)
+
+    def in_spec_of(path, leaf):
+        # leading pod axis + the per-pod FSDP/TP sharding of the leaf
+        base = (fsdp_spec_fn(path, leaf.shape[1:], mesh) if fsdp_spec_fn
+                else shd.param_pspec(path, leaf.shape[1:], mesh))
+        return P("pod", *base)
+
+    def out_spec_of(path, leaf):
+        base = (fsdp_spec_fn(path, leaf.shape[1:], mesh) if fsdp_spec_fn
+                else shd.param_pspec(path, leaf.shape[1:], mesh))
+        return P(None, *base)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grad_shapes)
+    in_specs = treedef.unflatten(
+        [in_spec_of(jax.tree_util.keystr(kp), l) for kp, l in flat])
+    out_specs = treedef.unflatten(
+        [out_spec_of(jax.tree_util.keystr(kp), l) for kp, l in flat])
+
+    mapped = jax.shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                           out_specs=out_specs,
+                           axis_names=axis_names, check_vma=False)
+    in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), in_specs)
+    out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), out_specs)
+    return jax.jit(mapped, in_shardings=(in_sh,), out_shardings=out_sh), \
+        in_sh, out_sh

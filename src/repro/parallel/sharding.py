@@ -1,0 +1,170 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs for every family.
+
+Scheme (DESIGN.md §5): batch shards over the data axes ('pod','data');
+tensor parallelism over 'model'; parameters and optimizer state are fully
+sharded over BOTH data and model axes (ZeRO-3-style — XLA SPMD inserts
+the per-layer all-gathers under the scan); MoE experts shard over 'model'
+(expert parallelism) when divisible, else d_ff (TP); KV caches shard
+their capacity axis over 'model' (decode_32k memory) and batch over data.
+
+Rules are path + rank driven, validated for divisibility (an axis that
+does not divide the dim is dropped rather than relying on uneven
+GSPMD padding).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Parameter/optimizer sharding axes: FSDP within a pod only —
+    parameters REPLICATE across pods (classic cross-pod DP; the backward
+    gradient all-reduce over 'pod' is the DCI collective that
+    parallel/blockfp.py compresses)."""
+    return tuple(a for a in ("data",) if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, shape, spec: Tuple) -> P:
+    """Drop axes that don't divide their dim; pad spec to rank."""
+    spec = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    out = []
+    for dim, ax in zip(shape, spec):
+        out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0
+                   else None)
+    return P(*out)
+
+
+def param_pspec(path: str, shape, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (path from keystr)."""
+    D = fsdp_axes(mesh)
+    D = D if len(D) > 1 else (D[0] if D else None)
+    M = "model" if "model" in mesh.axis_names else None
+    nd = len(shape)
+
+    def fit(*spec):
+        return _fit(mesh, shape, spec)
+
+    if re.search(r"embed", path):
+        return fit(M, D)
+    if re.search(r"lm_head", path):
+        return fit(D, M) if nd >= 2 else fit(M)
+    # MoE expert stacks: (L, E, d, f) / (L, E, f, d)
+    if re.search(r"moe.*(w_gate|w_up|w_down)", path) and nd == 4:
+        e = shape[1]
+        ep = e % _axis_size(mesh, M) == 0 if M else False
+        if re.search(r"w_down", path):
+            return fit(None, M, None, D) if ep else fit(None, None, M, D)
+        return fit(None, M, D, None) if ep else fit(None, None, D, M)
+    if re.search(r"router", path):
+        return fit(D, None)
+    # attention / rwkv / mlp projections: in -> out
+    if re.search(r"(wq|wk|wv|w_r|w_k|w_v|w_g|w_gate|w_up|c_key|c_rec|"
+                 r"w_in_rnn|w_in_gate|w_a|w_x|frontend_proj|fc1)", path):
+        if path.endswith("['b']") or nd == 1 or (nd == 2 and "blocks" in
+                                                 path and shape[0] < 256):
+            return fit(M)  # bias on the sharded output dim
+        return fit(D, M)
+    if re.search(r"(wo|w_down|c_val|w_out|fc2)", path):
+        if path.endswith("['b']"):
+            return fit(D) if nd == 1 else fit(None, D)
+        return fit(M, D)
+    if re.search(r"w_lora_a", path):
+        return fit(D, None)
+    if re.search(r"w_lora_b", path):
+        return fit(None, M)
+    if re.search(r"\['u'\]", path):
+        return fit(M, None)
+    if re.search(r"conv_w", path):
+        return fit(None, M)
+    if re.search(r"(w_bias|conv_b|b_a|b_x|lambda)", path):
+        return fit(M)
+    # norms, mixing coefficients, scalars: replicated
+    return P()
+
+
+def _tree_with_paths(tree, fn):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [fn(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """NamedSharding tree matching an (abstract) params pytree."""
+    return _tree_with_paths(
+        params_shape,
+        lambda path, leaf: NamedSharding(
+            mesh, param_pspec(path, leaf.shape, mesh)))
+
+
+def opt_shardings(opt_state_shape, mesh: Mesh):
+    """AdamW m/v shard like the params; step is replicated."""
+    return _tree_with_paths(
+        opt_state_shape,
+        lambda path, leaf: NamedSharding(
+            mesh,
+            P() if leaf.ndim == 0 else param_pspec(
+                re.sub(r"^\[[01]\]", "", path), leaf.shape, mesh)))
+
+
+def batch_pspec(path: str, shape, mesh: Mesh) -> P:
+    D = data_axes(mesh)
+    D = D if len(D) > 1 else (D[0] if D else None)
+    return _fit(mesh, shape, (D,) + (None,) * (len(shape) - 1))
+
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    return _tree_with_paths(
+        batch_shape,
+        lambda path, leaf: NamedSharding(
+            mesh, batch_pspec(path, leaf.shape, mesh)))
+
+
+def cache_pspec(path: str, shape, mesh: Mesh) -> P:
+    """KV caches: (G, B, C, H, Dh) -> batch over data, capacity over
+    model. Recurrent states: (L, B, ...) -> batch over data, feature over
+    model. Encoder outputs (B, T, d): batch over data, d over model."""
+    D = data_axes(mesh)
+    D = D if len(D) > 1 else (D[0] if D else None)
+    M = "model" if "model" in mesh.axis_names else None
+    nd = len(shape)
+    if re.search(r"\.k'?\]|\.v'?\]|\['k'\]|\['v'\]", path) or nd == 5:
+        return _fit(mesh, shape, (None, D, M, None, None))
+    if nd == 4:   # rglru conv tails (L, B, W-1, dr)
+        return _fit(mesh, shape, (None, D, None, M))
+    if nd == 3:
+        # encdec decode state: ([0]=kv caches, [1]=enc_out (B, T, d))
+        if re.fullmatch(r"\[1\]", path):
+            return _fit(mesh, shape, (D, None, M))
+        # cache pos (G, B, C) / recurrent states (L, B, d)
+        return _fit(mesh, shape, (None, D, M))
+    if nd == 2:
+        return _fit(mesh, shape, (D, M))
+    return _fit(mesh, shape, (D,))
+
+
+def cache_shardings(cache_shape, mesh: Mesh):
+    return _tree_with_paths(
+        cache_shape,
+        lambda path, leaf: NamedSharding(
+            mesh, cache_pspec(path, leaf.shape, mesh)))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,6 @@
+from repro.quant.quantize import (  # noqa: F401
+    fake_quant,
+    quantize_symmetric,
+    dequantize,
+    calibrate_absmax,
+)

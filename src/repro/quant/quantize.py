@@ -1,0 +1,52 @@
+"""Symmetric per-channel quantization (the software side of INT mode).
+
+The IPU's INT4/INT8 modes consume symmetric two's-complement operands
+with per-output-channel weight scales and per-tensor (or per-token)
+activation scales — the standard scheme the paper's quantization
+references (Jacob et al., Jung et al.) use.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def calibrate_absmax(x: jax.Array, axis=None, pct: float = 1.0) -> jax.Array:
+    """Symmetric scale from the (clipped) absolute maximum."""
+    a = jnp.abs(x.astype(jnp.float32))
+    if pct >= 1.0:
+        m = jnp.max(a, axis=axis, keepdims=axis is not None)
+    else:
+        m = jnp.quantile(a, pct, axis=axis, keepdims=axis is not None)
+    return jnp.maximum(m, 1e-8)
+
+
+def quantize_symmetric(x: jax.Array, bits: int, axis=None,
+                       scale: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """-> (q int8-storage in [-2^(b-1), 2^(b-1)-1], scale f32)."""
+    qmax = (1 << (bits - 1)) - 1
+    if scale is None:
+        scale = calibrate_absmax(x, axis=axis) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    """Quantize-dequantize with a straight-through estimator.
+
+    Forward: the value the INT datapath would compute (up to the exact
+    integer matmul, which is error-free); backward: identity. Keeps the
+    matmul on the MXU and shards like a dense op — the at-scale mode.
+    """
+    def qdq(v):
+        q, s = quantize_symmetric(v, bits, axis=axis)
+        return dequantize(q, s).astype(v.dtype)
+
+    return x + jax.lax.stop_gradient(qdq(x) - x)

@@ -1,0 +1,172 @@
+"""Tests for the cycle-accurate simulator and the area/power model."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import area_power as ap
+from repro.core import simulator as sim
+from repro.core import workloads as wl
+
+
+class TestWorkloads:
+    def test_resnet18_macs(self):
+        # ResNet-18 @224: ~1.81 GMACs (conv+fc)
+        macs = wl.total_macs(wl.resnet18())
+        assert 1.6e9 < macs < 2.0e9, macs
+
+    def test_resnet50_macs(self):
+        # ResNet-50 @224: ~4.1 GMACs
+        macs = wl.total_macs(wl.resnet50())
+        assert 3.6e9 < macs < 4.4e9, macs
+
+    def test_inception_macs(self):
+        # InceptionV3 @299: ~5.7 GMACs
+        macs = wl.total_macs(wl.inception_v3())
+        assert 5.0e9 < macs < 6.4e9, macs
+
+    def test_backward_doubles_work(self):
+        fwd = wl.total_macs(wl.resnet18())
+        bwd = wl.total_macs(wl.resnet18_backward())
+        assert 1.7 * fwd < bwd < 2.1 * fwd
+
+
+class TestSimulator:
+    def test_int_mode_no_data_dependence(self):
+        layer = wl.ConvLayer("x", 64, 64, 28, 28, 3, 3)
+        s = sim.simulate_layer(layer, sim.BIG_TILE, sim.INT4)
+        assert s.cycles == s.ideal_cycles
+        # groups: ceil(64/16)*9 = 36; passes: ceil(64/16)*14*14 = 2744
+        assert s.groups == 36
+        assert s.iterations_per_group == 1
+
+    def test_int8_iterations(self):
+        layer = wl.ConvLayer("x", 64, 64, 28, 28, 3, 3)
+        s4 = sim.simulate_layer(layer, sim.BIG_TILE, sim.INT4)
+        s8 = sim.simulate_layer(layer, sim.BIG_TILE, sim.INT8)
+        assert s8.cycles == pytest.approx(4 * s4.cycles)
+
+    def test_baseline_fp16_single_cycle(self):
+        layer = wl.ConvLayer("x", 64, 64, 28, 28, 3, 3)
+        s = sim.simulate_layer(layer, sim.BASELINE2, sim.FP16)
+        assert s.mc_factor == 1.0
+        assert s.cycles == pytest.approx(9 * sim.simulate_layer(
+            layer, sim.BASELINE2, sim.INT4).cycles)
+
+    def test_narrow_adder_slower(self):
+        layer = wl.ConvLayer("x", 256, 256, 14, 14, 3, 3)
+        cycles = {}
+        for w in (12, 16, 20, 28, 38):
+            tile = dataclasses.replace(sim.BIG_TILE, adder_w=w)
+            cycles[w] = sim.simulate_layer(layer, tile, sim.FP16,
+                                           sim.BACKWARD_SOURCE).cycles
+        assert cycles[12] > cycles[16] > cycles[20] >= cycles[28] >= cycles[38]
+
+    def test_clustering_helps(self):
+        layer = wl.ConvLayer("x", 256, 256, 14, 14, 3, 3)
+        times = []
+        for c in (16, 8, 4, 2, 1):
+            tile = dataclasses.replace(sim.BIG_TILE, adder_w=16,
+                                       cluster_size=c)
+            times.append(sim.simulate_layer(
+                layer, tile, sim.FP16, sim.BACKWARD_SOURCE).cycles)
+        # smaller clusters monotonically (weakly) faster
+        assert all(a >= b * 0.999 for a, b in zip(times, times[1:]))
+
+    def test_skip_empty_partitions_helps(self):
+        layer = wl.ConvLayer("x", 256, 256, 14, 14, 3, 3)
+        base = dataclasses.replace(sim.BIG_TILE, adder_w=12)
+        opt = dataclasses.replace(base, skip_empty_partitions=True)
+        cb = sim.simulate_layer(layer, base, sim.FP16, sim.BACKWARD_SOURCE)
+        co = sim.simulate_layer(layer, opt, sim.FP16, sim.BACKWARD_SOURCE)
+        assert co.cycles <= cb.cycles
+
+    def test_backward_wider_than_forward(self):
+        """Fig. 9: backward exponent diffs are much wider; forward diffs
+        exceed 8 for only ~1% of products."""
+        hf = sim.exponent_diff_histogram(sim.FORWARD_SOURCE, samples=20000)
+        hb = sim.exponent_diff_histogram(sim.BACKWARD_SOURCE, samples=20000)
+        frac_fwd_gt8 = hf[9:].sum()
+        frac_bwd_gt8 = hb[9:].sum()
+        assert frac_fwd_gt8 < 0.05
+        assert frac_bwd_gt8 > 4 * frac_fwd_gt8
+
+    def test_fig8_trend_small_beats_big(self):
+        """8-input MC-IPUs multi-cycle less often than 16-input (paper
+        §4.3): normalized slowdown of the small tile <= big tile."""
+        layers = wl.resnet18()[:6]
+        small = dataclasses.replace(sim.SMALL_TILE, adder_w=16)
+        big = dataclasses.replace(sim.BIG_TILE, adder_w=16)
+        t_small = sim.normalized_exec_time(layers, small, sim.BASELINE1,
+                                           source=sim.BACKWARD_SOURCE)
+        t_big = sim.normalized_exec_time(layers, big, sim.BASELINE2,
+                                         source=sim.BACKWARD_SOURCE)
+        assert t_small <= t_big * 1.05
+
+    def test_network_stats(self):
+        st = sim.simulate_network(wl.resnet18()[:4], sim.BIG_TILE, sim.FP16)
+        assert st.cycles >= st.ideal_cycles
+        assert 1.0 <= st.slowdown < 4.0
+
+
+class TestAreaPower:
+    def test_table1_tolerance(self):
+        model = ap.table1_model()
+        errs = []
+        for d, row in model.items():
+            for wlk, (a, p) in row.items():
+                pa, pp = ap.PAPER_TABLE1[d][wlk]
+                if a is None:
+                    assert pa is None
+                    continue
+                errs.append(abs(a / pa - 1))
+                errs.append(abs(p / pp - 1))
+        assert np.median(errs) < 0.10, np.median(errs)
+        assert max(errs) < 0.30, max(errs)
+
+    def test_fig7_deltas(self):
+        d = ap.fig7_deltas()
+        assert -0.25 < d["adder_38_to_28"] < -0.10  # paper: -17%
+        assert -0.50 < d["adder_38_to_12"] < -0.30  # paper: up to -39%
+        assert 0.30 < d["int_to_mcipu12"] < 0.60    # paper: +43%
+
+    def test_headline_gains(self):
+        h = ap.headline_gains(1.3)
+        assert h["tops_per_mm2_gain"] > 0.35        # paper: up to +46%
+        assert h["tops_per_w_gain"] > 0.50          # paper: up to +63%
+        assert h["tflops_per_mm2_gain"] > 0.08      # paper: up to +25%
+        assert h["tflops_per_w_gain"] > 0.20        # paper: up to +40%
+
+    def test_breakdown_sums_to_one(self):
+        for d in ap.paper_designs().values():
+            assert sum(ap.area_breakdown(d).values()) == pytest.approx(1.0)
+            assert sum(ap.power_breakdown(d).values()) == pytest.approx(1.0)
+
+    def test_adder_tree_dominates_wide_designs(self):
+        """38b adder trees are the overhead the paper attacks: AT+Shft
+        share must shrink when w drops 38 -> 12."""
+        wide = ap.IPUDesign("w", 4, 4, 38, True)
+        narrow = ap.IPUDesign("n", 4, 4, 12, True)
+        bw = ap.area_breakdown(wide)
+        bn = ap.area_breakdown(narrow)
+        assert bw["AT"] + bw["Shft"] > bn["AT"] + bn["Shft"]
+
+    def test_int_only_cheaper(self):
+        fp = ap.IPUDesign("fp", 4, 4, 12, True)
+        nofp = ap.IPUDesign("int", 4, 4, 12, False)
+        assert ap.tile_area_mm2(nofp) < ap.tile_area_mm2(fp)
+        assert ap.tile_power_w(nofp) < ap.tile_power_w(fp)
+
+    def test_throughput_accounting(self):
+        d = ap.paper_designs()["MC-IPU4"]
+        t44 = ap.throughput_tops(d, ap.WORKLOAD_TYPES["4x4"])
+        t88 = ap.throughput_tops(d, ap.WORKLOAD_TYPES["8x8"])
+        assert t44 == pytest.approx(4 * t88)
+        # big-tile baseline: 4 TOPS INT4 (paper §4.1)
+        base = ap.baseline_design(16)
+        assert ap.throughput_tops(base, ap.WORKLOAD_TYPES["4x4"]) == (
+            pytest.approx(4.0, rel=0.05))
+
+    def test_int_unsupported_on_int_designs(self):
+        d = ap.paper_designs()["INT8"]
+        assert ap.throughput_tops(d, ap.WORKLOAD_TYPES["fp16"]) is None

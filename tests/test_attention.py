@@ -1,0 +1,134 @@
+"""Direct attention-layer tests: chunked (flash-style) == dense,
+masking semantics, RoPE relative-position property, ring caches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers import attention
+from repro.layers.attention import AttnConfig
+from repro.layers.common import apply_rope
+
+
+def _mk(b=2, s=256, hq=4, hkv=2, d=16, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    valid = jnp.ones((b, s), bool)
+    return q, k, v, pos, valid
+
+
+CFG = dict(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16)
+
+
+class TestChunkedEqualsDense:
+    @pytest.mark.parametrize("window", [None, 64])
+    @pytest.mark.parametrize("softcap", [None, 30.0])
+    def test_causal(self, window, softcap):
+        cfg = AttnConfig(**CFG, causal=True, window=window,
+                         attn_softcap=softcap,
+                         q_chunk=64, kv_chunk=64, chunk_threshold=1)
+        cfg_dense = dataclasses.replace(cfg, chunk_threshold=1 << 30)
+        q, k, v, pos, valid = _mk()
+        out_c = attention._attend(cfg, q, k, v, pos, pos, valid)
+        out_d = attention._attend(cfg_dense, q, k, v, pos, pos, valid)
+        np.testing.assert_allclose(np.asarray(out_c, np.float32),
+                                   np.asarray(out_d, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bidirectional(self):
+        cfg = AttnConfig(**CFG, causal=False, q_chunk=32, kv_chunk=32,
+                         chunk_threshold=1)
+        cfg_dense = dataclasses.replace(cfg, chunk_threshold=1 << 30)
+        q, k, v, pos, valid = _mk(s=96)
+        out_c = attention._attend(cfg, q, k, v, pos, pos, valid)
+        out_d = attention._attend(cfg_dense, q, k, v, pos, pos, valid)
+        np.testing.assert_allclose(np.asarray(out_c, np.float32),
+                                   np.asarray(out_d, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_ragged_chunk_boundaries(self):
+        """Non-multiple sequence lengths exercise the padding paths."""
+        cfg = AttnConfig(**CFG, causal=True, q_chunk=64, kv_chunk=64,
+                         chunk_threshold=1)
+        cfg_dense = dataclasses.replace(cfg, chunk_threshold=1 << 30)
+        q, k, v, pos, valid = _mk(s=130)
+        out_c = attention._attend(cfg, q, k, v, pos, pos, valid)
+        out_d = attention._attend(cfg_dense, q, k, v, pos, pos, valid)
+        np.testing.assert_allclose(np.asarray(out_c, np.float32),
+                                   np.asarray(out_d, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestMasking:
+    def test_causal_no_future_leak(self):
+        """Perturbing future keys must not change past outputs."""
+        cfg = AttnConfig(**CFG, causal=True, chunk_threshold=1 << 30)
+        q, k, v, pos, valid = _mk(s=32)
+        out1 = attention._attend(cfg, q, k, v, pos, pos, valid)
+        k2 = k.at[:, 20:].add(3.0)
+        v2 = v.at[:, 20:].add(-5.0)
+        out2 = attention._attend(cfg, q, k2, v2, pos, pos, valid)
+        np.testing.assert_allclose(np.asarray(out1[:, :20]),
+                                   np.asarray(out2[:, :20]), rtol=1e-6)
+        assert not np.allclose(np.asarray(out1[:, 20:]),
+                               np.asarray(out2[:, 20:]))
+
+    def test_window_excludes_old_keys(self):
+        cfg = AttnConfig(**CFG, causal=True, window=8,
+                         chunk_threshold=1 << 30)
+        q, k, v, pos, valid = _mk(s=32)
+        out1 = attention._attend(cfg, q, k, v, pos, pos, valid)
+        # keys older than the window for the last query: positions < 24
+        k2 = k.at[:, :16].add(7.0)
+        out2 = attention._attend(cfg, q, k2, v, pos, pos, valid)
+        np.testing.assert_allclose(np.asarray(out1[:, -1]),
+                                   np.asarray(out2[:, -1]), rtol=1e-6)
+
+
+class TestRoPE:
+    def test_relative_property(self):
+        """q_m . k_n depends only on (m - n): shifting both positions by a
+        constant leaves all dot products unchanged."""
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (1, 8, 2, 32), jnp.float32)
+        pos = jnp.arange(8, dtype=jnp.int32)[None]
+        q1 = apply_rope(x, pos)
+        k1 = apply_rope(x, pos)
+        q2 = apply_rope(x, pos + 100)
+        k2 = apply_rope(x, pos + 100)
+        d1 = jnp.einsum("bqhd,bkhd->bhqk", q1, k1)
+        d2 = jnp.einsum("bqhd,bkhd->bhqk", q2, k2)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_partial_rotary_passthrough(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 1, 32))
+        pos = jnp.arange(4, dtype=jnp.int32)[None]
+        out = apply_rope(x, pos, rotary_pct=0.5)
+        np.testing.assert_array_equal(np.asarray(out[..., 16:]),
+                                      np.asarray(x[..., 16:]))
+
+
+class TestRingCache:
+    def test_prefill_matches_scatter_semantics(self):
+        """DUS rotation writes == slot = pos % cap reference."""
+        cfg = AttnConfig(**CFG, causal=True, window=16)
+        b, s, cap = 2, 40, 16
+        params = attention.init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 64),
+                              jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        cache = attention.init_cache(b, cap, cfg, jnp.float32)
+        from repro.core.policy import get_policy
+        _, new_cache = attention.prefill(params, cfg, x, pos, cache,
+                                         get_policy("bf16"), "t")
+        # every surviving position p in [s-cap, s) sits at slot p % cap
+        got_pos = np.asarray(new_cache.pos)
+        for bi in range(b):
+            for p in range(s - cap, s):
+                assert got_pos[bi, p % cap] == p

@@ -1,0 +1,164 @@
+"""Pallas kernel tests: interpret-mode kernels vs pure-jnp oracles.
+
+Integer and emulation kernels are exact — assertions are array_equal
+(bitwise), not allclose. Shapes sweep non-aligned sizes to exercise the
+padding paths.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.ipu import IPUConfig
+from repro.core import exact_ref
+from repro.kernels import ops, ref
+from repro.kernels.mpmm import mp_matmul
+from repro.kernels.qmm import qmm, qmm_packed
+
+
+def _rand_int(rng, shape, bits):
+    return rng.integers(-(1 << (bits - 1)), 1 << (bits - 1),
+                        shape).astype(np.int8)
+
+
+def _rand_f16(rng, shape, dist="normal"):
+    if dist == "wide":
+        x = rng.normal(0, 1, shape) * np.exp2(rng.integers(-10, 12, shape))
+    else:
+        x = rng.normal(0, 1, shape)
+    x = np.asarray(x, np.float16)
+    x[~np.isfinite(x)] = 0
+    return x
+
+
+SHAPES = [(8, 16, 8), (16, 32, 128), (33, 70, 17), (128, 256, 128),
+          (1, 16, 1), (130, 50, 257)]
+
+
+class TestQMM:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_matches_ref(self, shape, bits):
+        m, k, n = shape
+        rng = np.random.default_rng(hash((shape, bits)) % 2**32)
+        a = _rand_int(rng, (m, k), bits)
+        b = _rand_int(rng, (k, n), bits)
+        got = qmm(jnp.asarray(a), jnp.asarray(b), bm=16, bn=16, bk=16)
+        want = ref.qmm_ref(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("shape", [(8, 16, 8), (16, 32, 24),
+                                       (33, 64, 17)])
+    def test_packed_matches_ref(self, shape):
+        m, k, n = shape
+        rng = np.random.default_rng(3)
+        a = _rand_int(rng, (m, k), 8)
+        w = _rand_int(rng, (k, n), 4)
+        packed = ops.pack_int4(jnp.asarray(w))
+        assert packed.shape == (k // 2, n)
+        # pack/unpack roundtrip
+        np.testing.assert_array_equal(
+            np.asarray(ops.unpack_int4(packed)), w)
+        got = qmm_packed(jnp.asarray(a), packed, bm=16, bn=16, bk=16)
+        want = ref.qmm_ref(jnp.asarray(a), jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ops_wrapper_backends_agree(self):
+        rng = np.random.default_rng(5)
+        a = _rand_int(rng, (24, 48), 8)
+        b = _rand_int(rng, (48, 40), 8)
+        p = ops.int8_matmul(jnp.asarray(a), jnp.asarray(b), backend="pallas")
+        x = ops.int8_matmul(jnp.asarray(a), jnp.asarray(b), backend="xla")
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(x))
+
+    def test_quantized_matmul_scales(self):
+        rng = np.random.default_rng(6)
+        a = _rand_int(rng, (8, 32), 8)
+        b = _rand_int(rng, (32, 12), 8)
+        sa = np.abs(rng.normal(1, 0.1, 8)).astype(np.float32)
+        sb = np.abs(rng.normal(1, 0.1, 12)).astype(np.float32)
+        got = ops.quantized_matmul(jnp.asarray(a), jnp.asarray(b),
+                                   jnp.asarray(sa), jnp.asarray(sb))
+        want = (a.astype(np.int64) @ b.astype(np.int64)).astype(np.float64) \
+            * sa[:, None] * sb[None, :]
+        np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                                   rtol=1e-6)
+
+
+MP_CFGS = [
+    IPUConfig(n=16, w=16, accum="fp32"),
+    IPUConfig(n=16, w=28, accum="fp32"),
+    IPUConfig(n=8, w=12, accum="fp16"),
+]
+
+
+class TestMPMM:
+    @pytest.mark.parametrize("cfg", MP_CFGS,
+                             ids=lambda c: f"n{c.n}w{c.w}{c.accum}")
+    @pytest.mark.parametrize("shape", [(8, 16, 8), (16, 48, 24), (5, 33, 7)])
+    @pytest.mark.parametrize("dist", ["normal", "wide"])
+    def test_faithful_kernel_matches_core(self, cfg, shape, dist):
+        m, k, n = shape
+        rng = np.random.default_rng(hash((shape, cfg.w, dist)) % 2**32)
+        a = _rand_f16(rng, (m, k), dist)
+        b = _rand_f16(rng, (k, n), dist)
+        got = mp_matmul(jnp.asarray(a), jnp.asarray(b), cfg, bm=8, bn=8)
+        want = ref.mp_matmul_ref(jnp.asarray(a), jnp.asarray(b), cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("cfg", MP_CFGS,
+                             ids=lambda c: f"n{c.n}w{c.w}{c.accum}")
+    def test_fused_kernel_matches_fused_ref(self, cfg):
+        rng = np.random.default_rng(9)
+        a = _rand_f16(rng, (16, 32), "wide")
+        b = _rand_f16(rng, (32, 24), "wide")
+        got = mp_matmul(jnp.asarray(a), jnp.asarray(b), cfg, bm=8, bn=8,
+                        fused=True)
+        want = ref.mp_matmul_fused_ref(jnp.asarray(a), jnp.asarray(b), cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_xla_backend_faithful_bitexact(self):
+        cfg = IPUConfig(n=16, w=16)
+        rng = np.random.default_rng(11)
+        a = _rand_f16(rng, (12, 40))
+        b = _rand_f16(rng, (40, 9))
+        x = ops.mp_matmul(jnp.asarray(a), jnp.asarray(b), cfg, backend="xla")
+        p = ops.mp_matmul(jnp.asarray(a), jnp.asarray(b), cfg,
+                          backend="pallas")
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(p))
+
+    def test_against_python_oracle_single_output(self):
+        """One output element of the kernel == the Python-int oracle."""
+        cfg = IPUConfig(n=16, w=16, accum="fp32")
+        rng = np.random.default_rng(13)
+        a = _rand_f16(rng, (3, 32), "wide")
+        b = _rand_f16(rng, (32, 2), "wide")
+        got = np.asarray(mp_matmul(jnp.asarray(a), jnp.asarray(b), cfg,
+                                   bm=8, bn=8))
+        for i in range(3):
+            for j in range(2):
+                want = exact_ref.approx_fp_ip(a[i], b[:, j], cfg)
+                assert np.float64(got[i, j]) == np.float64(want)
+
+    def test_fused_more_accurate_than_faithful(self):
+        """The fused datapath truncates once instead of nine times, so its
+        aggregate error vs the exact dot must not be worse."""
+        cfg = IPUConfig(n=16, w=16, accum="fp32")
+        rng = np.random.default_rng(17)
+        a = _rand_f16(rng, (16, 64), "wide")
+        b = _rand_f16(rng, (64, 16), "wide")
+        exact = (np.asarray(a, np.float64) @ np.asarray(b, np.float64))
+        faithful = np.asarray(ops.mp_matmul(jnp.asarray(a), jnp.asarray(b),
+                                            cfg, backend="xla"), np.float64)
+        fused = np.asarray(ops.mp_matmul(jnp.asarray(a), jnp.asarray(b),
+                                         cfg, fused=True, backend="xla"),
+                           np.float64)
+        assert np.abs(fused - exact).sum() <= np.abs(faithful - exact).sum() \
+            * 1.05
+
+    def test_fp16_accum_dtype(self):
+        cfg = IPUConfig(n=8, w=12, accum="fp16")
+        rng = np.random.default_rng(19)
+        a = _rand_f16(rng, (4, 16))
+        b = _rand_f16(rng, (16, 4))
+        out = mp_matmul(jnp.asarray(a), jnp.asarray(b), cfg, bm=8, bn=8)
+        assert out.dtype == jnp.float16

@@ -1,0 +1,122 @@
+"""Build the EXPERIMENTS.md roofline tables from results/dryrun/*.json.
+
+Adds the analytic memory floor to the raw HLO terms: XLA-CPU byte counts
+are unfused upper bounds (every op's operands counted at HBM), so the
+credible memory term lies in [analytic floor, HLO count]; the roofline
+fraction is reported against the HLO-term bound (conservative) with the
+floor shown alongside. Decode steps are scored against their memory
+ideal (weights+cache read once per token) rather than the compute ideal.
+
+    PYTHONPATH=src python tools/roofline_table.py [--dir results/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
+
+
+def analytic_floor_bytes(rec) -> float:
+    """Minimum global HBM traffic: weights touched once per step (x3 for
+    train: read + grad write + opt update read/write approx), plus
+    activations written+read once, plus KV cache traffic for decode."""
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n = cfg.params_count()
+    n_active = cfg.active_params_count()
+    tokens = shape.seq_len * shape.global_batch
+    if rec["kind"] == "train":
+        # fwd+bwd touch active weights ~3x in bf16 + f32 optimizer states
+        w = 3 * n_active * 2 + 3 * n * 4
+        acts = 2 * tokens * cfg.d_model * cfg.n_layers * 2
+        return float(w + acts)
+    if rec["kind"] == "prefill":
+        w = n_active * 2
+        acts = 2 * tokens * cfg.d_model * cfg.n_layers * 2
+        return float(w + acts)
+    # decode: weights + cache read per token
+    cache = rec.get("memory", {}).get("argument_size_in_bytes", 0) \
+        * rec.get("chips", 1)
+    return float(n_active * 2 + cache * 0.5)
+
+
+def load(dirpath):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def enrich(rec):
+    r = rec.get("roofline")
+    if not r:
+        return None
+    chips = rec["chips"]
+    floor = analytic_floor_bytes(rec)
+    mem_floor_s = floor / chips / HBM_BW
+    ideal_compute_s = r["model_flops"] / chips / PEAK_FLOPS
+    ideal_s = max(ideal_compute_s, mem_floor_s)
+    bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    out = dict(r)
+    out["mem_floor_s"] = mem_floor_s
+    out["ideal_s"] = ideal_s
+    out["fraction"] = min(ideal_s / bound_s, 1.0) if bound_s else 0.0
+    out["fits_16gb"] = rec.get("fits_16gb")
+    out["per_device_gb"] = (rec.get("per_device_bytes", 0) or 0) / 1e9
+    out["compile_s"] = rec.get("compile_s")
+    out["coll_by_op"] = rec.get("collectives", {}).get("by_op", {})
+    return out
+
+
+def fmt_row(e):
+    return (f"| {e['arch']} | {e['shape']} | {e['mesh']} "
+            f"| {e['compute_s']*1e3:9.2f} | {e['memory_s']*1e3:9.2f} "
+            f"| {e['mem_floor_s']*1e3:9.2f} | {e['collective_s']*1e3:9.2f} "
+            f"| {e['bottleneck']:10s} | {e['fraction']:.3f} "
+            f"| {e['flops_ratio']:.2f} | {e['per_device_gb']:.2f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    header = ("| arch | shape | mesh | compute ms | memHLO ms | memFloor ms"
+              " | coll ms | bottleneck | frac | MODEL/HLO | GB/dev |")
+    sep = "|" + "---|" * 11
+    print(header)
+    print(sep)
+    rows = []
+    for rec in recs:
+        if rec.get("status") != "ok":
+            continue
+        e = enrich(rec)
+        if e:
+            rows.append(e)
+            print(fmt_row(e))
+    # summary stats
+    ok = [e for e in rows if e["mesh"] == "pod16x16"]
+    worst = sorted(ok, key=lambda e: e["fraction"])[:3]
+    collb = sorted(ok, key=lambda e: -e["collective_s"])[:3]
+    print("\nworst roofline fractions (single-pod):",
+          [(e["arch"], e["shape"], round(e["fraction"], 3))
+           for e in worst])
+    print("most collective-heavy:",
+          [(e["arch"], e["shape"], f"{e['collective_s']*1e3:.1f}ms")
+           for e in collb])
+    misfits = [e for e in rows if e["fits_16gb"] is False]
+    print("cells exceeding 16GB/device:",
+          [(e["arch"], e["shape"], e["mesh"], round(e["per_device_gb"], 1))
+           for e in misfits])
+
+
+if __name__ == "__main__":
+    main()
