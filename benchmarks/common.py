@@ -1,11 +1,26 @@
-"""Shared benchmark utilities: timing + result emission."""
+"""Shared benchmark utilities: timing, result emission, engine CLI."""
+import argparse
 import json
 import os
 import time
 
 import numpy as np
 
+from repro import exp
+
 RESULTS_DIR = os.environ.get("BENCH_OUT", "results/bench")
+
+
+def engine_main(run_fn, argv=None, doc=None):
+    """Shared entry point of every sweep-backed benchmark module: parse
+    the engine CLI (--jobs/--no-cache/--cache-dir), run, print the
+    executed/cached counter line."""
+    ap = argparse.ArgumentParser(description=doc)
+    exp.add_cli_args(ap)
+    args = ap.parse_args(argv)
+    engine = exp.EngineConfig.from_args(args)
+    run_fn(engine=engine)
+    print(f"# {engine.total.summary()}")
 
 
 def emit(name: str, payload: dict):

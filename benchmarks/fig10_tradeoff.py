@@ -6,51 +6,51 @@ multi-cycle factors on the forward study cases). NO-OPT = Baseline2.
 
 Paper Pareto: (12,1) and (16,1) on the power-efficiency frontier;
 (16,1) achieving ~+25% TFLOPS/mm2 and ~+46% TOPS/mm2 over NO-OPT.
+
+The mc-factor sweep reuses ``benchmarks.fig8_perf:eval_point`` — the
+effective FP16 slowdown of a (tile, precision, cluster) design on
+ResNet-50 forward is the same simulator point fig8 sweeps, so a warm
+fig8 cache already covers the overlap (sw precision 28, matching the
+paper's +25%/+40% FP16 headline: mc factor ~1.2 at the (16,1) point).
 """
-import dataclasses
+from benchmarks.common import emit, engine_main, row
+from repro import exp
+from repro.core.area_power import (FP16, INT4, baseline_design, efficiency,
+                                   optimized_design)
 
-from benchmarks.common import emit, row
-from repro.core import simulator as sim
-from repro.core import workloads as wl
-from repro.core.area_power import (FP16, INT4, IPUDesign, baseline_design,
-                                   efficiency)
-from repro.core.simulator import TileConfig
+_WIDTHS = (12, 16, 20, 28)
 
 
-def _mc_factor(n_inputs: int, w: int, cluster: int) -> float:
-    """Effective FP16 slowdown at FP32 accumulation (sw precision 28 —
-    matching the paper's +25%/+40% FP16 headline, which implies an
-    mc factor of ~1.2 at the (16,1) point)."""
-    base = sim.BASELINE1 if n_inputs == 8 else sim.BASELINE2
-    tile = dataclasses.replace(base, adder_w=w, cluster_size=cluster)
-    layers = wl.resnet50()
-    return sim.normalized_exec_time(layers, tile, base,
-                                    source=sim.FORWARD_SOURCE)
+def spec() -> exp.SweepSpec:
+    # cluster axis in concrete IPU counts so points are shared with the
+    # fig8 cluster sweep where they coincide
+    return exp.SweepSpec(
+        name="fig10_mc", fn="benchmarks.fig8_perf:eval_point",
+        axes={"n_inputs": [8, 16], "w": list(_WIDTHS),
+              "cluster": [1, 4, 32, 64]},
+        fixed={"case": "resnet50_fwd", "skip_empty": False},
+        filters=[lambda p: p["cluster"] in (1, 4)
+                 or p["cluster"] == 4 * p["n_inputs"]])
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, engine: exp.EngineConfig = None):
+    engine = engine or exp.EngineConfig()
+    res, _ = exp.run_sweep(spec(), engine)
     results = {}
-    for n_inputs in (8, 16):
-        tile = TileConfig() if n_inputs == 16 else dataclasses.replace(
-            TileConfig(), c_unroll=8, k_unroll=8)
-        points = [(w, c) for w in (12, 16, 20, 28)
-                  for c in (1, 4, tile.ipus_per_tile)]
-        for (w, c) in points:
-            mc = _mc_factor(n_inputs, w, c)
-            d = IPUDesign(f"mc{w}c{c}", 4, 4, w, True,
-                          dataclasses.replace(tile, adder_w=w,
-                                              cluster_size=c),
-                          cluster_size=c, fp_mc_factor=mc)
-            a_int, p_int = efficiency(d, INT4)
-            a_fp, p_fp = efficiency(d, FP16)
-            key = f"{n_inputs}in/w{w}c{c}"
-            results[key] = {"tops_mm2": a_int, "tops_w": p_int,
-                            "tflops_mm2": a_fp, "tflops_w": p_fp,
-                            "mc_factor": mc}
-            if verbose:
-                row(f"fig10/{key}", 0.0,
-                    f"TOPS/mm2={a_int:.1f} TFLOPS/mm2={a_fp:.2f} "
-                    f"TOPS/W={p_int:.2f} TFLOPS/W={p_fp:.3f} mc={mc:.2f}")
+    for p, mc in res:
+        kw = p.kwargs
+        n_inputs, w, c = kw["n_inputs"], kw["w"], kw["cluster"]
+        d = optimized_design(n_inputs, w=w, cluster=c, fp_mc_factor=mc)
+        a_int, p_int = efficiency(d, INT4)
+        a_fp, p_fp = efficiency(d, FP16)
+        key = f"{n_inputs}in/w{w}c{c}"
+        results[key] = {"tops_mm2": a_int, "tops_w": p_int,
+                        "tflops_mm2": a_fp, "tflops_w": p_fp,
+                        "mc_factor": mc}
+        if verbose:
+            row(f"fig10/{key}", 0.0,
+                f"TOPS/mm2={a_int:.1f} TFLOPS/mm2={a_fp:.2f} "
+                f"TOPS/W={p_int:.2f} TFLOPS/W={p_fp:.3f} mc={mc:.2f}")
     base = baseline_design(16)
     ab_int, pb_int = efficiency(base, INT4)
     ab_fp, pb_fp = efficiency(base, FP16)
@@ -63,18 +63,20 @@ def run(verbose: bool = True):
         "tops_w_gain": opt["tops_w"] / pb_int - 1,
         "tflops_w_gain": opt["tflops_w"] / pb_fp - 1,
     }
+    results["rows"] = exp.rows_from(res, "fig10_mc")
     emit("fig10_tradeoff", results)
+    if verbose:
+        h = results["headline"]
+        print(f"fig10 headline (16-input (16,1) vs NO-OPT): "
+              f"TOPS/mm2 {h['tops_mm2_gain']:+.0%} (paper +46%), "
+              f"TFLOPS/mm2 {h['tflops_mm2_gain']:+.0%} (paper +25%), "
+              f"TOPS/W {h['tops_w_gain']:+.0%} (paper +63%), "
+              f"TFLOPS/W {h['tflops_w_gain']:+.0%} (paper +40%)")
     return results
 
 
-def main():
-    res = run()
-    h = res["headline"]
-    print(f"fig10 headline (16-input (16,1) vs NO-OPT): "
-          f"TOPS/mm2 {h['tops_mm2_gain']:+.0%} (paper +46%), "
-          f"TFLOPS/mm2 {h['tflops_mm2_gain']:+.0%} (paper +25%), "
-          f"TOPS/W {h['tops_w_gain']:+.0%} (paper +63%), "
-          f"TFLOPS/W {h['tflops_w_gain']:+.0%} (paper +40%)")
+def main(argv=None):
+    engine_main(run, argv, __doc__)
 
 
 if __name__ == "__main__":

@@ -8,6 +8,10 @@ bits against the FP32-CPU (f64 here) reference, over IPU precisions.
 Paper's conclusions to reproduce:
   * FP16 accumulation: errors < 1e-6 and 0 contaminated bits at w >= 16
   * FP32 accumulation: errors < 1e-5 at w >= 26; min contaminated at 27-28
+
+The (accum, dist, w) grid is declared as a ``repro.exp`` sweep; each
+cell draws its inputs from a per-distribution seed so any cell is
+reproducible in isolation (and across worker processes).
 """
 import functools
 
@@ -15,12 +19,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, row, time_fn
+from benchmarks.common import emit, engine_main, row
+from repro import exp
 from repro.core.ipu import IPUConfig, fp16_inner_product_raw
 
 N = 16          # IPU width
 LENGTH = 64     # inner-product length
 SAMPLES = 400   # inner products per cell (median reported)
+
+_DIST_IDS = {"laplace": 1, "normal": 2, "uniform": 3}
 
 
 @functools.lru_cache(maxsize=None)
@@ -33,10 +40,10 @@ def approx_value(a, b, cfg) -> np.ndarray:
     metric isolates the IPU-precision truncation error BEFORE the output
     format rounds it (an FP16-rounded output is never within 1e-6 of the
     reference; the accumulator is)."""
-    acc, exp = _raw_fn(cfg)(jnp.asarray(a), jnp.asarray(b))
+    acc, exp_ = _raw_fn(cfg)(jnp.asarray(a), jnp.asarray(b))
     hi = np.asarray(acc.hi, np.float64)
     lo = np.asarray(acc.lo, np.float64)
-    e = np.asarray(exp, np.int64)
+    e = np.asarray(exp_, np.int64)
     return (hi * 2.0 ** 24 + lo) * np.exp2(np.clip(e, -200, 200) - 30.0)
 
 
@@ -59,40 +66,57 @@ def contaminated_bits(approx: np.ndarray, ref: np.ndarray) -> np.ndarray:
     return np.minimum(out, 32)
 
 
-def run(verbose: bool = True):
-    rng = np.random.default_rng(0)
-    precisions = [8, 10, 12, 14, 16, 20, 22, 24, 26, 27, 28]
+def eval_point(accum: str, dist: str, w: int, n: int = N,
+               length: int = LENGTH, samples: int = SAMPLES,
+               seed: int = 0) -> dict:
+    """One Fig.-3 cell: error metrics of the approximate FP-IP."""
+    rng = np.random.default_rng([seed, _DIST_IDS[dist]])
+    a = np.asarray(draw(rng, dist, (samples, length)), np.float16)
+    b = np.asarray(draw(rng, dist, (samples, length)), np.float16)
+    ref = (a.astype(np.float64) * b.astype(np.float64)).sum(-1)
+    ref32 = ref.astype(np.float32)
+    # w < 10 is modelled as a 10-bit datapath with the software mask at w
+    # (the truncation study of §3.1)
+    cfg = IPUConfig(n=n, w=max(min(w, 28), 10), accum=accum,
+                    sw_precision=w)
+    got = approx_value(a, b, cfg)
+    abs_err = np.abs(got - ref)
+    rel = np.abs(got - ref) / np.maximum(np.abs(ref), 1e-30)
+    cb = contaminated_bits(got, ref32)
+    return {
+        "median_abs_err": float(np.median(abs_err)),
+        "median_rel_err_pct": float(np.median(rel) * 100),
+        "median_contaminated_bits": float(np.median(cb)),
+        "mean_contaminated_bits": float(np.mean(cb)),
+    }
+
+
+PRECISIONS = [8, 10, 12, 14, 16, 20, 22, 24, 26, 27, 28]
+
+
+def spec() -> exp.SweepSpec:
+    return exp.SweepSpec(
+        name="fig3_error", fn="benchmarks.fig3_error:eval_point",
+        axes={"accum": ["fp16", "fp32"],
+              "dist": ["laplace", "normal", "uniform"],
+              "w": PRECISIONS},
+        fixed={"n": N, "length": LENGTH, "samples": SAMPLES, "seed": 0},
+        filters=[lambda p: not (p["accum"] == "fp16" and p["w"] > 16)])
+
+
+def run(verbose: bool = True, engine: exp.EngineConfig = None):
+    engine = engine or exp.EngineConfig()
+    res, _ = exp.run_sweep(spec(), engine)
     results = {}
-    for accum in ("fp16", "fp32"):
-        for dist in ("laplace", "normal", "uniform"):
-            a = np.asarray(draw(rng, dist, (SAMPLES, LENGTH)), np.float16)
-            b = np.asarray(draw(rng, dist, (SAMPLES, LENGTH)), np.float16)
-            ref = (a.astype(np.float64) * b.astype(np.float64)).sum(-1)
-            ref32 = ref.astype(np.float32)
-            for w in precisions:
-                if accum == "fp16" and w > 16:
-                    continue
-                # w < 10 is modelled as a 10-bit datapath with the
-                # software mask at w (the truncation study of §3.1)
-                cfg = IPUConfig(n=N, w=max(min(w, 28), 10), accum=accum,
-                                sw_precision=w)
-                got = approx_value(a, b, cfg)
-                abs_err = np.abs(got - ref)
-                rel = np.abs(got - ref) / np.maximum(np.abs(ref), 1e-30)
-                cb = contaminated_bits(got, ref32)
-                key = f"{accum}/{dist}/w{w}"
-                results[key] = {
-                    "median_abs_err": float(np.median(abs_err)),
-                    "median_rel_err_pct": float(np.median(rel) * 100),
-                    "median_contaminated_bits": float(np.median(cb)),
-                    "mean_contaminated_bits": float(np.mean(cb)),
-                }
-                if verbose:
-                    r = results[key]
-                    row(f"fig3/{key}", 0.0,
-                        f"abs={r['median_abs_err']:.2e} "
-                        f"rel%={r['median_rel_err_pct']:.2e} "
-                        f"cbits={r['median_contaminated_bits']:.1f}")
+    for p, r in res:
+        kw = p.kwargs
+        key = f"{kw['accum']}/{kw['dist']}/w{kw['w']}"
+        results[key] = r
+        if verbose:
+            row(f"fig3/{key}", 0.0,
+                f"abs={r['median_abs_err']:.2e} "
+                f"rel%={r['median_rel_err_pct']:.2e} "
+                f"cbits={r['median_contaminated_bits']:.1f}")
     # paper-claim checks (functional forms; the paper's absolute 1e-6 at
     # w=16 depends on its input scaling — see EXPERIMENTS.md reproduction
     # notes. The operative claims: w=16 error is far below FP16's own
@@ -117,13 +141,15 @@ def run(verbose: bool = True):
             >= results["fp32/normal/w28"]["median_abs_err"]),
     }
     results["claims"] = claims
+    results["rows"] = exp.rows_from(res, "fig3_error")
     emit("fig3_error", results)
+    if verbose:
+        print("fig3 claims:", claims)
     return results
 
 
-def main():
-    res = run()
-    print("fig3 claims:", res["claims"])
+def main(argv=None):
+    engine_main(run, argv, __doc__)
 
 
 if __name__ == "__main__":

@@ -3,50 +3,69 @@
 Columns: INT-only, MC-IPU(12..28), NVDLA-like 38b baseline, for 8- and
 16-input tiles; component categories (FAcc, WBuf, ShCNT, MULT, Shft, AT).
 Also prints the §4.2 deltas the paper calls out.
-"""
-import dataclasses
 
-from benchmarks.common import emit, row
+The variant grid runs through ``repro.exp`` (analytic model — cheap, but
+cached and fanned out like every other sweep for uniformity).
+"""
+from benchmarks.common import emit, engine_main, row
+from repro import exp
 from repro.core.area_power import (IPUDesign, area_breakdown, fig7_deltas,
                                    power_breakdown, tile_area_mm2,
                                    tile_power_w)
-from repro.core.simulator import TileConfig
+from repro.core.simulator import tile_for
 
 
-def run(verbose: bool = True):
+def eval_point(n_inputs: int, w: int, fp: bool) -> dict:
+    """Area/power of one tile variant (fp=False -> INT-only design)."""
+    tile = tile_for(n_inputs)
+    name = f"mc{w}" if fp else "INT"
+    d = IPUDesign(name, 4, 4, w, fp, tile)
+    return {
+        "area_mm2": tile_area_mm2(d),
+        "power_w": tile_power_w(d),
+        "area_breakdown": area_breakdown(d),
+        "power_breakdown": power_breakdown(d),
+    }
+
+
+def spec() -> exp.SweepSpec:
+    return exp.SweepSpec(
+        name="fig7_breakdown", fn="benchmarks.fig7_breakdown:eval_point",
+        axes={"n_inputs": [8, 16], "fp": [False, True],
+              "w": [12, 16, 20, 24, 28, 38]},
+        # the INT column is a single design point per tile width
+        filters=[lambda p: p["fp"] or p["w"] == 12])
+
+
+def run(verbose: bool = True, engine: exp.EngineConfig = None):
+    engine = engine or exp.EngineConfig()
+    res, _ = exp.run_sweep(spec(), engine)
     results = {"deltas": fig7_deltas()}
-    for n_inputs in (8, 16):
-        tile = TileConfig() if n_inputs == 16 else dataclasses.replace(
-            TileConfig(), c_unroll=8, k_unroll=8)
-        variants = {"INT": IPUDesign("INT", 4, 4, 12, False, tile)}
-        for w in (12, 16, 20, 24, 28, 38):
-            variants[f"MC-IPU({w})"] = IPUDesign(f"mc{w}", 4, 4, w, True,
-                                                 tile)
-        for name, d in variants.items():
-            key = f"{n_inputs}in/{name}"
-            results[key] = {
-                "area_mm2": tile_area_mm2(d),
-                "power_w": tile_power_w(d),
-                "area_breakdown": area_breakdown(d),
-                "power_breakdown": power_breakdown(d),
-            }
-            if verbose:
-                ab = results[key]["area_breakdown"]
-                top = max(ab, key=ab.get)
-                row(f"fig7/{key}", 0.0,
-                    f"area={results[key]['area_mm2']:.4f}mm2 "
-                    f"power={results[key]['power_w']:.3f}W top={top}"
-                    f"({ab[top]:.0%})")
+    for p, r in res:
+        kw = p.kwargs
+        name = f"MC-IPU({kw['w']})" if kw["fp"] else "INT"
+        key = f"{kw['n_inputs']}in/{name}"
+        results[key] = r
+        if verbose:
+            ab = r["area_breakdown"]
+            top = max(ab, key=ab.get)
+            row(f"fig7/{key}", 0.0,
+                f"area={r['area_mm2']:.4f}mm2 "
+                f"power={r['power_w']:.3f}W top={top}"
+                f"({ab[top]:.0%})")
+    results["rows"] = exp.rows_from(res, "fig7_breakdown")
     emit("fig7_breakdown", results)
+    if verbose:
+        d = results["deltas"]
+        print(f"fig7 deltas: 38->28 {d['adder_38_to_28']:+.1%} "
+              f"(paper -17%), 38->12 {d['adder_38_to_12']:+.1%} "
+              f"(paper -39%), INT->MC12 {d['int_to_mcipu12']:+.1%} "
+              f"(paper +43%)")
     return results
 
 
-def main():
-    res = run()
-    d = res["deltas"]
-    print(f"fig7 deltas: 38->28 {d['adder_38_to_28']:+.1%} (paper -17%), "
-          f"38->12 {d['adder_38_to_12']:+.1%} (paper -39%), "
-          f"INT->MC12 {d['int_to_mcipu12']:+.1%} (paper +43%)")
+def main(argv=None):
+    engine_main(run, argv, __doc__)
 
 
 if __name__ == "__main__":

@@ -58,14 +58,17 @@ def run(verbose: bool = True):
     results["emulation_overhead_vs_f32"] = (
         results["mpmm_fused_w16"]["us"] / results["f32_matmul"]["us"])
     emit("kernel_bench", results)
+    if verbose:
+        print(f"kernel: fused speedup w16 "
+              f"{results['fused_speedup_w16']:.2f}x, "
+              f"w28 {results['fused_speedup_w28']:.2f}x; emulation "
+              f"overhead vs f32 "
+              f"{results['emulation_overhead_vs_f32']:.1f}x")
     return results
 
 
 def main():
-    res = run()
-    print(f"kernel: fused speedup w16 {res['fused_speedup_w16']:.2f}x, "
-          f"w28 {res['fused_speedup_w28']:.2f}x; emulation overhead vs "
-          f"f32 {res['emulation_overhead_vs_f32']:.1f}x")
+    run()
 
 
 if __name__ == "__main__":

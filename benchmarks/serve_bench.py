@@ -43,15 +43,17 @@ def run(verbose: bool = True):
             row(f"serve/{policy}", dt * 1e6 / max(new_tokens, 1),
                 f"{new_tokens / dt:.1f} tok/s, {ticks} ticks")
     emit("serve_bench", results)
+    if verbose:
+        base = results["bf16"]["tok_per_s"]
+        print("serve: " + ", ".join(
+            f"{k}={v['tok_per_s']:.1f} tok/s "
+            f"({v['tok_per_s']/base:.2f}x bf16)"
+            for k, v in results.items()))
     return results
 
 
 def main():
-    res = run()
-    base = res["bf16"]["tok_per_s"]
-    print("serve: " + ", ".join(
-        f"{k}={v['tok_per_s']:.1f} tok/s ({v['tok_per_s']/base:.2f}x bf16)"
-        for k, v in res.items()))
+    run()
 
 
 if __name__ == "__main__":

@@ -171,6 +171,13 @@ BASELINE1 = dataclasses.replace(SMALL_TILE, adder_w=38)
 BASELINE2 = dataclasses.replace(BIG_TILE, adder_w=38)
 
 
+def tile_for(n_inputs: int) -> TileConfig:
+    """The paper's tile for an IPU input width (16 -> big, 8 -> small)."""
+    if n_inputs not in (8, 16):
+        raise ValueError(f"no paper tile with {n_inputs}-input IPUs")
+    return BIG_TILE if n_inputs == 16 else SMALL_TILE
+
+
 # ------------------------------------------------------------- simulation
 
 @dataclasses.dataclass

@@ -1,0 +1,27 @@
+"""Declarative experiment engine for the paper-reproduction sweeps.
+
+Every figure/table script declares its parameter space as a
+:class:`SweepSpec`, and the engine takes care of the rest:
+
+  * ``sweep``  — axis expansion (cartesian or zipped, with filters) into
+    hashable :class:`ExperimentPoint`s;
+  * ``cache``  — a content-addressed on-disk result store keyed by a
+    stable hash of (eval function, params, code-version salt), so
+    re-running any script only simulates missing points;
+  * ``runner`` — executes points inline or via a process pool
+    (``--jobs``), counts cache hits vs. fresh evaluations, and returns
+    results in spec order so output is byte-identical at any job count.
+
+Entry points share one CLI surface (``--jobs/--no-cache/--cache-dir``)
+via :func:`add_cli_args` / :func:`EngineConfig.from_args`.
+"""
+from repro.exp.cache import ResultCache, code_salt, point_key
+from repro.exp.runner import (EngineConfig, RunReport, add_cli_args,
+                              rows_from, run_sweep)
+from repro.exp.sweep import ExperimentPoint, SweepSpec
+
+__all__ = [
+    "EngineConfig", "ExperimentPoint", "ResultCache", "RunReport",
+    "SweepSpec", "add_cli_args", "code_salt", "point_key", "rows_from",
+    "run_sweep",
+]

@@ -1,0 +1,90 @@
+"""Graceful degradation for property-based tests.
+
+When ``hypothesis`` is installed (the ``[dev]`` extra), this module
+re-exports the real ``given``/``settings``/``strategies``. When it is
+not, a minimal deterministic fallback runs each property over a fixed
+number of seeded pseudo-random examples (plus the bound corners), so the
+suite still exercises the properties instead of failing at collection.
+
+The fallback implements only what this repo's tests use:
+``st.integers``, ``st.sampled_from``, ``st.lists``, and the ``.map`` /
+``.filter`` combinators. It does no shrinking — on failure it reports
+the raw counterexample values in the assertion traceback.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+
+    _FALLBACK_MAX_EXAMPLES = 25  # cap: no shrinking, keep the lane fast
+
+    class _Strategy:
+        def __init__(self, draw, corners=()):
+            self._draw = draw          # (rng) -> value
+            self._corners = tuple(corners)
+
+        def example(self, rng, i):
+            if i < len(self._corners):
+                return self._corners[i]
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)),
+                             [f(c) for c in self._corners])
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(10_000):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate rejected 10k draws")
+            return _Strategy(draw, [c for c in self._corners if pred(c)])
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2 ** 63) if min_value is None else min_value
+            hi = 2 ** 63 if max_value is None else max_value
+            corners = sorted({lo, hi} | ({0} if lo <= 0 <= hi else set()))
+            return _Strategy(lambda rng: rng.randint(lo, hi), corners)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq), seq[:2])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return [elem._draw(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_kw):
+        def deco(f):
+            f._compat_max_examples = max_examples
+            return f
+        return deco
+
+    def given(*strats):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_compat_max_examples",
+                                getattr(f, "_compat_max_examples",
+                                        _FALLBACK_MAX_EXAMPLES)),
+                        _FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(1234)
+                for i in range(n):
+                    vals = [s.example(rng, i) for s in strats]
+                    f(*args, *vals, **kwargs)
+            # keep pytest from treating the property's value parameters
+            # as fixtures (inspect.signature follows __wrapped__)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

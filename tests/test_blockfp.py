@@ -7,7 +7,9 @@ import sys
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="install the [dev] extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.parallel.blockfp import blockfp_dequantize, blockfp_quantize
 

@@ -1,0 +1,231 @@
+"""Unit tests for the repro.exp sweep engine: expansion semantics, cache
+key stability/invalidation, and runner determinism across job counts."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro import exp
+from repro.exp.sweep import encode
+
+
+SQUARE = "repro.exp.smoke:square"
+
+
+# ------------------------------------------------------------- expansion
+
+class TestSweepExpansion:
+    def test_cartesian_order_last_axis_fastest(self):
+        spec = exp.SweepSpec("s", SQUARE, axes={"a": [1, 2], "b": [10, 20]})
+        combos = [p.kwargs for p in spec.points()]
+        assert combos == [{"a": 1, "b": 10}, {"a": 1, "b": 20},
+                          {"a": 2, "b": 10}, {"a": 2, "b": 20}]
+
+    def test_zip_mode(self):
+        spec = exp.SweepSpec("s", SQUARE, axes={"a": [1, 2, 3],
+                                                "b": [4, 5, 6]},
+                             mode="zip")
+        combos = [p.kwargs for p in spec.points()]
+        assert combos == [{"a": 1, "b": 4}, {"a": 2, "b": 5},
+                          {"a": 3, "b": 6}]
+
+    def test_zip_length_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="zip axes"):
+            exp.SweepSpec("s", SQUARE, axes={"a": [1, 2], "b": [1]},
+                          mode="zip")
+
+    def test_filters_drop_points(self):
+        spec = exp.SweepSpec(
+            "s", SQUARE, axes={"a": [1, 2, 3], "b": [1, 2, 3]},
+            filters=[lambda p: p["a"] < p["b"]])
+        combos = [(p.kwargs["a"], p.kwargs["b"]) for p in spec.points()]
+        assert combos == [(1, 2), (1, 3), (2, 3)]
+
+    def test_fixed_params_on_every_point(self):
+        spec = exp.SweepSpec("s", SQUARE, axes={"a": [1]},
+                             fixed={"b": "x"})
+        assert spec.points()[0].kwargs == {"a": 1, "b": "x"}
+
+    def test_swept_and_fixed_overlap_rejected(self):
+        with pytest.raises(ValueError, match="both swept and fixed"):
+            exp.SweepSpec("s", SQUARE, axes={"a": [1]}, fixed={"a": 2})
+
+    def test_unencodable_axis_value_rejected_eagerly(self):
+        spec = exp.SweepSpec("s", SQUARE, axes={"a": [object()]})
+        with pytest.raises(TypeError, match="canonically encode"):
+            spec.points()
+
+    def test_encode_distinguishes_types(self):
+        assert encode(True) != encode(1)
+        assert encode((1, 2)) != encode([1, 2])
+        assert encode(1.0) != encode(1)
+
+    def test_encode_distinguishes_mapping_key_types(self):
+        assert encode({1: "v"}) != encode({"1": "v"})
+        assert encode({True: "v"}) != encode({1: "v"})
+        # mixed key types still sort deterministically
+        assert encode({1: "a", "x": "b"}) == encode({"x": "b", 1: "a"})
+
+    def test_encode_normalizes_numpy_scalars(self):
+        import numpy as np
+        assert encode(np.float64(1.5)) == encode(1.5)
+        assert encode(np.int64(3)) == encode(3)
+        assert encode(np.bool_(True)) == encode(True)
+
+    def test_encode_frozen_dataclass(self):
+        from repro.core.simulator import TileConfig
+        a = encode(TileConfig())
+        b = encode(TileConfig(adder_w=16))
+        assert a != b
+        assert a == encode(TileConfig())
+
+
+# ----------------------------------------------------------------- cache
+
+def _point(**params):
+    spec = exp.SweepSpec("s", SQUARE,
+                         axes={k: [v] for k, v in params.items()})
+    return spec.points()[0]
+
+
+class TestCache:
+    def test_key_stable_across_processes(self):
+        p = _point(x=3)
+        here = exp.point_key(p, salt="fixed")
+        prog = (
+            "from repro import exp\n"
+            "from repro.exp.sweep import ExperimentPoint\n"
+            "p = ExperimentPoint(%r, (('x', 3),))\n"
+            "print(exp.point_key(p, salt='fixed'))\n" % SQUARE)
+        out = subprocess.run([sys.executable, "-c", prog],
+                             capture_output=True, text=True, check=True)
+        assert out.stdout.strip() == here
+
+    def test_key_independent_of_param_order(self):
+        a = exp.ExperimentPoint(SQUARE, (("x", 1), ("y", 2)))
+        b = exp.ExperimentPoint(SQUARE, (("y", 2), ("x", 1)))
+        assert exp.point_key(a, "s") == exp.point_key(b, "s")
+
+    def test_key_changes_with_salt_fn_and_params(self):
+        p = _point(x=3)
+        base = exp.point_key(p, salt="a")
+        assert exp.point_key(p, salt="b") != base
+        assert exp.point_key(_point(x=4), salt="a") != base
+        q = exp.ExperimentPoint("other.mod:fn", p.params)
+        assert exp.point_key(q, salt="a") != base
+
+    def test_roundtrip_and_salt_invalidation(self, tmp_path):
+        cache = exp.ResultCache(str(tmp_path), salt="v1")
+        p = _point(x=5)
+        assert cache.get(p) == (False, None)
+        cache.put(p, {"v": 25})
+        assert cache.get(p) == (True, {"v": 25})
+        # bumping the code-version salt orphans the old entry
+        stale = exp.ResultCache(str(tmp_path), salt="v2")
+        assert stale.get(p) == (False, None)
+
+    def test_corrupt_entry_is_a_miss(self, tmp_path):
+        cache = exp.ResultCache(str(tmp_path), salt="v1")
+        p = _point(x=5)
+        cache.put(p, 25)
+        path = cache._path(exp.point_key(p, "v1"))
+        with open(path, "w") as f:
+            f.write("{not json")
+        assert cache.get(p) == (False, None)
+
+    def test_default_salt_is_deterministic(self):
+        assert exp.code_salt() == exp.code_salt()
+        assert len(exp.code_salt()) == 16
+
+    def test_eval_module_edit_invalidates_key(self, tmp_path, monkeypatch):
+        from repro.exp import cache as cache_mod
+        mod = tmp_path / "exp_tmp_eval_mod.py"
+        mod.write_text("def f(x):\n    return x\n")
+        monkeypatch.syspath_prepend(str(tmp_path))
+        p = exp.ExperimentPoint("exp_tmp_eval_mod:f", (("x", 1),))
+        cache_mod._module_salt.cache_clear()
+        k1 = exp.point_key(p, salt="s")
+        mod.write_text("def f(x):\n    return x + 1\n")
+        cache_mod._module_salt.cache_clear()
+        assert exp.point_key(p, salt="s") != k1
+
+
+# ---------------------------------------------------------------- runner
+
+def _spec(n=6):
+    return exp.SweepSpec("sq", SQUARE, axes={"x": list(range(n))})
+
+
+class TestRunner:
+    def test_inline_run_and_counters(self, tmp_path):
+        eng = exp.EngineConfig(jobs=1, cache=exp.ResultCache(str(tmp_path)))
+        res, rep = exp.run_sweep(_spec(), eng)
+        assert [v for _, v in res] == [0, 1, 4, 9, 16, 25]
+        assert (rep.n_points, rep.n_cached, rep.n_executed) == (6, 0, 6)
+
+    def test_warm_cache_executes_zero(self, tmp_path):
+        cache = exp.ResultCache(str(tmp_path))
+        exp.run_sweep(_spec(), exp.EngineConfig(cache=cache))
+        res, rep = exp.run_sweep(_spec(), exp.EngineConfig(cache=cache))
+        assert rep.n_executed == 0
+        assert rep.n_cached == 6
+        assert [v for _, v in res] == [0, 1, 4, 9, 16, 25]
+
+    def test_partial_cache_executes_only_misses(self, tmp_path):
+        cache = exp.ResultCache(str(tmp_path))
+        exp.run_sweep(_spec(3), exp.EngineConfig(cache=cache))
+        _, rep = exp.run_sweep(_spec(6), exp.EngineConfig(cache=cache))
+        assert (rep.n_cached, rep.n_executed) == (3, 3)
+
+    def test_no_cache_mode(self, tmp_path):
+        eng = exp.EngineConfig(cache=None)
+        _, rep = exp.run_sweep(_spec(), eng)
+        assert rep.n_executed == 6
+
+    @pytest.mark.parametrize("jobs", [2, 4])
+    def test_parallel_matches_serial_byte_identical(self, jobs):
+        spec = exp.SweepSpec(
+            "smoke", "repro.exp.smoke:eval_point",
+            axes={"w": [12, 16], "cluster": [1, 4]},
+            fixed={"seed": 0, "source": "forward"})
+        serial, _ = exp.run_sweep(spec, exp.EngineConfig(jobs=1, cache=None))
+        par, rep = exp.run_sweep(spec, exp.EngineConfig(jobs=jobs,
+                                                        cache=None))
+        assert rep.n_executed == len(spec.points())
+        s = json.dumps(exp.rows_from(serial, "smoke"), sort_keys=True)
+        p = json.dumps(exp.rows_from(par, "smoke"), sort_keys=True)
+        assert s == p
+
+    def test_parallel_fills_cache_for_serial_rerun(self, tmp_path):
+        cache = exp.ResultCache(str(tmp_path))
+        spec = _spec()
+        _, rep1 = exp.run_sweep(spec, exp.EngineConfig(jobs=3, cache=cache))
+        assert rep1.n_executed == 6
+        _, rep2 = exp.run_sweep(spec, exp.EngineConfig(jobs=1, cache=cache))
+        assert rep2.n_executed == 0
+
+    def test_total_report_accumulates(self, tmp_path):
+        eng = exp.EngineConfig(cache=exp.ResultCache(str(tmp_path)))
+        exp.run_sweep(_spec(3), eng)
+        exp.run_sweep(_spec(6), eng)
+        assert eng.total.n_points == 9
+        assert eng.total.n_executed == 6
+        assert eng.total.n_cached == 3
+
+    def test_parallel_failure_caches_completed_points(self, tmp_path):
+        cache = exp.ResultCache(str(tmp_path))
+        spec = exp.SweepSpec("mixed", "repro.exp.smoke:square_or_raise",
+                             axes={"x": [1, 2, -1, 3]})
+        with pytest.raises(ValueError, match="negative"):
+            exp.run_sweep(spec, exp.EngineConfig(jobs=2, cache=cache))
+        # the three good points were cached despite the failure
+        good = exp.SweepSpec("mixed", "repro.exp.smoke:square_or_raise",
+                             axes={"x": [1, 2, 3]})
+        _, rep = exp.run_sweep(good, exp.EngineConfig(cache=cache))
+        assert rep.n_cached == 3 and rep.n_executed == 0
+
+    def test_bad_fn_reference_rejected(self):
+        from repro.exp.runner import resolve_fn
+        with pytest.raises(ValueError, match="bad fn reference"):
+            resolve_fn("no.colon.here")

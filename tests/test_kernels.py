@@ -8,6 +8,8 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
+pytestmark = [pytest.mark.kernel, pytest.mark.slow]
+
 from repro.core.ipu import IPUConfig
 from repro.core import exact_ref
 from repro.kernels import ops, ref

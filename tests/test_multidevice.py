@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 _MAIN = os.path.join(os.path.dirname(__file__), "_multidev_main.py")
 
 

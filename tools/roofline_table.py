@@ -1,4 +1,5 @@
-"""Build the EXPERIMENTS.md roofline tables from results/dryrun/*.json.
+"""Build the EXPERIMENTS.md roofline tables from results/dryrun/*.json,
+and render sweep-engine benchmark rows from results/bench/*.json.
 
 Adds the analytic memory floor to the raw HLO terms: XLA-CPU byte counts
 are unfused upper bounds (every op's operands counted at HBM), so the
@@ -8,6 +9,7 @@ floor shown alongside. Decode steps are scored against their memory
 ideal (weights+cache read once per token) rather than the compute ideal.
 
     PYTHONPATH=src python tools/roofline_table.py [--dir results/dryrun]
+    PYTHONPATH=src python tools/roofline_table.py --bench [results/bench]
 """
 import argparse
 import glob
@@ -83,11 +85,54 @@ def fmt_row(e):
             f"| {e['flops_ratio']:.2f} | {e['per_device_gb']:.2f} |")
 
 
+def _flat_value(value):
+    """Scalar-ize a sweep row value for tabular display."""
+    if isinstance(value, dict):
+        return {k: v for k, v in value.items()
+                if isinstance(v, (int, float, bool, str)) or v is None}
+    return {"value": value}
+
+
+def bench_tables(dirpath: str) -> None:
+    """Render the structured sweep rows every repro.exp-backed benchmark
+    emits (payload key 'rows') as one markdown table per sweep."""
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            payload = json.load(f)
+        rows = payload.get("rows")
+        if not rows:
+            continue
+        by_sweep = {}
+        for r in rows:
+            by_sweep.setdefault(r["sweep"], []).append(r)
+        for sweep, srows in by_sweep.items():
+            params = list(srows[0]["params"])
+            metrics = list(_flat_value(srows[0]["value"]))
+            print(f"\n### {sweep} ({os.path.basename(path)})\n")
+            print("| " + " | ".join(params + metrics) + " |")
+            print("|" + "---|" * (len(params) + len(metrics)))
+            for r in srows:
+                vals = [str(r["params"].get(k)) for k in params]
+                flat = _flat_value(r["value"])
+                for m in metrics:
+                    v = flat.get(m)
+                    vals.append(f"{v:.4g}" if isinstance(v, float)
+                                else str(v))
+                print("| " + " | ".join(vals) + " |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--bench", nargs="?", const="results/bench",
+                    default=None, metavar="DIR",
+                    help="render sweep-engine benchmark rows instead of "
+                         "the dryrun roofline table")
     args = ap.parse_args()
+    if args.bench:
+        bench_tables(args.bench)
+        return
     recs = load(args.dir)
     header = ("| arch | shape | mesh | compute ms | memHLO ms | memFloor ms"
               " | coll ms | bottleneck | frac | MODEL/HLO | GB/dev |")
