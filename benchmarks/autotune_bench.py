@@ -1,0 +1,98 @@
+"""Autotune trajectory bench: score the committed serving plan.
+
+Loads the searched ``results/plans/<arch>.json`` artifact (falling back
+to a fresh no-probe search when absent), re-derives its metrics from the
+cached score table, verifies the plan still loads into an executable
+policy, and writes a ``BENCH_autotune.json`` summary row — the series
+the bench trajectory tracks across PRs:
+
+    plan, cycles, TOPS/mm2, TOPS/W, accuracy proxy, frontier size.
+"""
+import os
+
+from benchmarks.common import emit, engine_main, row
+from repro import exp
+from repro.autotune import candidates as cand_mod
+from repro.autotune import search as search_mod
+from repro.autotune.plan import load_plan
+
+PLAN_PATH = os.environ.get("AUTOTUNE_PLAN", "results/plans/qwen2_0_5b.json")
+ARCH = "qwen2-0.5b"
+
+
+def _search_fresh(engine: exp.EngineConfig):
+    """No committed plan yet: run a probe-free search so the bench row
+    still populates (analytic accuracy proxy only)."""
+    from repro.configs import get_config
+    groups = cand_mod.groups_for(get_config(ARCH))
+    table = search_mod.build_scores(
+        ARCH, groups, cand_mod.default_candidates(), engine,
+        seq=1, seed=0, shapes="full", probe=False)
+    return search_mod.search_plan(ARCH, table), table, None
+
+
+def _score_plan(plan, engine: exp.EngineConfig):
+    """Re-derive the committed plan's metrics from the cached table
+    (same eval-point params as the search -> warm cache, 0 executed)."""
+    from repro.configs import get_config, reduced
+    meta = plan.meta
+    shapes = meta.get("shapes", "full")
+    cfg = reduced(plan.arch) if shapes == "reduced" else get_config(plan.arch)
+    groups = [g for g in cand_mod.groups_for(cfg)
+              if g.name in {r.group for r in plan.rules}]
+    cands = []
+    for r in plan.rules:
+        c = cand_mod.canonical(r.mode, w=r.w, sw_precision=r.sw_precision,
+                               cluster=r.cluster)
+        if c not in cands:
+            cands.append(c)
+    table = search_mod.build_scores(
+        plan.arch, groups, cands, engine, seq=meta.get("seq", 1),
+        seed=meta.get("seed", 0), shapes=shapes,
+        probe=meta.get("probe", True))
+    assign = {r.group: cand_mod.canonical(
+        r.mode, w=r.w, sw_precision=r.sw_precision, cluster=r.cluster)
+        for r in plan.rules}
+    return search_mod.plan_metrics(table, assign)
+
+
+def run(verbose: bool = True, engine: exp.EngineConfig = None):
+    engine = engine or exp.EngineConfig()
+    if os.path.exists(PLAN_PATH):
+        plan = load_plan(PLAN_PATH)
+        metrics = _score_plan(plan, engine)
+    else:
+        plan, _, _ = _search_fresh(engine)
+        metrics = plan.metrics
+
+    policy = plan.to_policy()   # the artifact must stay executable
+    summary = {
+        "plan": plan.name,
+        "arch": plan.arch,
+        "source": PLAN_PATH if os.path.exists(PLAN_PATH) else "fresh",
+        "cycles": metrics["cycles"],
+        "ideal_cycles": metrics["ideal_cycles"],
+        "tops_per_mm2": metrics["tops_per_mm2"],
+        "tops_per_w": metrics["tops_per_w"],
+        "acc_proxy": metrics["acc_proxy"],
+        "n_frontier": len(plan.frontier),
+        "n_rules": len(policy.rules),
+        "modes": metrics["modes"],
+    }
+    emit("BENCH_autotune", summary)
+    if verbose:
+        row(f"autotune/{plan.name}", 0.0,
+            f"cycles={metrics['cycles']:.4g} "
+            f"tops_mm2={metrics['tops_per_mm2']:.2f} "
+            f"tops_w={metrics['tops_per_w']:.3f} "
+            f"acc={metrics['acc_proxy']:.3g} "
+            f"frontier={len(plan.frontier)}")
+    return summary
+
+
+def main(argv=None):
+    engine_main(run, argv, __doc__)
+
+
+if __name__ == "__main__":
+    main()

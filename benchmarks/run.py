@@ -18,9 +18,9 @@ from repro import exp
 
 
 def main(argv=None) -> None:
-    from benchmarks import (fig3_error, fig7_breakdown, fig8_perf,
-                            fig9_expdiff, fig10_tradeoff, kernel_bench,
-                            serve_bench, table1)
+    from benchmarks import (autotune_bench, fig3_error, fig7_breakdown,
+                            fig8_perf, fig9_expdiff, fig10_tradeoff,
+                            kernel_bench, serve_bench, table1)
     ap = argparse.ArgumentParser(description=__doc__)
     exp.add_cli_args(ap)
     ap.add_argument("--only", default=None, metavar="NAME",
@@ -29,7 +29,8 @@ def main(argv=None) -> None:
     engine = exp.EngineConfig.from_args(args)
 
     mods = (table1, fig7_breakdown, fig9_expdiff, fig8_perf,
-            fig10_tradeoff, fig3_error, kernel_bench, serve_bench)
+            fig10_tradeoff, fig3_error, autotune_bench, kernel_bench,
+            serve_bench)
     if args.only:
         mods = [m for m in mods if m.__name__.split(".")[-1] == args.only]
         if not mods:

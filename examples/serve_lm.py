@@ -7,7 +7,10 @@ router/head in higher precision, exactly the hybrid scheme the IPU is
 built for. Also reports what the calibrated accelerator model says this
 policy buys in area/power.
 
+A plan searched offline by the precision planner serves directly:
+
     PYTHONPATH=src python examples/serve_lm.py [--policy int4_serving]
+    PYTHONPATH=src python examples/serve_lm.py --plan results/plans/qwen2_0_5b.json
 """
 import argparse
 import dataclasses
@@ -26,17 +29,28 @@ def main():
     ap.add_argument("--policy", default="int4_serving",
                     choices=["bf16", "int8_serving", "int4_serving",
                              "paper_hybrid"])
+    ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                    help="serve under a repro.autotune PrecisionPlan "
+                         "artifact (overrides --policy)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     args = ap.parse_args()
 
+    policy_name = f"plan:{args.plan}" if args.plan else args.policy
     cfg = dataclasses.replace(reduced("qwen2-0.5b"),
-                              precision_policy=args.policy)
+                              precision_policy=policy_name)
     api = registry.build(cfg)
     params = api.init(jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, api, params, batch_slots=args.slots,
                            cache_len=128)
+    if args.plan:
+        from repro.autotune.plan import load_plan
+        plan = load_plan(args.plan)
+        print(f"plan={plan.name} (arch {plan.arch}, "
+              f"{len(plan.frontier)} frontier plans)")
+        for path, mode in sorted(engine.routing_report().items()):
+            print(f"  route {path}: {mode}")
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -50,7 +64,7 @@ def main():
 
     total_new = sum(len(r.tokens) - len(r.prompt)
                     for r in engine.completed.values())
-    print(f"policy={args.policy} requests={args.requests} "
+    print(f"policy={policy_name} requests={args.requests} "
           f"slots={args.slots} ticks={ticks}")
     print(f"generated {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s on CPU)")

@@ -1,0 +1,34 @@
+"""Autotune: the Pareto-frontier precision planner.
+
+Closes the loop from the paper's three cost models to the serving
+stack: enumerate per-layer precision candidates (``candidates``), score
+them on cycles / area-power efficiency / accuracy through the cached
+``repro.exp`` engine (``objectives``), search the joint space
+(``search``), and emit a versioned :class:`PrecisionPlan` artifact
+(``plan``) that ``core.policy`` loads directly via
+``precision_policy="plan:<file>"``.
+
+CLI: ``python -m repro.autotune {search,score,report,smoke}``.
+
+Imports stay lazy (PEP 562) so cache-salt computation and plan loading
+never pull the jax model stack.
+"""
+_LAZY = {
+    "Candidate": "repro.autotune.candidates",
+    "default_candidates": "repro.autotune.candidates",
+    "PlanRule": "repro.autotune.plan",
+    "PrecisionPlan": "repro.autotune.plan",
+    "load_plan": "repro.autotune.plan",
+    "load_policy": "repro.autotune.plan",
+    "build_scores": "repro.autotune.search",
+    "search_plan": "repro.autotune.search",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(name)

@@ -1,0 +1,91 @@
+"""Candidate enumeration: the joint space the planner searches.
+
+A :class:`Candidate` is one per-layer precision option — an operand mode
+(INT4/INT8 quantized, the approximate FP16 IPU datapath, or plain BF16)
+crossed with the MC-IPU configuration that executes it (adder precision
+``w``, software precision ``P``, cluster size; paper §3.2–3.3). INT and
+BF16 candidates are canonicalized to one hardware point each (no
+alignment hardware / wide-adder reference) so the score cache never
+fragments over parameters that cannot change their cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import ProjGroup, projection_groups
+
+# The wide-adder reference point: a 38-bit tree serves any FP16
+# alignment in one cycle (simulator baseline; §4.1).
+WIDE_W = 38
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One per-layer precision option. Hashable, canonically encodable
+    (frozen dataclass of primitives) — usable directly as sweep-axis
+    values and cache-key material."""
+
+    mode: str                 # int4 | int8 | fp16_ipu | bf16
+    w: int = 16               # MC-IPU adder precision
+    sw_precision: int = 28    # software precision P (FP32 accumulation)
+    cluster: int = 1          # intra-tile cluster size (§3.3)
+
+    def __post_init__(self):
+        if self.mode not in ("int4", "int8", "fp16_ipu", "bf16"):
+            raise ValueError(f"unknown candidate mode {self.mode!r}")
+
+    def key(self) -> str:
+        if self.mode in ("int4", "int8", "bf16"):
+            return self.mode
+        return f"{self.mode}_w{self.w}_p{self.sw_precision}_c{self.cluster}"
+
+
+def exact_for(mode: str, w: int) -> bool:
+    """Whether a candidate must execute on the bit-exact kernel path.
+    fp16_ipu below w=28 is *not* approximated by the fp16-cast matmul
+    (§3.1: indistinguishable only at w >= 28), so both the divergence
+    probe and the emitted plan rules route it through kernels.ops —
+    measured accuracy always describes the datapath that serves."""
+    return mode == "fp16_ipu" and w < 28
+
+
+def canonical(mode: str, w: int = 16, sw_precision: int = 28,
+              cluster: int = 1) -> Candidate:
+    """Canonicalize hardware axes that are meaningless for a mode: INT
+    datapaths never align (any w serves them; pin the narrow INT point),
+    and bf16 is the wide-adder single-cycle reference."""
+    if mode in ("int4", "int8"):
+        return Candidate(mode, w=16, sw_precision=28, cluster=1)
+    if mode == "bf16":
+        return Candidate(mode, w=WIDE_W, sw_precision=28, cluster=1)
+    return Candidate(mode, w=w, sw_precision=sw_precision, cluster=cluster)
+
+
+def default_candidates(widths: Sequence[int] = (12, 16, 20, 28),
+                       clusters: Sequence[int] = (1,),
+                       modes: Sequence[str] = ("bf16", "fp16_ipu", "int8",
+                                               "int4"),
+                       ) -> Tuple[Candidate, ...]:
+    """The default per-layer search grid. fp16_ipu expands over the
+    (w, cluster) hardware axes; INT/BF16 contribute one point each."""
+    out: List[Candidate] = []
+    for mode in modes:
+        if mode == "fp16_ipu":
+            for w, c in itertools.product(widths, clusters):
+                out.append(canonical(mode, w=w, cluster=c))
+        else:
+            out.append(canonical(mode))
+    # dedupe, preserving order (canonicalization can collapse points)
+    seen: Dict[Candidate, None] = {}
+    for c in out:
+        seen.setdefault(c)
+    return tuple(seen)
+
+
+def groups_for(cfg: ModelConfig) -> Tuple[ProjGroup, ...]:
+    """The tunable projection groups of an architecture (re-exported so
+    the CLI and search only import this module)."""
+    return projection_groups(cfg)

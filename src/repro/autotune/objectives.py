@@ -1,0 +1,189 @@
+"""The three scoring axes of the planner, as cacheable eval points.
+
+Every function here is a module-level ``repro.exp`` eval target
+(referenced as ``"repro.autotune.objectives:<fn>"``): primitives in,
+JSON-serializable dict out, and an *explicit* ``seed`` parameter that is
+part of the cache key — every sampled quantity (simulator exponent
+draws, probe model init, probe tokens) derives from it, so cached scores
+are bitwise identical between ``--jobs N`` and serial runs.
+
+Axes:
+  * ``cycles_point``     — execution cycles of one projection group on
+    the MC-IPU tile (``core.simulator``).
+  * ``efficiency_point`` — TOPS/mm^2 and TOPS/W of the candidate's
+    hardware point on that workload (``core.area_power``).
+  * ``accuracy_point``   — accuracy proxy: the Theorem-1 analytic bound
+    (``core.error_bounds``) plus a fake-quant forward-divergence probe
+    on the real (family-preserving reduced) model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.configs import get_config, reduced
+from repro.core import simulator as sim
+from repro.core.workloads import ConvLayer
+from repro.models.registry import ProjGroup, projection_groups
+
+_TYPES = {"int4": sim.INT4, "int8": sim.INT8, "fp16_ipu": sim.FP16,
+          "bf16": sim.FP16}
+
+
+def _cfg(arch: str, shapes: str):
+    if shapes == "reduced":
+        return reduced(arch)
+    if shapes == "full":
+        return get_config(arch)
+    raise ValueError(f"shapes must be 'full' or 'reduced', got {shapes!r}")
+
+
+def _group(arch: str, group: str, shapes: str) -> ProjGroup:
+    cfg = _cfg(arch, shapes)
+    for g in projection_groups(cfg):
+        if g.name == group:
+            return g
+    raise KeyError(f"{arch} has no projection group {group!r}")
+
+
+def _layer(g: ProjGroup, seq: int) -> ConvLayer:
+    # a matmul is the 1x1-conv special case: C=d_in, K=d_out, Ho=tokens
+    return ConvLayer(g.name, c=g.d_in, k=g.d_out, ho=seq, wo=1, r=1, s=1,
+                     count=g.count)
+
+
+def _tile(mode: str, w: int, sw_precision: int,
+          cluster: Optional[int]) -> sim.TileConfig:
+    return dataclasses.replace(sim.BIG_TILE, adder_w=w,
+                               cluster_size=cluster,
+                               sw_precision=sw_precision)
+
+
+def cycles_point(arch: str, group: str, mode: str, w: int,
+                 sw_precision: int, cluster: int, seq: int = 1,
+                 seed: int = 0, shapes: str = "full") -> Dict:
+    """Cycles for one projection group under one candidate."""
+    g = _group(arch, group, shapes)
+    layer = _layer(g, seq)
+    stats = sim.simulate_network(
+        [layer], _tile(mode, w, sw_precision, cluster), _TYPES[mode],
+        sim.FORWARD_SOURCE, seed=seed)
+    return {"cycles": stats.cycles, "ideal_cycles": stats.ideal_cycles,
+            "mc_factor": stats.slowdown, "macs": layer.macs}
+
+
+def efficiency_point(arch: str, group: str, mode: str, w: int,
+                     sw_precision: int, cluster: int, seq: int = 1,
+                     seed: int = 0, shapes: str = "full") -> Dict:
+    """TOPS/mm^2 and TOPS/W of the candidate's MC-IPU hardware point on
+    this group's workload (area model needs the simulator-derived mean
+    alignment cycles per iteration, so this point samples them too)."""
+    from repro.core import area_power as ap
+    g = _group(arch, group, shapes)
+    types = _TYPES[mode]
+    tile = _tile(mode, w, sw_precision, cluster)
+    mc = 1.0
+    if types.is_fp and w < tile.sw_precision:
+        stats = sim.simulate_network([_layer(g, seq)], tile, types,
+                                     sim.FORWARD_SOURCE, seed=seed)
+        mc = stats.slowdown
+    design = ap.IPUDesign(
+        f"plan_{mode}_w{w}", mult_a=4, mult_b=4, adder_w=w,
+        fp_support=True, tile=tile,
+        cluster_size=cluster if types.is_fp else None, fp_mc_factor=mc)
+    tops = ap.throughput_tops(design, types)
+    tops_mm2, tops_w = ap.efficiency(design, types)
+    return {"tops": tops, "tops_per_mm2": tops_mm2, "tops_per_w": tops_w,
+            "mc_factor": mc}
+
+
+# --------------------------------------------------------------- accuracy
+
+def _analytic_proxy(mode: str, w: int, sw_precision: int) -> float:
+    """First-order relative-error scale of the datapath (dimensionless)."""
+    if mode == "bf16":
+        # bf16's own 8-bit mantissa rounding noise
+        return 2.0 ** -8 / math.sqrt(12.0)
+    if mode in ("int4", "int8"):
+        bits = 4 if mode == "int4" else 8
+        # symmetric absmax fake-quant: step ~ 2^(1-bits), RMS step/sqrt(12)
+        return 2.0 ** (1 - bits) / math.sqrt(12.0)
+    # fp16_ipu: Theorem-1 FP-IP bound at unit product scale, relative to
+    # the n-product sum, plus fp16's own mantissa noise floor
+    from repro.core.error_bounds import fp_ip_bound
+    n = 16
+    bound = float(fp_ip_bound(min(w, sw_precision), max_exp=0, n=n)) / n
+    return bound + 2.0 ** -11 / math.sqrt(12.0)
+
+
+def _probe_policy_name(arch: str, group: str, mode: str, w: int,
+                       sw_precision: int) -> str:
+    return f"_probe/{arch}/{group}/{mode}/w{w}/p{sw_precision}"
+
+
+def divergence_probe(arch: str, group: str, mode: str, w: int,
+                     sw_precision: int, seed: int = 0,
+                     probe_batch: int = 2, probe_seq: int = 16) -> float:
+    """Mean token KL between the bf16 reference forward and a forward
+    with *only this group* flipped to the candidate, on the
+    family-preserving reduced model — a measured, end-to-end sensitivity
+    signal the analytic bound cannot provide."""
+    import jax
+    import jax.numpy as jnp
+    from repro.autotune.candidates import exact_for
+    from repro.autotune.plan import PlanRule
+    from repro.configs.base import InputShape
+    from repro.core.policy import (POLICIES, PrecisionPolicy,
+                                   PrecisionSpec, register_policy)
+    from repro.models import registry
+
+    cfg = reduced(arch)
+    g = _group(arch, group, "reduced")
+    rule = PlanRule(group=g.name, pattern=g.pattern, mode=mode, w=w,
+                    sw_precision=sw_precision, exact=exact_for(mode, w))
+    name = _probe_policy_name(arch, group, mode, w, sw_precision)
+    register_policy(PrecisionPolicy(
+        name, rules=((g.pattern, rule.spec()),),
+        default=PrecisionSpec("bf16")))
+
+    def logits_for(policy_name: str):
+        c = dataclasses.replace(cfg, precision_policy=policy_name)
+        api = registry.build(c)
+        params = api.init(jax.random.PRNGKey(seed))
+        shape = InputShape("probe", probe_seq, probe_batch, "prefill")
+        batch = registry.materialize_batch(c, shape, seed=seed)
+        caches = api.init_cache(probe_batch, probe_seq)
+        logits, _ = api.prefill(params, batch, caches)
+        return jnp.asarray(logits, jnp.float32)
+
+    try:
+        base = jax.nn.log_softmax(logits_for("bf16"), axis=-1)
+        cand = jax.nn.log_softmax(logits_for(name), axis=-1)
+    finally:
+        # probe policies are transient: never leave them resolvable (or
+        # accumulating) in the global registry
+        POLICIES.pop(name, None)
+    kl = jnp.sum(jnp.exp(base) * (base - cand), axis=-1)
+    return float(jnp.mean(kl))
+
+
+def accuracy_point(arch: str, group: str, mode: str, w: int,
+                   sw_precision: int, seed: int = 0,
+                   probe: bool = True) -> Dict:
+    """Accuracy proxy of one candidate on one group: analytic bound +
+    (optionally) the measured forward-divergence probe. ``acc_proxy`` is
+    what the search minimizes; additive across groups by construction.
+
+    Deliberately takes no ``seq``/``shapes``: the probe always runs the
+    reduced config at its own fixed shape, so those axes must not enter
+    the cache key (they would orphan the expensive model probes)."""
+    bound = _analytic_proxy(mode, w, sw_precision)
+    div = 0.0
+    if probe and mode != "bf16":
+        div = divergence_probe(arch, group, mode, w, sw_precision,
+                               seed=seed)
+    # measured divergence dominates; the analytic bound is a tiebreaker
+    # between candidates the tiny probe cannot distinguish
+    return {"bound_rel": bound, "divergence": div,
+            "acc_proxy": div + 1e-3 * bound}

@@ -1,0 +1,142 @@
+"""PrecisionPlan — the serializable artifact the planner searches for.
+
+A plan is a complete per-layer precision assignment for one architecture:
+an ordered list of (projection-group pattern -> candidate) rules plus a
+default, exactly the shape :class:`repro.core.policy.PrecisionPolicy`
+consumes — ``to_policy()`` is a pure translation, so a plan searched
+offline is what serves traffic (``precision_policy="plan:<file>"``).
+
+The JSON schema is versioned. Besides the selected assignment, the
+artifact carries the searched Pareto frontier (every non-dominated
+assignment with its metrics) so downstream tools can re-select a
+different trade-off point without re-running the search.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from typing import Any, Dict, Tuple
+
+from repro.core.ipu import IPUConfig
+from repro.core.policy import PrecisionPolicy, PrecisionSpec
+
+PLAN_SCHEMA = "precision-plan-v1"
+
+MODES = ("bf16", "fp32", "int8", "int4", "fp16_ipu")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRule:
+    """One plan entry: a projection-group pattern and its candidate.
+
+    ``w``/``sw_precision``/``cluster`` describe the MC-IPU configuration
+    the candidate was scored on; only fp16_ipu rules carry them into the
+    executed PrecisionSpec (INT modes need no alignment hardware).
+    """
+
+    group: str
+    pattern: str
+    mode: str
+    w: int = 16
+    sw_precision: int = 28
+    cluster: int = 1
+    exact: bool = False
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"invalid plan mode {self.mode!r} "
+                             f"(want one of {MODES})")
+
+    def spec(self) -> PrecisionSpec:
+        if self.mode == "fp16_ipu":
+            return PrecisionSpec(
+                "fp16_ipu", exact=self.exact,
+                ipu=IPUConfig(n=16, w=max(self.w, 10),
+                              sw_precision=self.sw_precision))
+        return PrecisionSpec(self.mode, exact=self.exact)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """A versioned, serializable per-layer precision assignment."""
+
+    name: str
+    arch: str
+    rules: Tuple[PlanRule, ...] = ()
+    default_mode: str = "bf16"
+    metrics: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    frontier: Tuple[Dict[str, Any], ...] = ()
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.default_mode not in MODES:
+            raise ValueError(f"invalid default mode {self.default_mode!r}")
+
+    def assignment(self) -> Dict[str, str]:
+        """group name -> mode (compact summary for reports/benches)."""
+        return {r.group: r.mode for r in self.rules}
+
+    def to_policy(self) -> PrecisionPolicy:
+        """The executable policy: first-match-wins rules in plan order,
+        unmatched paths fall through to the default spec."""
+        return PrecisionPolicy(
+            name=self.name,
+            rules=tuple((r.pattern, r.spec()) for r in self.rules),
+            default=PrecisionSpec(self.default_mode),
+        )
+
+    # ------------------------------------------------------ serialization
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "schema": PLAN_SCHEMA,
+            "name": self.name,
+            "arch": self.arch,
+            "default_mode": self.default_mode,
+            "rules": [dataclasses.asdict(r) for r in self.rules],
+            "metrics": self.metrics,
+            "frontier": list(self.frontier),
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_json(cls, obj: Dict[str, Any]) -> "PrecisionPlan":
+        schema = obj.get("schema")
+        if schema != PLAN_SCHEMA:
+            raise ValueError(
+                f"unsupported plan schema {schema!r} (want {PLAN_SCHEMA})")
+        return cls(
+            name=obj["name"],
+            arch=obj["arch"],
+            rules=tuple(PlanRule(**r) for r in obj["rules"]),
+            default_mode=obj.get("default_mode", "bf16"),
+            metrics=obj.get("metrics", {}),
+            frontier=tuple(obj.get("frontier", [])),
+            meta=obj.get("meta", {}),
+        )
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        return path
+
+
+def load_plan(path: str) -> PrecisionPlan:
+    with open(path) as f:
+        return PrecisionPlan.from_json(json.load(f))
+
+
+@functools.lru_cache(maxsize=64)
+def _load_policy_cached(path: str, mtime_ns: int) -> PrecisionPolicy:
+    return load_plan(path).to_policy()
+
+
+def load_policy(path: str) -> PrecisionPolicy:
+    """Plan file -> policy, cached on (path, mtime) so the per-forward
+    ``get_policy`` resolution in the model zoo never re-reads the file."""
+    apath = os.path.abspath(path)
+    return _load_policy_cached(apath, os.stat(apath).st_mtime_ns)

@@ -24,11 +24,30 @@ INT-quantized — is the 'paper_hybrid' preset.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import re
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.ipu import IPUConfig
+
+# When set (via trace_routing), every spec_for resolution appends a
+# (path, mode) record — the hook the plan-routing assertion tests use to
+# observe which datapath each projection actually took.
+_ROUTING_TRACE: Optional[List[Tuple[str, str]]] = None
+
+
+@contextlib.contextmanager
+def trace_routing():
+    """Record every (path, mode) the active policies route while open."""
+    global _ROUTING_TRACE
+    records: List[Tuple[str, str]] = []
+    prev = _ROUTING_TRACE
+    _ROUTING_TRACE = records
+    try:
+        yield records
+    finally:
+        _ROUTING_TRACE = prev
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,10 +74,14 @@ class PrecisionPolicy:
     default: PrecisionSpec = PrecisionSpec("bf16")
 
     def spec_for(self, path: str) -> PrecisionSpec:
-        for pattern, spec in self.rules:
+        spec = self.default
+        for pattern, rule_spec in self.rules:
             if re.search(pattern, path):
-                return spec
-        return self.default
+                spec = rule_spec
+                break
+        if _ROUTING_TRACE is not None:
+            _ROUTING_TRACE.append((path, spec.mode))
+        return spec
 
 
 BF16 = PrecisionPolicy("bf16")
@@ -112,5 +135,19 @@ POLICIES = {p.name: p for p in (
     FIDELITY_FP16_IPU, FIDELITY_INT8)}
 
 
+def register_policy(policy: PrecisionPolicy) -> PrecisionPolicy:
+    """Register a (possibly synthesized) policy under its name so model
+    configs can reference it via ``precision_policy``. Re-registering a
+    name replaces the previous policy (latest wins)."""
+    POLICIES[policy.name] = policy
+    return policy
+
+
 def get_policy(name: str) -> PrecisionPolicy:
+    """Resolve a policy name. ``"plan:<path.json>"`` loads a serialized
+    ``repro.autotune`` PrecisionPlan artifact and returns its policy —
+    the hook that makes an offline-searched plan the serving policy."""
+    if name.startswith("plan:"):
+        from repro.autotune.plan import load_policy
+        return load_policy(name[len("plan:"):])
     return POLICIES[name]

@@ -31,7 +31,11 @@ DEFAULT_CACHE_DIR = os.environ.get("REPRO_EXP_CACHE", "results/expcache")
 _SCHEMA = "exp-v1"
 
 # Packages whose source text feeds the default code-version salt.
-_SALT_PACKAGES = ("repro.core", "repro.exp")
+# repro.autotune is registered here so editing the planner's objectives
+# or search orphans every cached autotune score (same contract as the
+# simulator itself); its __init__ is imports-lazy, so hashing it never
+# pulls the jax model stack.
+_SALT_PACKAGES = ("repro.core", "repro.exp", "repro.autotune")
 
 
 @functools.lru_cache(maxsize=None)

@@ -19,6 +19,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import InputShape, ModelConfig
+from repro.core import policy as policy_mod
 from repro.models import registry
 from repro.parallel import sharding as shd
 
@@ -75,6 +76,10 @@ class ServingEngine:
         self.params = params
         self.b = batch_slots
         self.cache_len = cache_len
+        # resolve the serving policy up front: a bad policy name or a
+        # missing/invalid plan file fails at engine construction, not on
+        # the first decode (plan: refs load repro.autotune artifacts)
+        self.policy = policy_mod.get_policy(cfg.precision_policy)
         self.caches = api.init_cache(batch_slots, cache_len)
         self.pos = np.zeros(batch_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
@@ -83,6 +88,20 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, tok, pos, c: api.decode_step(
                 p, {"token": tok, "pos": pos}, c))
+
+    def routing_report(self) -> Dict[str, str]:
+        """Observed (parameter path -> datapath mode) of one decode step
+        under the active policy. Traced abstractly (``jax.eval_shape``)
+        so it never runs compute or touches the KV caches — the
+        verification surface the plan-routing assertion tests use."""
+        tok = jnp.zeros((self.b, 1), jnp.int32)
+        pos = jnp.zeros((self.b,), jnp.int32)
+        with policy_mod.trace_routing() as records:
+            jax.eval_shape(
+                lambda p, c: self.api.decode_step(
+                    p, {"token": tok, "pos": pos}, c),
+                self.params, self.caches)
+        return dict(records)
 
     def submit(self, req: Request):
         req.tokens = list(req.prompt.tolist())

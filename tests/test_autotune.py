@@ -1,0 +1,286 @@
+"""Autotune planner + policy-routing coverage.
+
+Satellite contract: core.policy path matching (first-match-wins,
+unmatched default, invalid-mode rejection), PrecisionPlan ->
+PrecisionPolicy -> identical mplinear routing, and the planner's
+cold/warm cache behavior with a non-trivial Pareto frontier.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import exp
+from repro.autotune import candidates as cand_mod
+from repro.autotune import search as search_mod
+from repro.autotune.cli import cmd_search, render_report, resolve_arch
+from repro.autotune.plan import (PlanRule, PrecisionPlan, load_plan,
+                                 load_policy)
+from repro.configs import reduced
+from repro.core.policy import (PrecisionPolicy, PrecisionSpec, get_policy,
+                               trace_routing)
+from repro.models.registry import projection_groups
+
+ARCH = "qwen2-0.5b"
+
+
+def _demo_plan() -> PrecisionPlan:
+    """A hand-small plan over the real qwen2 projection groups."""
+    groups = {g.name: g for g in projection_groups(reduced(ARCH))}
+    return PrecisionPlan(
+        name="demo_plan", arch=ARCH,
+        rules=(
+            PlanRule("attn_qkv", groups["attn_qkv"].pattern, "int8"),
+            PlanRule("attn_wo", groups["attn_wo"].pattern, "fp16_ipu",
+                     w=16, sw_precision=28),
+            PlanRule("ffn_in", groups["ffn_in"].pattern, "int4"),
+            PlanRule("ffn_out", groups["ffn_out"].pattern, "int8"),
+            PlanRule("head", groups["head"].pattern, "bf16"),
+        ),
+        default_mode="bf16")
+
+
+class TestPolicyMatching:
+    def test_first_match_wins_ordering(self):
+        spec8, spec4 = PrecisionSpec("int8"), PrecisionSpec("int4")
+        broad_first = PrecisionPolicy(
+            "t1", rules=((r"attn", spec8), (r"attn/wo$", spec4)))
+        assert broad_first.spec_for("block/full/attn/wo").mode == "int8"
+        narrow_first = PrecisionPolicy(
+            "t2", rules=((r"attn/wo$", spec4), (r"attn", spec8)))
+        assert narrow_first.spec_for("block/full/attn/wo").mode == "int4"
+        assert narrow_first.spec_for("block/full/attn/wq").mode == "int8"
+
+    def test_unmatched_path_gets_default(self):
+        pol = PrecisionPolicy("t", rules=((r"attn", PrecisionSpec("int8")),),
+                              default=PrecisionSpec("fp32"))
+        assert pol.spec_for("some/novel/projection").mode == "fp32"
+
+    def test_invalid_mode_rejected(self):
+        with pytest.raises(ValueError):
+            PrecisionSpec("int3")
+        with pytest.raises(ValueError):
+            PlanRule("g", "pat", "fp8")
+        with pytest.raises(ValueError):
+            PrecisionPlan(name="p", arch=ARCH, default_mode="int3")
+
+    def test_invalid_mode_rejected_at_load(self, tmp_path):
+        plan = _demo_plan()
+        obj = plan.to_json()
+        obj["rules"][0]["mode"] = "int3"
+        import json
+        path = tmp_path / "bad.json"
+        path.write_text(json.dumps(obj))
+        with pytest.raises(ValueError):
+            load_plan(str(path))
+
+    def test_schema_version_enforced(self, tmp_path):
+        import json
+        obj = _demo_plan().to_json()
+        obj["schema"] = "precision-plan-v999"
+        path = tmp_path / "future.json"
+        path.write_text(json.dumps(obj))
+        with pytest.raises(ValueError):
+            load_plan(str(path))
+
+
+class TestPlanRoundtrip:
+    def test_json_roundtrip_identity(self):
+        plan = _demo_plan()
+        assert PrecisionPlan.from_json(plan.to_json()) == plan
+
+    def test_plan_to_policy_routing(self, tmp_path):
+        """PrecisionPlan -> saved JSON -> get_policy("plan:...") routes
+        every projection path exactly like the in-memory policy."""
+        plan = _demo_plan()
+        path = str(tmp_path / "plan.json")
+        plan.save(path)
+        mem = plan.to_policy()
+        disk = get_policy(f"plan:{path}")
+        paths = [
+            "block/full/attn/wq", "block/full/attn/wk",
+            "block/full/attn/wv", "block/full/attn/wo",
+            "block/mlp/w_gate", "block/mlp/w_up", "block/mlp/w_down",
+            "lm_head", "unmatched/xyz",
+        ]
+        for p in paths:
+            assert disk.spec_for(p) == mem.spec_for(p), p
+        assert disk.spec_for("block/full/attn/wo").mode == "fp16_ipu"
+        assert disk.spec_for("block/mlp/w_gate").mode == "int4"
+        assert disk.spec_for("unmatched/xyz").mode == "bf16"
+
+    def test_load_policy_caches_by_mtime(self, tmp_path):
+        plan = _demo_plan()
+        path = str(tmp_path / "plan.json")
+        plan.save(path)
+        assert load_policy(path) is load_policy(path)
+
+
+class TestServeRouting:
+    """The acceptance assertion: serving with --plan routes the decode
+    loop's projections with the planned per-layer precisions."""
+
+    def test_decode_routes_match_plan(self, tmp_path):
+        import jax
+        from repro.launch.serve import Request, ServingEngine
+        from repro.models import registry
+
+        plan = _demo_plan()
+        path = str(tmp_path / "plan.json")
+        plan.save(path)
+        cfg = dataclasses.replace(reduced(ARCH),
+                                  precision_policy=f"plan:{path}")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        engine = ServingEngine(cfg, api, params, batch_slots=2,
+                               cache_len=32)
+        routes = engine.routing_report()
+        assert routes, "decode step routed no projections"
+        policy = plan.to_policy()
+        for p, mode in routes.items():
+            assert mode == policy.spec_for(p).mode, p
+        # the planned modes actually reach the datapaths
+        assert routes["block/full/attn/wq"] == "int8"
+        assert routes["block/full/attn/wo"] == "fp16_ipu"
+        assert routes["block/mlp/w_gate"] == "int4"
+
+        # and the decode loop runs under the plan end to end
+        engine.submit(Request(rid=0, prompt=np.asarray([5, 7, 11],
+                                                       np.int32),
+                              max_new_tokens=2))
+        engine.run_until_drained()
+        done = engine.completed[0]
+        assert len(done.tokens) == len(done.prompt) + 2
+
+
+def _toy_setup(cache_dir):
+    cfg = reduced(ARCH)
+    groups = projection_groups(cfg)
+    cands = cand_mod.default_candidates(
+        widths=(12, 16), clusters=(1,),
+        modes=("bf16", "fp16_ipu", "int8", "int4"))
+    engine = exp.EngineConfig(cache=exp.ResultCache(str(cache_dir)))
+    return groups, cands, engine
+
+
+class TestSearch:
+    def test_cold_then_warm_and_frontier(self, tmp_path):
+        groups, cands, engine = _toy_setup(tmp_path / "cache")
+        table = search_mod.build_scores(
+            ARCH, groups, cands, engine, seq=1, seed=0, shapes="reduced",
+            probe=False)
+        assert engine.total.n_executed > 0
+        plan = search_mod.search_plan(ARCH, table)
+        assert len(plan.frontier) >= 3, "trivial Pareto frontier"
+
+        warm = exp.EngineConfig(cache=exp.ResultCache(
+            str(tmp_path / "cache")))
+        table2 = search_mod.build_scores(
+            ARCH, groups, cands, warm, seq=1, seed=0, shapes="reduced",
+            probe=False)
+        assert warm.total.n_executed == 0, "warm re-run re-evaluated"
+        assert search_mod.search_plan(ARCH, table2).to_json() \
+            == plan.to_json()
+
+    def test_frontier_is_non_dominated(self, tmp_path):
+        groups, cands, engine = _toy_setup(tmp_path / "cache")
+        table = search_mod.build_scores(
+            ARCH, groups, cands, engine, seq=1, seed=0, shapes="reduced",
+            probe=False)
+        plan = search_mod.search_plan(ARCH, table)
+        front = list(plan.frontier)
+        for a in front:
+            for b in front:
+                if a is b:
+                    continue
+                am, bm = a["metrics"], b["metrics"]
+                dominated = (bm["cycles"] <= am["cycles"]
+                             and bm["acc_proxy"] <= am["acc_proxy"]
+                             and bm["tops_per_w"] >= am["tops_per_w"]
+                             and (bm["cycles"] < am["cycles"]
+                                  or bm["acc_proxy"] < am["acc_proxy"]
+                                  or bm["tops_per_w"] > am["tops_per_w"]))
+                assert not dominated, (a["name"], b["name"])
+
+    def test_seed_is_part_of_cache_key(self):
+        point = exp.SweepSpec(
+            name="k", fn="repro.autotune.objectives:cycles_point",
+            axes={"seed": [0]}, fixed={"arch": ARCH, "group": "attn_qkv",
+                                       "mode": "int8", "w": 16,
+                                       "sw_precision": 28, "cluster": 1,
+                                       "seq": 1, "shapes": "reduced"})
+        p0 = point.points()[0]
+        p1 = dataclasses.replace(
+            p0, params=tuple(("seed", 1) if k == "seed" else (k, v)
+                             for k, v in p0.params))
+        assert exp.point_key(p0, salt="s") != exp.point_key(p1, salt="s")
+
+    def test_greedy_descent_monotone_cycles(self, tmp_path):
+        groups, cands, engine = _toy_setup(tmp_path / "cache")
+        table = search_mod.build_scores(
+            ARCH, groups, cands, engine, seq=1, seed=0, shapes="reduced",
+            probe=False)
+        bf16 = next(c for c in cands if c.mode == "bf16")
+        traj = search_mod.greedy_descent(
+            table, {g.name: bf16 for g in groups})
+        cycles = [search_mod.plan_metrics(table, a)["cycles"]
+                  for a in traj]
+        assert all(b < a for a, b in zip(cycles, cycles[1:]))
+        assert len(traj) >= 2
+
+
+class TestCLI:
+    def test_search_cli_acceptance(self, tmp_path, capsys):
+        """`search --model qwen2_0_5b` (alias form) emits a plan JSON
+        with a non-trivial frontier that serves via --plan."""
+        out = str(tmp_path / "plan.json")
+        rc = cmd_search([
+            "--model", "qwen2_0_5b", "--no-probe", "--shapes", "reduced",
+            "--widths", "12", "16", "--cache-dir",
+            str(tmp_path / "cache"), "--quiet-progress", "--out", out])
+        assert rc == 0
+        plan = load_plan(out)
+        assert plan.arch == ARCH
+        assert len(plan.frontier) >= 3
+        policy = get_policy(f"plan:{out}")
+        assert policy.rules
+        report = render_report(plan)
+        assert "Pareto frontier" in report and plan.name in report
+
+    def test_resolve_arch_aliases(self):
+        assert resolve_arch("qwen2-0.5b") == ARCH
+        assert resolve_arch("qwen2_0_5b") == ARCH
+        assert resolve_arch("QWEN2_0_5B") == ARCH
+        with pytest.raises(SystemExit):
+            resolve_arch("not-a-model")
+
+
+class TestCommittedPlan:
+    def test_demo_artifact_loads_and_serves(self):
+        """The committed qwen2 demo plan stays a valid, non-trivial,
+        executable artifact."""
+        import os
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "plans", "qwen2_0_5b.json")
+        if not os.path.exists(path):
+            pytest.skip("demo plan not present")
+        plan = load_plan(path)
+        assert plan.arch == ARCH
+        assert len(plan.frontier) >= 3
+        policy = get_policy(f"plan:{path}")
+        assert policy.spec_for("block/full/attn/wq").mode \
+            == plan.assignment()["attn_qkv"]
+
+
+class TestRoutingTrace:
+    def test_trace_restores_previous_state(self):
+        pol = PrecisionPolicy("t", rules=(), default=PrecisionSpec("bf16"))
+        with trace_routing() as outer:
+            pol.spec_for("a")
+            with trace_routing() as inner:
+                pol.spec_for("b")
+            pol.spec_for("c")
+        assert [p for p, _ in outer] == ["a", "c"]
+        assert [p for p, _ in inner] == ["b"]
+        pol.spec_for("d")   # no active trace: must not record anywhere
+        assert len(outer) == 2 and len(inner) == 1

@@ -1,0 +1,29 @@
+"""Render a repro.autotune PrecisionPlan as a markdown Pareto report.
+
+    PYTHONPATH=src python tools/plan_report.py results/plans/qwen2_0_5b.json
+    PYTHONPATH=src python tools/plan_report.py <plan.json> --out report.md
+"""
+import argparse
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("plan", help="PrecisionPlan JSON artifact")
+    ap.add_argument("--out", default=None,
+                    help="write markdown here instead of stdout")
+    args = ap.parse_args(argv)
+
+    from repro.autotune.cli import render_report
+    from repro.autotune.plan import load_plan
+    text = render_report(load_plan(args.plan))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"report -> {args.out}")
+    else:
+        print(text, end="")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
