@@ -1,10 +1,21 @@
-"""Serving throughput bench: decode tok/s under each precision policy.
+"""Serving throughput bench: the runtime under each precision policy.
 
 The paper's kind is inference acceleration — this measures the actual
-serving stack (ServingEngine continuous batching on the reduced qwen2
-model) across the policies the IPU datapath motivates, on CPU wall time.
-Not a TPU number; the relative policy costs and the engine overheads are
-the object of measurement."""
+serving stack (``repro.serving`` batched-prefill continuous batching on
+the reduced qwen2 model) across the policies the IPU datapath motivates,
+on CPU wall time. Not a TPU number; the relative policy costs and the
+engine overheads are the object of measurement. Engines are warmed
+(one throwaway request compiles the prefill/decode programs) so the
+reported tok/s is steady-state serving throughput, not jit latency.
+
+Reports decode tok/s plus the latency distribution of the runtime —
+TTFT and queue-delay percentiles per policy — and a two-replica
+plan-aware router pass. Emits two artifacts:
+
+* ``serve_bench.json`` — full per-policy detail (back-compat name);
+* ``BENCH_serving.json`` — the compact trajectory row ``benchmarks/run.py``
+  tracks across PRs, like ``BENCH_autotune``.
+"""
 import dataclasses
 import time
 
@@ -13,43 +24,129 @@ import jax
 
 from benchmarks.common import emit, row
 from repro.configs import reduced
-from repro.launch.serve import Request, ServingEngine
+from repro.serving import Request, Router, ServingEngine, build_replicas
 from repro.models import registry
+
+POLICIES = ("bf16", "int8_serving", "int4_serving", "paper_hybrid")
+N_REQUESTS = 6
+PROMPT_LEN = 8
+MAX_NEW = 8
+
+
+def _workload(cfg, tagged_every=0):
+    rng = np.random.default_rng(0)
+    reqs = []
+    for rid in range(N_REQUESTS):
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, PROMPT_LEN, dtype=np.int32),
+            max_new_tokens=MAX_NEW,
+            tags=("accuracy",) if tagged_every and rid % tagged_every == 0
+            else ()))
+    return reqs
+
+
+def _warmup(engine):
+    """One throwaway request through prefill + decode so the jitted
+    programs compile outside the timed window (time_fn-style warmup);
+    the engine's request log and counters are then reset."""
+    engine.submit(Request(rid=-1,
+                          prompt=np.zeros(PROMPT_LEN, np.int32),
+                          max_new_tokens=2))
+    engine.run_until_drained()
+    engine.completed.clear()
+    for k in engine.counters:
+        engine.counters[k] = 0
+
+
+def _bench_policy(policy: str):
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy=policy)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, api, params, batch_slots=4, cache_len=128)
+    _warmup(engine)
+    for req in _workload(cfg):
+        engine.submit(req)
+    t0 = time.time()
+    ticks = engine.run_until_drained()
+    dt = time.time() - t0
+    m = engine.metrics()
+    new_tokens = m["new_tokens"]
+    return {
+        "tok_per_s": new_tokens / dt, "ticks": ticks, "seconds": dt,
+        "ttft_s": m["ttft_s"], "queue_delay_s": m["queue_delay_s"],
+        "prefill_calls": m["counters"]["prefill_calls"],
+        "prefill_tokens": m["counters"]["prefill_tokens"],
+        "decode_steps": m["counters"]["decode_steps"],
+    }
+
+
+def _bench_router():
+    """Two-replica plan-aware pass: the routing layer's overhead and
+    split on a mixed (third accuracy-tagged) workload."""
+    cfg = reduced("qwen2-0.5b")
+    replicas = build_replicas(cfg, ("int8_serving", "bf16"),
+                              batch_slots=2, cache_len=128)
+    router = Router(replicas, strategy="plan_aware")
+    for rep in replicas:
+        _warmup(rep.engine)
+    for req in _workload(cfg, tagged_every=3):
+        router.submit(req)
+    t0 = time.time()
+    ticks = router.run_until_drained()
+    dt = time.time() - t0
+    new_tokens = sum(r.new_tokens for r in router.completed.values())
+    return {
+        "tok_per_s": new_tokens / dt, "ticks": ticks, "seconds": dt,
+        "counters": router.routing_counters(),
+        "completed": len(router.completed),
+    }
 
 
 def run(verbose: bool = True):
     results = {}
-    for policy in ("bf16", "int8_serving", "int4_serving", "paper_hybrid"):
-        cfg = dataclasses.replace(reduced("qwen2-0.5b"),
-                                  precision_policy=policy)
-        api = registry.build(cfg)
-        params = api.init(jax.random.PRNGKey(0))
-        engine = ServingEngine(cfg, api, params, batch_slots=4,
-                               cache_len=128)
-        rng = np.random.default_rng(0)
-        for rid in range(6):
-            engine.submit(Request(
-                rid=rid, prompt=rng.integers(0, cfg.vocab, 8,
-                                             dtype=np.int32),
-                max_new_tokens=8))
-        t0 = time.time()
-        ticks = engine.run_until_drained()
-        dt = time.time() - t0
-        new_tokens = sum(len(r.tokens) - len(r.prompt)
-                        for r in engine.completed.values())
-        results[policy] = {"tok_per_s": new_tokens / dt, "ticks": ticks,
-                           "seconds": dt}
+    for policy in POLICIES:
+        results[policy] = r = _bench_policy(policy)
         if verbose:
-            row(f"serve/{policy}", dt * 1e6 / max(new_tokens, 1),
-                f"{new_tokens / dt:.1f} tok/s, {ticks} ticks")
-    emit("serve_bench", results)
+            ttft = r["ttft_s"].get("p50", 0.0) * 1e3
+            qd = r["queue_delay_s"].get("p90", 0.0) * 1e3
+            row(f"serve/{policy}",
+                r["seconds"] * 1e6 / max(MAX_NEW * N_REQUESTS, 1),
+                f"{r['tok_per_s']:.1f} tok/s, {r['ticks']} ticks, "
+                f"ttft_p50={ttft:.0f}ms, queue_p90={qd:.0f}ms")
+    router_r = _bench_router()
     if verbose:
-        base = results["bf16"]["tok_per_s"]
+        row("serve/router[int8+bf16]",
+            router_r["seconds"] * 1e6 / max(MAX_NEW * N_REQUESTS, 1),
+            f"{router_r['tok_per_s']:.1f} tok/s, "
+            f"counters={router_r['counters']}")
+    emit("serve_bench", {**results, "router": router_r})
+
+    base = results["bf16"]["tok_per_s"]
+    summary = {
+        "tok_per_s": {p: results[p]["tok_per_s"] for p in POLICIES},
+        "speedup_vs_bf16": {p: results[p]["tok_per_s"] / base
+                            for p in POLICIES},
+        "ttft_p50_ms": {p: results[p]["ttft_s"].get("p50", 0.0) * 1e3
+                        for p in POLICIES},
+        "ttft_p90_ms": {p: results[p]["ttft_s"].get("p90", 0.0) * 1e3
+                        for p in POLICIES},
+        "queue_delay_p90_ms": {
+            p: results[p]["queue_delay_s"].get("p90", 0.0) * 1e3
+            for p in POLICIES},
+        "prefill_calls": {p: results[p]["prefill_calls"]
+                          for p in POLICIES},
+        "router": {"tok_per_s": router_r["tok_per_s"],
+                   "counters": router_r["counters"]},
+    }
+    emit("BENCH_serving", summary)
+    if verbose:
         print("serve: " + ", ".join(
             f"{k}={v['tok_per_s']:.1f} tok/s "
-            f"({v['tok_per_s']/base:.2f}x bf16)"
+            f"({v['tok_per_s'] / base:.2f}x bf16)"
             for k, v in results.items()))
-    return results
+    return summary
 
 
 def main():

@@ -1,16 +1,21 @@
 """End-to-end serving driver (the paper's kind is inference/accelerator).
 
-Serves a small qwen2-family model with batched requests through the
-continuous-batching engine, under a *mixed-precision policy* — the
-paper's technique as deployment configuration: INT4 projections with the
-router/head in higher precision, exactly the hybrid scheme the IPU is
-built for. Also reports what the calibrated accelerator model says this
-policy buys in area/power.
+Serves a small qwen2-family model through the ``repro.serving`` runtime
+under mixed-precision policies — the paper's technique as deployment
+configuration. Two modes:
 
-A plan searched offline by the precision planner serves directly:
+* single engine (``--policy`` / ``--plan``): continuous batching with
+  batched prefill admission under one precision policy, printing the
+  per-projection routing report for plans;
+* multi-replica router (``--replicas``): each replica carries its own
+  policy or searched plan, and the plan-aware router splits a mixed
+  workload (a third of the requests are accuracy-tagged) by the
+  simulator-backed cost model.
 
     PYTHONPATH=src python examples/serve_lm.py [--policy int4_serving]
     PYTHONPATH=src python examples/serve_lm.py --plan results/plans/qwen2_0_5b.json
+    PYTHONPATH=src python examples/serve_lm.py \
+        --replicas int8_serving,plan:results/plans/qwen2_0_5b.json
 """
 import argparse
 import dataclasses
@@ -20,26 +25,59 @@ import numpy as np
 import jax
 
 from repro.configs import reduced
-from repro.launch.serve import Request, ServingEngine
-from repro.models import registry
+from repro.serving import Request, Router, ServingEngine, build_replicas
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--policy", default="int4_serving",
-                    choices=["bf16", "int8_serving", "int4_serving",
-                             "paper_hybrid"])
-    ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
-                    help="serve under a repro.autotune PrecisionPlan "
-                         "artifact (overrides --policy)")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=12)
-    args = ap.parse_args()
+def _mixed_workload(cfg, n, max_new, tagged_every=3):
+    rng = np.random.default_rng(0)
+    reqs = []
+    for rid in range(n):
+        prompt = rng.integers(0, cfg.vocab, int(rng.integers(4, 12)),
+                              dtype=np.int32)
+        reqs.append(Request(
+            rid=rid, prompt=prompt, max_new_tokens=max_new,
+            tags=("accuracy",) if rid % tagged_every == 0 else ()))
+    return reqs
 
+
+def _pct(block, key="p50"):
+    return f"{block.get(key, 0) * 1e3:.1f}ms" if block else "n/a"
+
+
+def run_router(args, cfg):
+    policies = [p for p in args.replicas.split(",") if p]
+    replicas = build_replicas(cfg, policies, batch_slots=args.slots,
+                              cache_len=128)
+    router = Router(replicas, strategy=args.strategy)
+    for rep in replicas:
+        print(f"replica {rep.name}: cycles/tok="
+              f"{rep.cost['cycles_per_token']:.4g} "
+              f"tops/W={rep.cost['tops_per_w']:.3g} "
+              f"acc_proxy={rep.cost['acc_proxy']:.3g}")
+
+    t0 = time.time()
+    for req in _mixed_workload(cfg, args.requests, args.max_new):
+        router.submit(req)
+    ticks = router.run_until_drained()
+    dt = time.time() - t0
+
+    completed = router.completed
+    total_new = sum(r.new_tokens for r in completed.values())
+    print(f"\nstrategy={router.strategy} requests={args.requests} "
+          f"completed={len(completed)} ticks={ticks} "
+          f"({total_new / dt:.1f} tok/s on CPU)")
+    for name, rep in router.report()["replicas"].items():
+        m = rep["metrics"]
+        print(f"  {name}: routed={rep['routed']} "
+              f"ttft_p50={_pct(m['ttft_s'])} "
+              f"queue_p90={_pct(m['queue_delay_s'], 'p90')} "
+              f"prefill_calls={m['counters']['prefill_calls']}")
+
+
+def run_single(args, cfg):
     policy_name = f"plan:{args.plan}" if args.plan else args.policy
-    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
-                              precision_policy=policy_name)
+    cfg = dataclasses.replace(cfg, precision_policy=policy_name)
+    from repro.models import registry
     api = registry.build(cfg)
     params = api.init(jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, api, params, batch_slots=args.slots,
@@ -52,22 +90,21 @@ def main():
         for path, mode in sorted(engine.routing_report().items()):
             print(f"  route {path}: {mode}")
 
-    rng = np.random.default_rng(0)
     t0 = time.time()
-    for rid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab, rng.integers(4, 12),
-                              dtype=np.int32)
-        engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=args.max_new))
+    for req in _mixed_workload(cfg, args.requests, args.max_new):
+        engine.submit(req)
     ticks = engine.run_until_drained()
     dt = time.time() - t0
 
-    total_new = sum(len(r.tokens) - len(r.prompt)
-                    for r in engine.completed.values())
+    total_new = sum(r.new_tokens for r in engine.completed.values())
+    m = engine.metrics()
     print(f"policy={policy_name} requests={args.requests} "
           f"slots={args.slots} ticks={ticks}")
     print(f"generated {total_new} tokens in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s on CPU)")
+          f"({total_new / dt:.1f} tok/s on CPU); "
+          f"ttft_p50={_pct(m['ttft_s'])} "
+          f"queue_p90={_pct(m['queue_delay_s'], 'p90')} "
+          f"prefill_calls={m['counters']['prefill_calls']}")
     for rid in sorted(engine.completed)[:3]:
         r = engine.completed[rid]
         print(f"  req{rid}: prompt={list(r.prompt[:6])}... -> "
@@ -78,12 +115,37 @@ def main():
                                        paper_designs)
     d = paper_designs()["MC-IPU4"]
     wl = {"int4_serving": INT4, "int8_serving": INT8}.get(args.policy)
-    if wl is not None:
+    if wl is not None and not args.plan:
         a, p = efficiency(d, wl)
         af, pf = efficiency(d, FP16)
         print(f"\nMC-IPU4 accelerator at this policy: {a:.1f} TOPS/mm2, "
               f"{p:.2f} TOPS/W (vs FP16 path {af:.1f}/{pf:.2f}) — the "
               f"INT4 datapath the paper optimizes for.")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--policy", default="int4_serving",
+                    choices=["bf16", "int8_serving", "int4_serving",
+                             "paper_hybrid"])
+    ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                    help="serve under a repro.autotune PrecisionPlan "
+                         "artifact (overrides --policy)")
+    ap.add_argument("--replicas", default=None, metavar="POLICY,POLICY,..",
+                    help="run the multi-replica router instead: comma-"
+                         "separated policy names or plan:<file> refs")
+    ap.add_argument("--strategy", default="plan_aware",
+                    choices=Router.STRATEGIES)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = reduced("qwen2-0.5b")
+    if args.replicas:
+        run_router(args, cfg)
+    else:
+        run_single(args, cfg)
 
 
 if __name__ == "__main__":

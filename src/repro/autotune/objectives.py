@@ -100,8 +100,10 @@ def efficiency_point(arch: str, group: str, mode: str, w: int,
 
 # --------------------------------------------------------------- accuracy
 
-def _analytic_proxy(mode: str, w: int, sw_precision: int) -> float:
-    """First-order relative-error scale of the datapath (dimensionless)."""
+def analytic_proxy(mode: str, w: int, sw_precision: int) -> float:
+    """First-order relative-error scale of the datapath (dimensionless).
+    Also the accuracy axis of the serving router's replica cost model
+    (``repro.serving.router.replica_cost``)."""
     if mode == "bf16":
         # bf16's own 8-bit mantissa rounding noise
         return 2.0 ** -8 / math.sqrt(12.0)
@@ -178,7 +180,7 @@ def accuracy_point(arch: str, group: str, mode: str, w: int,
     Deliberately takes no ``seq``/``shapes``: the probe always runs the
     reduced config at its own fixed shape, so those axes must not enter
     the cache key (they would orphan the expensive model probes)."""
-    bound = _analytic_proxy(mode, w, sw_precision)
+    bound = analytic_proxy(mode, w, sw_precision)
     div = 0.0
     if probe and mode != "bf16":
         div = divergence_probe(arch, group, mode, w, sw_precision,

@@ -1,165 +1,11 @@
-"""Serving: jitted prefill/decode steps + a continuous-batching driver.
+"""Compat shim — the serving runtime lives in :mod:`repro.serving`.
 
-serve_prefill / serve_decode are the artifacts the dry-run lowers for the
-prefill_32k / decode_32k / long_500k cells. The ServingEngine is a
-slot-based continuous-batching driver (used by examples/serve_lm.py):
-fixed B decode slots, per-slot positions, join-on-free admission — the
-single-host skeleton of the multi-replica serving deployment.
+serve_prefill / serve_decode artifacts (``make_serve_fns``) and the
+continuous-batching ``ServingEngine`` moved to ``repro.serving.engine``
+when serving grew into a subsystem (scheduler, multi-replica router,
+metrics). This module re-exports the public names so existing imports
+(``from repro.launch.serve import Request, ServingEngine``) keep
+working.
 """
-from __future__ import annotations
-
-import dataclasses
-import queue
-import time
-from typing import Any, Callable, Dict, List, NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh
-
-from repro.configs.base import InputShape, ModelConfig
-from repro.core import policy as policy_mod
-from repro.models import registry
-from repro.parallel import sharding as shd
-
-
-def make_serve_fns(api: registry.ModelAPI, mesh: Mesh,
-                   batch_shape: Dict, cache_len: int, batch_size: int):
-    """Returns (jitted prefill, jitted decode, cache shardings)."""
-    cache_shape = jax.eval_shape(lambda: api.init_cache(batch_size,
-                                                        cache_len))
-    cache_shard = shd.cache_shardings(cache_shape, mesh)
-    param_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
-    param_shard = shd.param_shardings(param_shape, mesh)
-
-    prefill_in = {k: v for k, v in batch_shape.items()
-                  if k not in ("token", "pos")}
-    pf_shard = shd.batch_shardings(prefill_in, mesh) if prefill_in else None
-
-    prefill = jax.jit(
-        lambda p, b, c: api.prefill(p, b, c),
-        in_shardings=(param_shard, pf_shard, cache_shard),
-        donate_argnums=(2,))
-
-    # decode state sharding may differ from cache (encdec carries enc_out)
-    def _decode(p, b, c):
-        return api.decode_step(p, b, c)
-
-    decode = jax.jit(_decode, in_shardings=(param_shard, None, None),
-                     donate_argnums=(2,))
-    return prefill, decode, cache_shard, param_shard
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # (S,) int32
-    max_new_tokens: int = 16
-    tokens: Optional[List[int]] = None
-    done: bool = False
-
-
-class ServingEngine:
-    """Slot-based continuous batching on top of decode_step.
-
-    All slots share one decode program (fixed batch); free slots idle on
-    pad tokens. Prefill currently runs per-admission with batch 1 slots
-    folded into the shared cache via per-slot positions.
-    """
-
-    def __init__(self, cfg: ModelConfig, api: registry.ModelAPI, params,
-                 batch_slots: int = 4, cache_len: int = 512,
-                 greedy: bool = True):
-        self.cfg = cfg
-        self.api = api
-        self.params = params
-        self.b = batch_slots
-        self.cache_len = cache_len
-        # resolve the serving policy up front: a bad policy name or a
-        # missing/invalid plan file fails at engine construction, not on
-        # the first decode (plan: refs load repro.autotune artifacts)
-        self.policy = policy_mod.get_policy(cfg.precision_policy)
-        self.caches = api.init_cache(batch_slots, cache_len)
-        self.pos = np.zeros(batch_slots, np.int32)
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
-        self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.completed: Dict[int, Request] = {}
-        self._decode = jax.jit(
-            lambda p, tok, pos, c: api.decode_step(
-                p, {"token": tok, "pos": pos}, c))
-
-    def routing_report(self) -> Dict[str, str]:
-        """Observed (parameter path -> datapath mode) of one decode step
-        under the active policy. Traced abstractly (``jax.eval_shape``)
-        so it never runs compute or touches the KV caches — the
-        verification surface the plan-routing assertion tests use."""
-        tok = jnp.zeros((self.b, 1), jnp.int32)
-        pos = jnp.zeros((self.b,), jnp.int32)
-        with policy_mod.trace_routing() as records:
-            jax.eval_shape(
-                lambda p, c: self.api.decode_step(
-                    p, {"token": tok, "pos": pos}, c),
-                self.params, self.caches)
-        return dict(records)
-
-    def submit(self, req: Request):
-        req.tokens = list(req.prompt.tolist())
-        self.queue.put(req)
-
-    def _admit(self):
-        for slot in range(self.b):
-            if self.slot_req[slot] is None and not self.queue.empty():
-                req = self.queue.get()
-                self.slot_req[slot] = req
-                # feed the prompt token-by-token through decode (teacher
-                # forcing); tiny models only — prefill path covers bulk.
-                self.pos[slot] = 0
-                for t in req.prompt[:-1]:
-                    self._step_slot_token(slot, int(t))
-                req._next_input = int(req.prompt[-1])
-
-    def _step_slot_token(self, slot: int, token: int) -> int:
-        tok = np.zeros((self.b, 1), np.int32)
-        tok[slot, 0] = token
-        pos = jnp.asarray(self.pos)
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(tok), pos, self.caches)
-        self.pos[slot] += 1
-        return int(np.asarray(jnp.argmax(logits[slot])))
-
-    def step(self):
-        """One engine tick: admit + one decode for every active slot."""
-        self._admit()
-        active = [s for s in range(self.b) if self.slot_req[s] is not None]
-        if not active:
-            return False
-        tok = np.zeros((self.b, 1), np.int32)
-        for s in active:
-            req = self.slot_req[s]
-            tok[s, 0] = req._next_input
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(tok), jnp.asarray(self.pos),
-            self.caches)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for s in active:
-            req = self.slot_req[s]
-            self.pos[s] += 1
-            req.tokens.append(int(nxt[s]))
-            req._next_input = int(nxt[s])
-            if len(req.tokens) - len(req.prompt) >= req.max_new_tokens:
-                req.done = True
-                self.completed[req.rid] = req
-                self.slot_req[s] = None
-                self.pos[s] = 0
-        return True
-
-    def run_until_drained(self, max_ticks: int = 10_000):
-        ticks = 0
-        while (not self.queue.empty()
-               or any(r is not None for r in self.slot_req)):
-            self.step()
-            ticks += 1
-            if ticks > max_ticks:
-                raise RuntimeError("engine did not drain")
-        return ticks
+from repro.serving.engine import (Request, ServingEngine,   # noqa: F401
+                                  make_serve_fns)

@@ -1,0 +1,18 @@
+"""Plan-aware serving runtime.
+
+The runtime layer that turns the paper's payoff — mixed-precision
+datapaths trading accuracy for TOPS/W — into a deployment: requests are
+admitted through a batched prefill path (``engine``), scheduled with
+priorities and starvation protection (``scheduler``), and routed across
+replicas that each carry their own precision policy or searched
+``PrecisionPlan`` (``router``), with per-request latency metrics
+(``metrics``). ``repro.launch.serve`` remains a thin compat shim.
+"""
+from repro.serving.engine import (Request, ServingEngine,   # noqa: F401
+                                  make_serve_fns)
+from repro.serving.metrics import (percentiles,             # noqa: F401
+                                   request_metrics, summarize_requests)
+from repro.serving.router import (Replica, Router,          # noqa: F401
+                                  build_replicas, replica_cost)
+from repro.serving.scheduler import (AdmissionScheduler,    # noqa: F401
+                                     SchedulerFull)

@@ -1,0 +1,328 @@
+"""Continuous-batching serving engine with a batched prefill path.
+
+``make_serve_fns`` builds the sharded prefill/decode artifacts the
+dry-run lowers for the prefill_32k / decode_32k / long_500k cells.
+``ServingEngine`` is the single-replica runtime: fixed decode slots over
+one shared KV cache, an :class:`repro.serving.scheduler.AdmissionScheduler`
+in front, and admission through the model's real ``prefill`` program —
+a prompt of length S costs one jitted prefill over a chunk-rounded
+bucket (O(S/chunk) prefill work), not S ``decode_step`` calls.
+
+Why bucket-padded prefill is safe here: the KV cache is position-tagged
+(``layers.attention.KVCache.pos``) and attention masks by tag, so the
+junk K/V a padded prefill writes past the prompt carries tags the causal
+mask rejects until the decode loop overwrites them in place. That
+invariant holds for attention caches but *not* for recurrent state
+(rwkv/griffin fold every consumed token into O(1) state), so the fast
+path is gated per family and everything else falls back to the
+teacher-forced admission loop the engine always had.
+
+One numeric caveat: policies with *dynamic* activation scales (int8 /
+int4 fake-quant calibrate absmax per tensor) quantize over the whole
+prompt in prefill but over single tokens in decode, so the two
+admission paths agree exactly only up to that scale granularity — an
+inherent property of dynamic fake-quant, not of the cache merge (which
+tests verify bitwise-closely under bf16).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.core import policy as policy_mod
+from repro.models import registry
+from repro.parallel import sharding as shd
+
+# families whose prefill consumes only tokens and whose caches are
+# position-tagged (padding-safe): eligible for the batched prefill path
+_FAST_PREFILL_FAMILIES = ("lm",)
+
+
+def make_serve_fns(api: registry.ModelAPI, mesh: Mesh,
+                   batch_shape: Dict, cache_len: int, batch_size: int):
+    """Returns (jitted prefill, jitted decode, cache shardings)."""
+    cache_shape = jax.eval_shape(lambda: api.init_cache(batch_size,
+                                                        cache_len))
+    cache_shard = shd.cache_shardings(cache_shape, mesh)
+    param_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    param_shard = shd.param_shardings(param_shape, mesh)
+
+    prefill_in = {k: v for k, v in batch_shape.items()
+                  if k not in ("token", "pos")}
+    pf_shard = shd.batch_shardings(prefill_in, mesh) if prefill_in else None
+
+    prefill = jax.jit(
+        lambda p, b, c: api.prefill(p, b, c),
+        in_shardings=(param_shard, pf_shard, cache_shard),
+        donate_argnums=(2,))
+
+    # decode state sharding may differ from cache (encdec carries enc_out)
+    def _decode(p, b, c):
+        return api.decode_step(p, b, c)
+
+    decode = jax.jit(_decode, in_shardings=(param_shard, None, None),
+                     donate_argnums=(2,))
+    return prefill, decode, cache_shard, param_shard
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    priority: int = 0            # lower admits first (see scheduler)
+    tags: Tuple[str, ...] = ()   # e.g. ("accuracy",) for router SLOs
+    tokens: Optional[List[int]] = None
+    done: bool = False
+    error: Optional[str] = None        # set when rejected at admission
+    next_input: Optional[int] = None   # next token to feed decode
+    # timestamps stamped by scheduler/engine (engine clock domain)
+    submit_time: Optional[float] = None
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def new_tokens(self) -> int:
+        return 0 if self.tokens is None else len(self.tokens) - len(self.prompt)
+
+
+class ServingEngine:
+    """Slot-based continuous batching with batched prefill admission.
+
+    All slots share one decode program (fixed batch); free slots idle on
+    pad tokens. Admission drains the scheduler into free slots and runs
+    ONE jitted prefill over the whole wave: per-slot prompts are packed
+    into a (slots, L) token matrix (L rounded up to ``prefill_chunk`` to
+    bound recompiles), prefilled against a fresh cache, and the admitted
+    rows are merged into the live cache at their slot positions.
+    """
+
+    def __init__(self, cfg: ModelConfig, api: registry.ModelAPI, params,
+                 batch_slots: int = 4, cache_len: int = 512,
+                 greedy: bool = True, prefill_chunk: int = 32,
+                 prefill: str = "auto", scheduler=None,
+                 clock: Callable[[], float] = time.monotonic):
+        from repro.serving.scheduler import AdmissionScheduler
+        self.cfg = cfg
+        self.api = api
+        self.params = params
+        self.b = batch_slots
+        self.cache_len = cache_len
+        self.greedy = greedy
+        self.prefill_chunk = max(int(prefill_chunk), 1)
+        self.clock = clock
+        # resolve the serving policy up front: a bad policy name or a
+        # missing/invalid plan file fails at engine construction, not on
+        # the first decode (plan: refs load repro.autotune artifacts)
+        self.policy = policy_mod.get_policy(cfg.precision_policy)
+        self.caches = api.init_cache(batch_slots, cache_len)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.scheduler = scheduler if scheduler is not None \
+            else AdmissionScheduler()
+        self.completed: Dict[int, Request] = {}
+        if prefill not in ("auto", "batched", "teacher"):
+            raise ValueError(f"prefill mode {prefill!r}")
+        if prefill == "batched" and cfg.family not in _FAST_PREFILL_FAMILIES:
+            raise ValueError(
+                f"batched prefill needs a position-tagged token-only "
+                f"prefill; family {cfg.family!r} is not eligible")
+        self._fast_prefill = (cfg.family in _FAST_PREFILL_FAMILIES
+                              if prefill == "auto" else prefill == "batched")
+        self.counters = {"ticks": 0, "decode_steps": 0, "prefill_calls": 0,
+                         "prefill_tokens": 0, "teacher_forced_tokens": 0,
+                         "admitted": 0, "submitted": 0}
+        self._decode = jax.jit(
+            lambda p, tok, pos, c: api.decode_step(
+                p, {"token": tok, "pos": pos}, c))
+        self._prefill_admit = jax.jit(self._prefill_admit_impl)
+
+    # ------------------------------------------------------- observability
+
+    def routing_report(self) -> Dict[str, str]:
+        """Observed (parameter path -> datapath mode) of one decode step
+        under the active policy. Traced abstractly (``jax.eval_shape``)
+        so it never runs compute or touches the KV caches — the
+        verification surface the plan-routing assertion tests use."""
+        tok = jnp.zeros((self.b, 1), jnp.int32)
+        pos = jnp.zeros((self.b,), jnp.int32)
+        with policy_mod.trace_routing() as records:
+            jax.eval_shape(
+                lambda p, c: self.api.decode_step(
+                    p, {"token": tok, "pos": pos}, c),
+                self.params, self.caches)
+        return dict(records)
+
+    def metrics(self) -> Dict:
+        """Aggregate request latency metrics + engine counters."""
+        from repro.serving.metrics import summarize_requests
+        m = summarize_requests(self.completed.values())
+        m["counters"] = dict(self.counters)
+        m["queue"] = len(self.scheduler)
+        m["active_slots"] = sum(r is not None for r in self.slot_req)
+        return m
+
+    def has_pending(self) -> bool:
+        return (len(self.scheduler) > 0
+                or any(r is not None for r in self.slot_req))
+
+    # ------------------------------------------------------------ admission
+
+    def _capacity_needed(self, req: Request) -> int:
+        """Cache positions the request will write: prompt prefill at
+        0..S-2, decode at S-1..S-2+max_new. Beyond cache_len the ring
+        write (pos % capacity) silently overwrites early context on
+        full-attention models, so oversized requests are rejected."""
+        if req.max_new_tokens <= 0:
+            return 0
+        return max(len(req.prompt) - 1, 0) + req.max_new_tokens
+
+    def submit(self, req: Request):
+        if self._capacity_needed(req) > self.cache_len:
+            raise ValueError(
+                f"req{req.rid}: prompt of {len(req.prompt)} tokens + "
+                f"{req.max_new_tokens} new tokens needs "
+                f"{self._capacity_needed(req)} cache positions, but "
+                f"cache_len={self.cache_len}")
+        self.scheduler.submit(req, now=self.clock())
+        self.counters["submitted"] += 1
+
+    def _prefill_admit_impl(self, params, tokens, admit_mask, caches):
+        """One admission wave: prefill the packed (slots, L) prompts into
+        a fresh cache, then merge admitted rows into the live cache."""
+        fresh = self.api.init_cache(self.b, self.cache_len)
+        _, fresh = self.api.prefill(params, {"tokens": tokens}, fresh)
+
+        def merge(old, new):
+            # every cache leaf is (n_groups, slots, ...): batch axis 1
+            m = admit_mask.reshape((1, self.b) + (1,) * (old.ndim - 2))
+            return jnp.where(m, new.astype(old.dtype), old)
+
+        return jax.tree.map(merge, caches, fresh)
+
+    def _admit(self):
+        free = [s for s in range(self.b) if self.slot_req[s] is None]
+        if not free:
+            return
+        now = self.clock()
+        wave: List[Tuple[int, Request]] = []
+        for req in self.scheduler.select(len(free), now):
+            req.admit_time = now
+            req.tokens = [int(t) for t in req.prompt]
+            self.counters["admitted"] += 1
+            if req.max_new_tokens <= 0 or len(req.prompt) == 0:
+                # nothing to generate: complete without holding a slot
+                req.done = True
+                req.finish_time = now
+                self.completed[req.rid] = req
+                continue
+            if self._capacity_needed(req) > self.cache_len:
+                # submit() rejects these; a request injected straight
+                # into the scheduler fails terminally instead of
+                # killing the whole admission wave (and, via the
+                # router, every other replica's traffic)
+                req.done = True
+                req.error = (f"needs {self._capacity_needed(req)} cache "
+                             f"positions > cache_len={self.cache_len}")
+                req.finish_time = now
+                self.completed[req.rid] = req
+                continue
+            slot = free.pop(0)
+            self.slot_req[slot] = req
+            self.pos[slot] = len(req.prompt) - 1
+            req.next_input = int(req.prompt[-1])
+            if len(req.prompt) > 1:
+                wave.append((slot, req))
+        if not wave:
+            return
+        if self._fast_prefill:
+            self._prefill_wave(wave)
+        else:
+            for slot, req in wave:
+                self.pos[slot] = 0
+                for t in req.prompt[:-1]:
+                    self._step_slot_token(slot, int(t))
+                self.counters["teacher_forced_tokens"] += \
+                    len(req.prompt) - 1
+
+    def _prefill_wave(self, wave: List[Tuple[int, Request]]):
+        lmax = max(len(req.prompt) - 1 for _, req in wave)
+        chunk = self.prefill_chunk
+        L = min(max(-(-lmax // chunk) * chunk, 1), self.cache_len)
+        tokens = np.zeros((self.b, L), np.int32)
+        mask = np.zeros((self.b,), bool)
+        for slot, req in wave:
+            t = np.asarray(req.prompt[:-1], np.int32)
+            tokens[slot, :t.size] = t
+            mask[slot] = True
+        self.caches = self._prefill_admit(
+            self.params, jnp.array(tokens), jnp.array(mask),
+            self.caches)
+        self.counters["prefill_calls"] += 1
+        self.counters["prefill_tokens"] += int(
+            sum(len(req.prompt) - 1 for _, req in wave))
+
+    def _step_slot_token(self, slot: int, token: int) -> int:
+        """Teacher-forced fallback: feed one prompt token through decode
+        (recurrent-state families, where padded prefill is unsound)."""
+        tok = np.zeros((self.b, 1), np.int32)
+        tok[slot, 0] = token
+        # jnp.array (never asarray): jax may alias an aligned numpy
+        # buffer zero-copy, and self.pos mutates while the async decode
+        # is still in flight — observed as corrupted cache position tags
+        logits, self.caches = self._decode(
+            self.params, jnp.array(tok), jnp.array(self.pos), self.caches)
+        self.pos[slot] += 1
+        return int(np.asarray(jnp.argmax(logits[slot])))
+
+    # --------------------------------------------------------- decode loop
+
+    def step(self):
+        """One engine tick: admit + one decode for every active slot."""
+        self._admit()
+        self.counters["ticks"] += 1
+        active = [s for s in range(self.b) if self.slot_req[s] is not None]
+        if not active:
+            return False
+        tok = np.zeros((self.b, 1), np.int32)
+        for s in active:
+            tok[s, 0] = self.slot_req[s].next_input
+        # copying jnp.array: self.pos mutates below while the dispatch
+        # may still be reading it (see _step_slot_token)
+        logits, self.caches = self._decode(
+            self.params, jnp.array(tok), jnp.array(self.pos),
+            self.caches)
+        self.counters["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        now = self.clock()
+        for s in active:
+            req = self.slot_req[s]
+            self.pos[s] += 1
+            if req.first_token_time is None:
+                req.first_token_time = now
+            req.tokens.append(int(nxt[s]))
+            req.next_input = int(nxt[s])
+            if len(req.tokens) - len(req.prompt) >= req.max_new_tokens:
+                req.done = True
+                req.finish_time = now
+                self.completed[req.rid] = req
+                self.slot_req[s] = None
+                self.pos[s] = 0
+        return True
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        ticks = 0
+        while self.has_pending():
+            self.step()
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError("engine did not drain")
+        return ticks

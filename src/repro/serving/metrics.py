@@ -1,0 +1,71 @@
+"""Per-request serving metrics: TTFT, queue delay, throughput.
+
+Everything is computed from the four timestamps the engine stamps on a
+``Request`` (submit/admit/first-token/finish) and returned as plain
+dicts — the schema benches serialize into ``BENCH_serving.json`` and
+tests assert on.
+
+Schema (``summarize_requests``)::
+
+    {"n": int, "new_tokens": int,
+     "ttft_s":        {"p50": .., "p90": .., "p99": .., "mean": .., "max": ..},
+     "queue_delay_s": {...same...},
+     "e2e_s":         {...same...},
+     "tok_per_s_per_request": {...same...}}
+
+Percentile blocks are ``{}`` when no request carries the timestamps
+(e.g. nothing completed yet).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.engine import Request
+
+PERCENTILES = (50, 90, 99)
+
+
+def percentiles(values: Sequence[float],
+                ps: Sequence[int] = PERCENTILES) -> Dict[str, float]:
+    """Summary block of a sample; ``{}`` for an empty sample."""
+    xs = np.asarray([v for v in values if v is not None], float)
+    if xs.size == 0:
+        return {}
+    out = {f"p{p}": float(np.percentile(xs, p)) for p in ps}
+    out["mean"] = float(xs.mean())
+    out["max"] = float(xs.max())
+    return out
+
+
+def request_metrics(req: Request) -> Dict[str, Optional[float]]:
+    """Latency decomposition of one request (None where not measured)."""
+    new = 0 if req.tokens is None else len(req.tokens) - len(req.prompt)
+
+    def span(a, b):
+        return None if a is None or b is None else max(b - a, 0.0)
+
+    e2e = span(req.submit_time, req.finish_time)
+    gen = span(req.admit_time, req.finish_time)
+    return {
+        "ttft_s": span(req.submit_time, req.first_token_time),
+        "queue_delay_s": span(req.submit_time, req.admit_time),
+        "e2e_s": e2e,
+        "new_tokens": new,
+        "tok_per_s": (new / gen) if gen else None,
+    }
+
+
+def summarize_requests(reqs: Iterable[Request]) -> Dict:
+    """Aggregate percentile blocks over a set of (completed) requests."""
+    rows = [request_metrics(r) for r in reqs]
+    return {
+        "n": len(rows),
+        "new_tokens": int(sum(r["new_tokens"] for r in rows)),
+        "ttft_s": percentiles([r["ttft_s"] for r in rows]),
+        "queue_delay_s": percentiles([r["queue_delay_s"] for r in rows]),
+        "e2e_s": percentiles([r["e2e_s"] for r in rows]),
+        "tok_per_s_per_request": percentiles(
+            [r["tok_per_s"] for r in rows]),
+    }

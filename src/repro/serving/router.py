@@ -1,0 +1,250 @@
+"""Multi-replica routing: each replica serves its own precision plan.
+
+The routing layer the paper's heterogeneity argument calls for: mixed
+precision only pays off when the runtime sends each request to the right
+datapath. A :class:`Replica` wraps one ``ServingEngine`` whose config
+carries its own ``precision_policy`` (a preset name or a searched
+``plan:<file>`` artifact). The :class:`Router` places requests across
+replicas under one of three strategies:
+
+  * ``plan_aware`` (default) — a static cost model scores every replica
+    from ``core.simulator`` cycles and ``core.area_power`` efficiency
+    under the replica's *actual* per-projection policy: requests tagged
+    ``"accuracy"`` go to the replica with the lowest accuracy proxy
+    (e.g. the bf16 replica), everything else to the replica with the
+    cheapest load-discounted cycles/token (e.g. the int8 replica).
+  * ``least_loaded`` — min (active slots + waiting) / slots.
+  * ``round_robin`` — the baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core import area_power as ap
+from repro.core import simulator as sim
+from repro.core.policy import PrecisionPolicy, PrecisionSpec
+from repro.core.workloads import ConvLayer
+from repro.models.registry import projection_groups
+from repro.serving.engine import Request, ServingEngine
+
+# workload datatype of each policy mode on the MC-IPU tile; bf16/fp32
+# projections run the FP16 datapath at full alignment width
+_MODE_TYPES = {"int4": sim.INT4, "int8": sim.INT8, "fp16_ipu": sim.FP16,
+               "bf16": sim.FP16, "fp32": sim.FP16}
+
+# literal parameter paths covering every projection-group pattern of the
+# model zoo (see registry.projection_groups): the cost model resolves a
+# policy's mode per group by matching the group pattern against these
+_CANDIDATE_PATHS = (
+    "block/full/attn/wq", "block/full/attn/wk", "block/full/attn/wv",
+    "block/full/attn/wo", "block/swa/attn/wq", "block/swa/attn/wo",
+    "block/mlp/w_gate", "block/mlp/w_up", "block/mlp/w_down",
+    "block/moe/experts",
+    "block/mix/w_r", "block/mix/w_o", "block/mix/c_key",
+    "block/rec/w_in_rnn", "block/rec/w_out",
+    "projector/fc1", "lm_head",
+)
+
+
+def _spec_width(spec: PrecisionSpec) -> int:
+    if spec.ipu is not None:
+        return max(spec.ipu.w, 10)
+    # bf16/fp32 model the wide-adder FP16 path (never multi-cycles);
+    # fp16_ipu without an explicit IPU config uses the paper's w=16
+    return 38 if spec.mode in ("bf16", "fp32") else 16
+
+
+def replica_cost(cfg: ModelConfig, policy: PrecisionPolicy,
+                 seed: int = 0) -> Dict[str, float]:
+    """Static per-token cost of serving ``cfg`` under ``policy``.
+
+    Sums ``core.simulator`` cycles of every projection group at its
+    policy-routed precision (one decode token), MAC-weights
+    ``core.area_power`` TOPS/W across groups, and carries the additive
+    analytic accuracy proxy the autotune planner searches on — the three
+    axes plan-aware routing trades off.
+    """
+    from repro.autotune.objectives import analytic_proxy
+    cycles = ideal = 0.0
+    macs_total = 0
+    seconds_per_watt = 0.0   # sum over groups of macs / (TOPS/W)
+    acc = 0.0
+    for g in projection_groups(cfg):
+        path = next((p for p in _CANDIDATE_PATHS if re.search(g.pattern, p)),
+                    None)
+        spec = policy.spec_for(path) if path else policy.default
+        types = _MODE_TYPES[spec.mode]
+        w = _spec_width(spec)
+        sw = spec.ipu.sw_precision if spec.ipu is not None else 28
+        tile = dataclasses.replace(sim.BIG_TILE, adder_w=w, cluster_size=1,
+                                   sw_precision=sw)
+        layer = ConvLayer(g.name, c=g.d_in, k=g.d_out, ho=1, wo=1, r=1,
+                          s=1, count=g.count)
+        stats = sim.simulate_network([layer], tile, types,
+                                     sim.FORWARD_SOURCE, seed=seed)
+        cycles += stats.cycles
+        ideal += stats.ideal_cycles
+        design = ap.IPUDesign(
+            f"route_{spec.mode}_w{w}", mult_a=4, mult_b=4, adder_w=w,
+            fp_support=True, tile=tile, cluster_size=1,
+            fp_mc_factor=stats.slowdown)
+        _, tops_w = ap.efficiency(design, types)
+        macs_total += g.macs_per_token
+        seconds_per_watt += g.macs_per_token / max(tops_w, 1e-9)
+        acc += analytic_proxy(spec.mode, w, sw)
+    return {
+        "cycles_per_token": cycles,
+        "ideal_cycles_per_token": ideal,
+        "tops_per_w": macs_total / max(seconds_per_watt, 1e-9),
+        "acc_proxy": acc,
+    }
+
+
+@dataclasses.dataclass
+class Replica:
+    """One serving engine + its precision policy and routing counters."""
+
+    name: str
+    policy_name: str
+    engine: ServingEngine
+    cost: Dict[str, float] = dataclasses.field(default_factory=dict)
+    routed: int = 0
+
+    @property
+    def load(self) -> float:
+        """Occupancy estimate: (active slots + waiting) / slots."""
+        eng = self.engine
+        active = sum(r is not None for r in eng.slot_req)
+        return (active + len(eng.scheduler)) / max(eng.b, 1)
+
+
+def _replica_name(policy_name: str) -> str:
+    if policy_name.startswith("plan:"):
+        stem = os.path.splitext(os.path.basename(policy_name[5:]))[0]
+        return f"plan:{stem}"
+    return policy_name
+
+
+def build_replicas(cfg: ModelConfig, policy_names: Sequence[str],
+                   params=None, batch_slots: int = 4, cache_len: int = 128,
+                   **engine_kw) -> List[Replica]:
+    """One replica per policy/plan ref, sharing a single parameter set
+    (policies quantize at apply time, so params are policy-independent)."""
+    import jax
+
+    from repro.models import registry
+    replicas: List[Replica] = []
+    names: Dict[str, int] = {}
+    for pname in policy_names:
+        rcfg = dataclasses.replace(cfg, precision_policy=pname)
+        api = registry.build(rcfg)
+        if params is None:
+            params = api.init(jax.random.PRNGKey(0))
+        engine = ServingEngine(rcfg, api, params, batch_slots=batch_slots,
+                               cache_len=cache_len, **engine_kw)
+        name = _replica_name(pname)
+        if name in names:           # duplicate policies stay addressable
+            names[name] += 1
+            name = f"{name}#{names[name]}"
+        else:
+            names[name] = 0
+        replicas.append(Replica(name=name, policy_name=pname,
+                                engine=engine,
+                                cost=replica_cost(rcfg, engine.policy)))
+    return replicas
+
+
+class Router:
+    """Places requests on replicas and drives their engines to drain."""
+
+    STRATEGIES = ("plan_aware", "least_loaded", "round_robin")
+
+    def __init__(self, replicas: Sequence[Replica],
+                 strategy: str = "plan_aware"):
+        if not replicas:
+            raise ValueError("router needs at least one replica")
+        if strategy not in self.STRATEGIES:
+            raise ValueError(f"unknown strategy {strategy!r} "
+                             f"(want one of {self.STRATEGIES})")
+        self.replicas = list(replicas)
+        self.strategy = strategy
+        self._rr = 0
+
+    def route(self, req: Request) -> Replica:
+        if self.strategy == "round_robin":
+            rep = self.replicas[self._rr % len(self.replicas)]
+            self._rr += 1
+            return rep
+        if self.strategy == "least_loaded":
+            return min(enumerate(self.replicas),
+                       key=lambda ir: (ir[1].load, ir[0]))[1]
+        # plan_aware: accuracy-tagged traffic takes the most accurate
+        # datapath; the rest takes the cheapest cycles/token, discounted
+        # by load so a hot replica spills onto the others
+        idx = range(len(self.replicas))
+        if "accuracy" in req.tags:
+            return min(zip(idx, self.replicas),
+                       key=lambda ir: (ir[1].cost.get("acc_proxy", 0.0),
+                                       ir[1].load, ir[0]))[1]
+        return min(zip(idx, self.replicas),
+                   key=lambda ir: (
+                       ir[1].cost.get("cycles_per_token", 0.0)
+                       * (1.0 + ir[1].load), ir[0]))[1]
+
+    def submit(self, req: Request) -> Replica:
+        rep = self.route(req)
+        rep.routed += 1
+        rep.engine.submit(req)
+        return rep
+
+    # ---------------------------------------------------------- execution
+
+    def has_pending(self) -> bool:
+        return any(r.engine.has_pending() for r in self.replicas)
+
+    def step(self) -> bool:
+        stepped = False
+        for rep in self.replicas:
+            if rep.engine.has_pending():
+                rep.engine.step()
+                stepped = True
+        return stepped
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> int:
+        ticks = 0
+        while self.has_pending():
+            self.step()
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError("router did not drain")
+        return ticks
+
+    # ------------------------------------------------------ observability
+
+    @property
+    def completed(self) -> Dict[int, Request]:
+        out: Dict[int, Request] = {}
+        for rep in self.replicas:
+            out.update(rep.engine.completed)
+        return out
+
+    def routing_counters(self) -> Dict[str, int]:
+        return {rep.name: rep.routed for rep in self.replicas}
+
+    def report(self) -> Dict:
+        """Per-replica routing counters, cost model, and engine metrics."""
+        return {
+            "strategy": self.strategy,
+            "replicas": {
+                rep.name: {
+                    "policy": rep.policy_name,
+                    "routed": rep.routed,
+                    "cost": dict(rep.cost),
+                    "metrics": rep.engine.metrics(),
+                } for rep in self.replicas
+            },
+        }

@@ -1,0 +1,415 @@
+"""Serving runtime coverage: engine drain edge cases, batched-prefill
+equivalence, scheduler policies, plan-aware routing, metrics schema, and
+the ``repro.launch.serve`` compat shim.
+
+The engine contract under refactor: batched prefill admission must
+produce the same per-slot cache state (and next-step logits) as the
+teacher-forced loop, and ``routing_report()`` must keep satisfying the
+plan→policy→routing round trip (also covered via the shim in
+tests/test_autotune.py).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.serving import (AdmissionScheduler, Request, Router,
+                           SchedulerFull, ServingEngine, build_replicas,
+                           percentiles, request_metrics)
+
+ARCH = "qwen2-0.5b"
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    import jax
+
+    from repro.models import registry
+    cfg = dataclasses.replace(reduced(ARCH),
+                              precision_policy="int8_serving")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _engine(lm_setup, **kw):
+    cfg, api, params = lm_setup
+    kw.setdefault("batch_slots", 3)
+    kw.setdefault("cache_len", 64)
+    return ServingEngine(cfg, api, params, **kw)
+
+
+def _requests(cfg, lengths, max_new):
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, n,
+                                               dtype=np.int32),
+                    max_new_tokens=m)
+            for i, (n, m) in enumerate(zip(lengths, max_new))]
+
+
+# --------------------------------------------------------------- engine
+
+class TestEngineDrain:
+    def test_more_requests_than_slots(self, lm_setup):
+        cfg = lm_setup[0]
+        eng = _engine(lm_setup, batch_slots=2)
+        reqs = _requests(cfg, [5, 7, 3, 9, 4, 6, 8], [3] * 7)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        assert len(eng.completed) == 7
+        for r in reqs:
+            assert r.done and r.new_tokens == 3
+
+    def test_mixed_max_new_and_zero_generation(self, lm_setup):
+        cfg = lm_setup[0]
+        eng = _engine(lm_setup)
+        reqs = _requests(cfg, [5, 6, 4, 7, 3], [4, 0, 1, 2, 0])
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        assert len(eng.completed) == 5
+        for r in reqs:
+            assert r.new_tokens == max(r.max_new_tokens, 0)
+        # zero-generation requests complete without ever decoding
+        assert reqs[1].first_token_time is None
+        assert reqs[1].finish_time is not None
+        assert reqs[1].tokens == [int(t) for t in reqs[1].prompt]
+
+    def test_single_token_and_empty_prompt(self, lm_setup):
+        cfg = lm_setup[0]
+        eng = _engine(lm_setup)
+        one = Request(rid=0, prompt=np.asarray([7], np.int32),
+                      max_new_tokens=2)
+        empty = Request(rid=1, prompt=np.zeros(0, np.int32),
+                        max_new_tokens=2)
+        eng.submit(one)
+        eng.submit(empty)
+        eng.run_until_drained()
+        assert one.new_tokens == 2
+        assert empty.done and empty.new_tokens == 0
+        # a 1-token prompt needs no prefill call at all
+        assert eng.counters["prefill_calls"] == 0
+
+    def test_oversized_requests_rejected_at_submit(self, lm_setup):
+        """Requests whose prompt + generation would wrap the KV ring
+        (silently truncating context) are rejected up front, and an
+        oversized request injected straight into the scheduler fails
+        terminally instead of killing the admission wave."""
+        eng = _engine(lm_setup, cache_len=8)
+        with pytest.raises(ValueError, match="cache positions"):
+            eng.submit(Request(rid=0, prompt=np.arange(12, dtype=np.int32),
+                               max_new_tokens=1))
+        # decode growth counts too: 5-1+5 > 8
+        with pytest.raises(ValueError, match="cache positions"):
+            eng.submit(Request(rid=1, prompt=np.arange(5, dtype=np.int32),
+                               max_new_tokens=5))
+        # exact fit (5-1+4 == 8) is admitted and completes
+        ok = Request(rid=2, prompt=np.arange(5, dtype=np.int32),
+                     max_new_tokens=4)
+        eng.submit(ok)
+        # bypassing submit() must not break the wave for other requests
+        bad = Request(rid=3, prompt=np.arange(12, dtype=np.int32),
+                      max_new_tokens=4)
+        eng.scheduler.submit(bad, now=0.0)
+        eng.run_until_drained()
+        assert ok.done and ok.new_tokens == 4 and ok.error is None
+        assert bad.done and bad.new_tokens == 0 and bad.error
+        assert set(eng.completed) == {2, 3}
+
+
+class TestBatchedPrefill:
+    def test_no_decode_per_prompt_token(self, lm_setup):
+        """A prompt of length S admits in one prefill call and decode
+        runs exactly max_new steps — never S teacher-forced decodes."""
+        cfg = lm_setup[0]
+        eng = _engine(lm_setup, prefill="batched", prefill_chunk=8)
+        eng.submit(_requests(cfg, [23], [4])[0])
+        eng.run_until_drained()
+        assert eng.counters["prefill_calls"] == 1
+        assert eng.counters["prefill_tokens"] == 22
+        assert eng.counters["decode_steps"] == 4
+        assert eng.counters["teacher_forced_tokens"] == 0
+
+    def test_matches_teacher_forced_admission(self):
+        """The bucket-padded prefill + per-slot cache merge produces the
+        same per-slot cache state and next-step logits as feeding the
+        prompt token-by-token through decode. Compared numerically under
+        the bf16 policy: greedy trajectories would amplify an argmax tie
+        into divergent completions, and dynamic fake-quant policies
+        legitimately differ between the paths (the per-tensor activation
+        absmax spans the whole prompt in prefill but one token in
+        decode)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import registry
+        cfg = dataclasses.replace(reduced(ARCH),
+                                  precision_policy="bf16")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        lengths = [5, 1, 9]          # mixed: one slot needs no prefill
+        engines = {}
+        for mode in ("batched", "teacher"):
+            eng = ServingEngine(cfg, api, params, batch_slots=3,
+                                cache_len=64, prefill=mode,
+                                prefill_chunk=4)
+            for r in _requests(cfg, lengths, [2] * len(lengths)):
+                eng.submit(r)
+            eng._admit()
+            engines[mode] = eng
+        fast, slow = engines["batched"], engines["teacher"]
+        assert np.array_equal(fast.pos, slow.pos)
+        assert fast.counters["prefill_calls"] == 1
+        assert slow.counters["teacher_forced_tokens"] == sum(
+            n - 1 for n in lengths)
+
+        # every cache leaf is (n_groups, slots, capacity, ...): the
+        # admitted prefix of each slot must carry the same K/V and tags
+        for lf, ls in zip(jax.tree.leaves(fast.caches),
+                          jax.tree.leaves(slow.caches)):
+            for slot, n in enumerate(lengths):
+                if n <= 1:
+                    continue
+                a = np.asarray(lf[:, slot, :n - 1], np.float32)
+                b = np.asarray(ls[:, slot, :n - 1], np.float32)
+                np.testing.assert_allclose(a, b, rtol=0.05, atol=0.05)
+
+        # and the first decode step sees the same distribution
+        tok = np.zeros((fast.b, 1), np.int32)
+        for s in range(fast.b):
+            tok[s, 0] = fast.slot_req[s].next_input
+            assert fast.slot_req[s].next_input \
+                == slow.slot_req[s].next_input
+        def first_logits(eng):
+            logits, _ = eng._decode(eng.params, jnp.asarray(tok),
+                                    jnp.asarray(eng.pos), eng.caches)
+            return np.asarray(logits, np.float32)
+        np.testing.assert_allclose(first_logits(fast),
+                                   first_logits(slow),
+                                   rtol=0.1, atol=0.1)
+
+    def test_batched_rejected_for_recurrent_families(self):
+        """Recurrent state is not position-tagged: padded prefill would
+        corrupt it, so forcing the fast path must fail fast."""
+        import jax
+
+        from repro.models import registry
+        cfg = reduced("rwkv6-1.6b")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="not eligible"):
+            ServingEngine(cfg, api, params, batch_slots=2, cache_len=16,
+                          prefill="batched")
+        # auto mode falls back to teacher forcing and still serves
+        eng = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16)
+        assert not eng._fast_prefill
+        eng.submit(Request(rid=0, prompt=np.asarray([3, 1, 4], np.int32),
+                           max_new_tokens=2))
+        eng.run_until_drained()
+        assert eng.completed[0].new_tokens == 2
+        assert eng.counters["teacher_forced_tokens"] == 2
+
+
+class TestRoutingReport:
+    def test_plan_policy_routing_roundtrip(self, lm_setup, tmp_path):
+        """Plan → policy → observed decode routing stays consistent
+        across the serving refactor."""
+        import jax
+
+        from repro.autotune.plan import PlanRule, PrecisionPlan
+        from repro.models import registry
+        from repro.models.registry import projection_groups
+
+        groups = {g.name: g for g in projection_groups(reduced(ARCH))}
+        plan = PrecisionPlan(
+            name="t", arch=ARCH,
+            rules=(PlanRule("attn_qkv", groups["attn_qkv"].pattern,
+                            "int8"),
+                   PlanRule("ffn_in", groups["ffn_in"].pattern, "int4")),
+            default_mode="bf16")
+        path = str(tmp_path / "plan.json")
+        plan.save(path)
+        cfg = dataclasses.replace(reduced(ARCH),
+                                  precision_policy=f"plan:{path}")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16)
+        routes = eng.routing_report()
+        assert routes, "decode step routed no projections"
+        policy = plan.to_policy()
+        for p, mode in routes.items():
+            assert mode == policy.spec_for(p).mode, p
+        assert routes["block/full/attn/wq"] == "int8"
+        assert routes["block/mlp/w_gate"] == "int4"
+        assert routes["block/full/attn/wo"] == "bf16"
+
+
+def test_launch_serve_shim():
+    from repro.launch import serve as shim
+    from repro.serving import engine as eng_mod
+    assert shim.ServingEngine is eng_mod.ServingEngine
+    assert shim.Request is eng_mod.Request
+    assert shim.make_serve_fns is eng_mod.make_serve_fns
+
+
+# ------------------------------------------------------------ scheduler
+
+def _req(rid, plen=4, priority=0, submit_time=None):
+    r = Request(rid=rid, prompt=np.zeros(plen, np.int32),
+                priority=priority)
+    r.submit_time = submit_time
+    return r
+
+
+class TestScheduler:
+    def test_priority_then_fifo(self):
+        s = AdmissionScheduler()
+        s.submit(_req(0, priority=1), now=0.0)
+        s.submit(_req(1, priority=0), now=0.0)
+        s.submit(_req(2, priority=0), now=0.0)
+        assert [r.rid for r in s.select(3, now=0.1)] == [1, 2, 0]
+
+    def test_max_wait_promotion(self):
+        s = AdmissionScheduler(max_wait=5.0)
+        s.submit(_req(0, priority=9), now=0.0)     # old, low priority
+        s.submit(_req(1, priority=0), now=4.0)     # fresh, high priority
+        # before promotion the high-priority request wins...
+        assert [r.rid for r in s.select(1, now=4.5)] == [1]
+        # ...after max_wait the starved one jumps every class
+        assert [r.rid for r in s.select(1, now=6.0)] == [0]
+
+    def test_bounded_queue_raises(self):
+        s = AdmissionScheduler(max_queue=2)
+        s.submit(_req(0))
+        s.submit(_req(1))
+        with pytest.raises(SchedulerFull):
+            s.submit(_req(2))
+        assert len(s) == 2
+
+    def test_prefill_budget_defers_long_prompts(self):
+        s = AdmissionScheduler(prefill_budget=8)
+        s.submit(_req(0, plen=9), now=0.0)    # cost 8: fills the budget
+        s.submit(_req(1, plen=9), now=0.0)    # cost 8: over budget
+        s.submit(_req(2, plen=3), now=0.0)    # cost 2: over budget too
+        wave = s.select(3, now=0.1)
+        assert [r.rid for r in wave] == [0]   # progress guarantee only
+        assert [r.rid for r in s.select(3, now=0.2)] == [1]
+        assert [r.rid for r in s.select(3, now=0.3)] == [2]
+
+    def test_promoted_bypass_budget(self):
+        s = AdmissionScheduler(prefill_budget=4, max_wait=1.0)
+        s.submit(_req(0, plen=9), now=0.0)
+        s.submit(_req(1, plen=9), now=0.0)
+        assert len(s.select(2, now=5.0)) == 2  # both promoted
+
+
+# --------------------------------------------------------------- router
+
+@pytest.fixture(scope="module")
+def two_replicas(lm_setup):
+    cfg, _, params = lm_setup
+    base = dataclasses.replace(cfg, precision_policy="bf16")
+    return build_replicas(base, ("int8_serving", "bf16"), params=params,
+                          batch_slots=2, cache_len=32)
+
+
+class TestRouter:
+    def test_cost_model_orders_replicas(self, two_replicas):
+        int8, bf16 = two_replicas
+        assert int8.cost["cycles_per_token"] \
+            < bf16.cost["cycles_per_token"]
+        assert bf16.cost["acc_proxy"] < int8.cost["acc_proxy"]
+        assert int8.cost["tops_per_w"] > 0 and bf16.cost["tops_per_w"] > 0
+
+    def test_plan_aware_routes_by_tag(self, two_replicas):
+        router = Router(two_replicas, strategy="plan_aware")
+        cheap = router.route(Request(rid=0,
+                                     prompt=np.zeros(4, np.int32)))
+        accurate = router.route(Request(rid=1,
+                                        prompt=np.zeros(4, np.int32),
+                                        tags=("accuracy",)))
+        assert cheap.name == "int8_serving"
+        assert accurate.name == "bf16"
+
+    def test_round_robin_alternates(self, two_replicas):
+        router = Router(two_replicas, strategy="round_robin")
+        names = [router.route(_req(i)).name for i in range(4)]
+        assert names == ["int8_serving", "bf16", "int8_serving", "bf16"]
+
+    def test_mixed_workload_drains_and_counts(self, two_replicas):
+        router = Router(two_replicas, strategy="plan_aware")
+        rng = np.random.default_rng(1)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, 512, 5, dtype=np.int32),
+                        max_new_tokens=2,
+                        tags=("accuracy",) if i % 2 else ())
+                for i in range(6)]
+        for r in reqs:
+            router.submit(r)
+        router.run_until_drained()
+        assert len(router.completed) == 6
+        counters = router.routing_counters()
+        assert sum(counters.values()) == 6
+        assert all(n > 0 for n in counters.values()), counters
+        rep = router.report()
+        assert rep["strategy"] == "plan_aware"
+        for name, r in rep["replicas"].items():
+            assert r["metrics"]["counters"]["teacher_forced_tokens"] == 0
+
+    def test_invalid_strategy_and_empty(self, two_replicas):
+        with pytest.raises(ValueError):
+            Router(two_replicas, strategy="nope")
+        with pytest.raises(ValueError):
+            Router([])
+
+    def test_replica_cost_covers_every_group(self, lm_setup):
+        """Every projection group must resolve to a policy mode — a
+        pattern no candidate path matches would silently drop a group
+        from the cost model."""
+        import re
+
+        from repro.models.registry import projection_groups
+        from repro.serving.router import _CANDIDATE_PATHS
+        for arch in ("qwen2-0.5b", "rwkv6-1.6b", "recurrentgemma-9b",
+                     "mixtral-8x7b", "internvl2-1b",
+                     "seamless-m4t-medium", "gemma2-9b"):
+            for g in projection_groups(reduced(arch)):
+                assert any(re.search(g.pattern, p)
+                           for p in _CANDIDATE_PATHS), (arch, g.name)
+
+
+# -------------------------------------------------------------- metrics
+
+class TestMetrics:
+    def test_percentiles_empty_and_none_safe(self):
+        assert percentiles([]) == {}
+        assert percentiles([None, None]) == {}
+        block = percentiles([1.0, 2.0, 3.0, None])
+        assert block["p50"] == 2.0 and block["max"] == 3.0
+
+    def test_request_metrics_decomposition(self):
+        r = Request(rid=0, prompt=np.zeros(3, np.int32))
+        r.tokens = [0, 0, 0, 1, 2]
+        r.submit_time, r.admit_time = 10.0, 10.5
+        r.first_token_time, r.finish_time = 11.0, 12.5
+        m = request_metrics(r)
+        assert m["ttft_s"] == pytest.approx(1.0)
+        assert m["queue_delay_s"] == pytest.approx(0.5)
+        assert m["e2e_s"] == pytest.approx(2.5)
+        assert m["new_tokens"] == 2
+        assert m["tok_per_s"] == pytest.approx(1.0)
+
+    def test_engine_metrics_schema(self, lm_setup):
+        cfg = lm_setup[0]
+        eng = _engine(lm_setup)
+        for r in _requests(cfg, [4, 6], [2, 2]):
+            eng.submit(r)
+        eng.run_until_drained()
+        m = eng.metrics()
+        assert m["n"] == 2 and m["new_tokens"] == 4
+        for key in ("ttft_s", "queue_delay_s", "e2e_s"):
+            assert m[key] and m[key]["p50"] >= 0.0
+        assert m["counters"]["prefill_calls"] >= 1
+        assert m["queue"] == 0 and m["active_slots"] == 0
