@@ -10,7 +10,12 @@ reported tok/s is steady-state serving throughput, not jit latency.
 
 Reports decode tok/s plus the latency distribution of the runtime —
 TTFT and queue-delay percentiles per policy — and a two-replica
-plan-aware router pass. Emits two artifacts:
+plan-aware router pass. Each policy is measured twice: with the
+prepared-weight datapath (quant.prepare storage, the default) and with
+preparation disabled (per-step dynamic weight quantization, the
+pre-refactor behavior), so the trajectory captures both the decode
+speedup and the per-replica weight-resident-bytes win. Emits two
+artifacts:
 
 * ``serve_bench.json`` — full per-policy detail (back-compat name);
 * ``BENCH_serving.json`` — the compact trajectory row ``benchmarks/run.py``
@@ -28,9 +33,11 @@ from repro.serving import Request, Router, ServingEngine, build_replicas
 from repro.models import registry
 
 POLICIES = ("bf16", "int8_serving", "int4_serving", "paper_hybrid")
-N_REQUESTS = 6
+N_REQUESTS = 8
 PROMPT_LEN = 8
-MAX_NEW = 8
+# enough decode steps that the timed region dwarfs per-tick Python
+# overhead jitter (the prepared-vs-dynamic delta is the measurement)
+MAX_NEW = 32
 
 
 def _workload(cfg, tagged_every=0):
@@ -59,26 +66,65 @@ def _warmup(engine):
         engine.counters[k] = 0
 
 
-def _bench_policy(policy: str):
-    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
-                              precision_policy=policy)
-    api = registry.build(cfg)
-    params = api.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, api, params, batch_slots=4, cache_len=128)
-    _warmup(engine)
+def _reset(engine):
+    engine.completed.clear()
+    for k in engine.counters:
+        engine.counters[k] = 0
+
+
+def _timed_pass(engine, cfg):
+    """Submit the standard workload, drain, return (tok/s, ticks, dt)."""
+    _reset(engine)
     for req in _workload(cfg):
         engine.submit(req)
     t0 = time.time()
     ticks = engine.run_until_drained()
     dt = time.time() - t0
-    m = engine.metrics()
-    new_tokens = m["new_tokens"]
+    return engine.metrics()["new_tokens"] / dt, ticks, dt
+
+
+def _bench_policy(policy: str, repeats: int = 3):
+    """One policy, prepared AND dynamic engines, alternating timed
+    passes (best-of-``repeats``, so a machine-load spike during one
+    pass cannot invert the prepared-vs-dynamic comparison)."""
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy=policy)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engines = {
+        "prepared": ServingEngine(cfg, api, params, batch_slots=4,
+                                  cache_len=128, prepare_weights=True),
+        "dynamic": ServingEngine(cfg, api, params, batch_slots=4,
+                                 cache_len=128, prepare_weights=False),
+    }
+    for eng in engines.values():
+        _warmup(eng)
+    # best pass per engine, keeping the ticks/seconds of that pass so
+    # the reported latency and throughput describe the same run
+    best = {k: (0.0, 0, 0.0) for k in engines}
+    for _ in range(repeats):
+        for name, eng in engines.items():
+            tok_s, ticks, seconds = _timed_pass(eng, cfg)
+            if tok_s > best[name][0]:
+                best[name] = (tok_s, ticks, seconds)
+    eng = engines["prepared"]
+    m = eng.metrics()
     return {
-        "tok_per_s": new_tokens / dt, "ticks": ticks, "seconds": dt,
+        "tok_per_s": best["prepared"][0],
+        "ticks": best["prepared"][1],
+        "seconds": best["prepared"][2],
+        "tok_per_s_dynamic": best["dynamic"][0],
         "ttft_s": m["ttft_s"], "queue_delay_s": m["queue_delay_s"],
         "prefill_calls": m["counters"]["prefill_calls"],
         "prefill_tokens": m["counters"]["prefill_tokens"],
         "decode_steps": m["counters"]["decode_steps"],
+        "weight_bytes": m["weight_bytes"]["projections"],
+        "weight_bytes_total": m["weight_bytes"]["total"],
+        "weight_bytes_dynamic":
+            engines["dynamic"].weight_bytes()["projections"],
+        "weight_quants_per_step": eng.weight_quant_trace_count(),
+        "weight_quants_per_step_dynamic":
+            engines["dynamic"].weight_quant_trace_count(),
     }
 
 
@@ -113,8 +159,10 @@ def run(verbose: bool = True):
             qd = r["queue_delay_s"].get("p90", 0.0) * 1e3
             row(f"serve/{policy}",
                 r["seconds"] * 1e6 / max(MAX_NEW * N_REQUESTS, 1),
-                f"{r['tok_per_s']:.1f} tok/s, {r['ticks']} ticks, "
-                f"ttft_p50={ttft:.0f}ms, queue_p90={qd:.0f}ms")
+                f"{r['tok_per_s']:.1f} tok/s prepared "
+                f"({r['tok_per_s_dynamic']:.1f} dynamic), "
+                f"{r['ticks']} ticks, ttft_p50={ttft:.0f}ms, "
+                f"queue_p90={qd:.0f}ms, w={r['weight_bytes']}B")
     router_r = _bench_router()
     if verbose:
         row("serve/router[int8+bf16]",
@@ -126,6 +174,16 @@ def run(verbose: bool = True):
     base = results["bf16"]["tok_per_s"]
     summary = {
         "tok_per_s": {p: results[p]["tok_per_s"] for p in POLICIES},
+        "tok_per_s_dynamic": {p: results[p]["tok_per_s_dynamic"]
+                              for p in POLICIES},
+        "prepared_speedup": {p: results[p]["tok_per_s"]
+                             / results[p]["tok_per_s_dynamic"]
+                             for p in POLICIES},
+        "weight_bytes": {p: results[p]["weight_bytes"]
+                         for p in POLICIES},
+        "weight_bytes_fp32": results["bf16"]["weight_bytes_dynamic"],
+        "weight_quants_per_step": {
+            p: results[p]["weight_quants_per_step"] for p in POLICIES},
         "speedup_vs_bf16": {p: results[p]["tok_per_s"] / base
                             for p in POLICIES},
         "ttft_p50_ms": {p: results[p]["ttft_s"].get("p50", 0.0) * 1e3
@@ -144,7 +202,8 @@ def run(verbose: bool = True):
     if verbose:
         print("serve: " + ", ".join(
             f"{k}={v['tok_per_s']:.1f} tok/s "
-            f"({v['tok_per_s'] / base:.2f}x bf16)"
+            f"({v['tok_per_s'] / base:.2f}x bf16, "
+            f"{summary['prepared_speedup'][k]:.2f}x dynamic)"
             for k, v in results.items()))
     return summary
 

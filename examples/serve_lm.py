@@ -50,10 +50,13 @@ def run_router(args, cfg):
                               cache_len=128)
     router = Router(replicas, strategy=args.strategy)
     for rep in replicas:
+        storage = "prepared" if rep.engine.prepared else "dynamic"
         print(f"replica {rep.name}: cycles/tok="
               f"{rep.cost['cycles_per_token']:.4g} "
               f"tops/W={rep.cost['tops_per_w']:.3g} "
-              f"acc_proxy={rep.cost['acc_proxy']:.3g}")
+              f"acc_proxy={rep.cost['acc_proxy']:.3g} "
+              f"weights={rep.cost['weight_bytes']['projections']}B "
+              f"({storage})")
 
     t0 = time.time()
     for req in _mixed_workload(cfg, args.requests, args.max_new):

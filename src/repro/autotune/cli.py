@@ -150,8 +150,53 @@ def cmd_score(argv: List[str]) -> int:
     return 0
 
 
+def plan_weight_bytes(arch: str, modes, shapes: str = "full"
+                      ) -> Optional[float]:
+    """Estimated weight-resident bytes of serving ``arch`` with each
+    projection group stored in its assigned mode (quant.prepare storage
+    formats: packed nibbles for int4, int8 + per-out-channel scales,
+    fp16 casts; bf16/fp32 raw). Matches what the serving engine keeps
+    resident: the head/embedding group is costed at fp32 regardless of
+    its assigned mode (``registry.projection_paths`` never routes it
+    through preparation), and MoE experts are costed at their *stored*
+    count (all ``n_experts``, not the ``top_k`` executed per token).
+    None when the arch is unknown."""
+    from repro.models.registry import projection_groups
+    from repro.quant.prepare import MODE_BYTES_PER_PARAM
+    try:
+        from repro.configs import get_config, reduced
+        cfg = reduced(arch) if shapes == "reduced" else get_config(arch)
+    except KeyError:
+        return None
+    total = 0.0
+    for g in projection_groups(cfg):
+        mode = modes.get(g.name)
+        if mode is None:
+            return None              # partial assignment: no estimate
+        count = g.count
+        if g.name == "moe_experts" and cfg.moe:
+            count = 3 * cfg.moe.n_experts * cfg.n_layers
+        if g.name == "head":
+            mode = "fp32"            # never prepared: stays raw resident
+        total += g.d_in * g.d_out * count * MODE_BYTES_PER_PARAM[mode]
+        if mode in ("int8", "int4"):
+            total += g.d_out * count * 4     # f32 scales per out-channel
+    return total
+
+
+def _fmt_bytes(n: Optional[float]) -> str:
+    if n is None:
+        return "?"
+    for unit in ("B", "KB", "MB", "GB"):
+        if n < 1024 or unit == "GB":
+            return f"{n:.0f}{unit}" if unit == "B" else f"{n:.2f}{unit}"
+        n /= 1024
+    return f"{n:.2f}GB"
+
+
 def render_report(plan: PrecisionPlan) -> str:
     """Markdown Pareto report of a plan artifact."""
+    shapes = plan.meta.get("shapes", "full")
     lines = [
         f"# Precision plan `{plan.name}` ({plan.arch})",
         "",
@@ -173,18 +218,20 @@ def render_report(plan: PrecisionPlan) -> str:
         "",
         "## Pareto frontier (cycles v, acc_proxy v, TOPS/W ^)",
         "",
-        "| plan | cycles | TOPS/mm2 | TOPS/W | acc proxy | modes |",
-        "|---|---|---|---|---|---|",
+        "| plan | cycles | TOPS/mm2 | TOPS/W | acc proxy | weights "
+        "| modes |",
+        "|---|---|---|---|---|---|---|",
     ]
     for p in plan.frontier:
         m = p["metrics"]
         modes = ", ".join(f"{g}:{mo}" for g, mo in m["modes"].items())
         sel = " **(selected)**" if p["name"] == plan.meta.get(
             "selected_from") else ""
+        wb = plan_weight_bytes(plan.arch, m["modes"], shapes)
         lines.append(
             f"| {p['name']}{sel} | {m['cycles']:.4g} "
             f"| {m['tops_per_mm2']:.2f} | {m['tops_per_w']:.3f} "
-            f"| {m['acc_proxy']:.3g} | {modes} |")
+            f"| {m['acc_proxy']:.3g} | {_fmt_bytes(wb)} | {modes} |")
     return "\n".join(lines) + "\n"
 
 

@@ -9,12 +9,26 @@
     interpreter overhead that would pollute §Perf numbers) and as the
     oracle in kernel tests.
 
+Interpret mode is resolved per call from the ``REPRO_KERNEL_INTERPRET``
+environment variable (1/0, true/false; default: interpret everywhere
+except on a real TPU backend) and passed down as a jit *static*
+argument — no module global to mutate, so launch scripts configure it
+through the environment and concurrent callers can't race on it. The
+wrappers' own jit caches key on the resolved choice; a caller that
+traces these wrappers inside an *outer* jit (e.g. the serving engine's
+decode program) bakes the choice in at trace time, so set the
+environment before building such programs.
+
 Quantized matmul wrappers fold per-channel scales in an epilogue, which
-is how the deployment path (quant/ + layers/mplinear.py) consumes them.
+is how the deployment path (quant/ + layers/mplinear.py) consumes them:
+dynamically quantized weights through :func:`quantized_matmul`,
+ahead-of-time nibble-packed weights (quant.prepare) through
+:func:`quantized_matmul_packed`.
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -25,12 +39,30 @@ from repro.kernels import mpmm as _mpmm
 from repro.kernels import qmm as _qmm
 from repro.kernels import ref as _ref
 
-_INTERPRET = True  # no TPU in this container; flipped by launch scripts
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def kernel_interpret() -> bool:
+    """Interpret-mode choice for the Pallas kernels, read per call.
+
+    ``REPRO_KERNEL_INTERPRET`` overrides (1/0, true/false); the default
+    interprets everywhere except on a real TPU backend. Read at wrapper
+    level so it reaches the kernels as a static jit argument (resolved
+    at trace time when called from inside an outer jit).
+    """
+    v = os.environ.get("REPRO_KERNEL_INTERPRET", "").strip().lower()
+    if v in _TRUE:
+        return True
+    if v in _FALSE:
+        return False
+    return jax.default_backend() != "tpu"
 
 
 def pack_int4(w: jax.Array) -> jax.Array:
-    """Pack (K, N) int4-valued int8 weights into (K//2, N) bytes."""
-    if w.shape[0] % 2:
+    """Pack (..., K, N) int4-valued int8 weights into (..., K//2, N)
+    bytes (two nibbles per byte along the contraction dim)."""
+    if w.shape[-2] % 2:
         raise ValueError("K must be even to pack nibbles")
     return _ref.pack_int4_ref(w)
 
@@ -39,37 +71,68 @@ def unpack_int4(packed: jax.Array) -> jax.Array:
     return _ref.unpack_int4_ref(packed)
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def _int8_matmul(a, b, *, backend: str, interpret: bool):
+    if backend == "xla":
+        return _ref.qmm_ref(a, b)
+    return _qmm.qmm(a, b, interpret=interpret)
+
+
 def int8_matmul(a: jax.Array, b: jax.Array, *, backend: str = "pallas"
                 ) -> jax.Array:
     """(M,K) int8 x (K,N) int8 -> (M,N) int32."""
+    return _int8_matmul(a, b, backend=backend, interpret=kernel_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def _int4_matmul_packed(a, b_packed, *, backend: str, interpret: bool):
     if backend == "xla":
-        return _ref.qmm_ref(a, b)
-    return _qmm.qmm(a, b, interpret=_INTERPRET)
+        return _ref.qmm_ref(a, _ref.unpack_int4_ref(b_packed))
+    return _qmm.qmm_packed(a, b_packed, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
 def int4_matmul_packed(a: jax.Array, b_packed: jax.Array, *,
                        backend: str = "pallas") -> jax.Array:
     """(M,K) int8 activations x (K//2,N) packed int4 weights -> int32."""
-    if backend == "xla":
-        return _ref.qmm_ref(a, _ref.unpack_int4_ref(b_packed))
-    return _qmm.qmm_packed(a, b_packed, interpret=_INTERPRET)
+    return _int4_matmul_packed(a, b_packed, backend=backend,
+                               interpret=kernel_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
-def quantized_matmul(a_q: jax.Array, b_q: jax.Array, scale_a: jax.Array,
-                     scale_b: jax.Array, *, backend: str = "pallas"
-                     ) -> jax.Array:
-    """Dequantizing matmul: int8/int4-valued operands with per-row (M,)
-    activation scales and per-column (N,) weight scales -> f32."""
-    acc = int8_matmul(a_q, b_q, backend=backend)
+def _scale_epilogue(acc: jax.Array, scale_a: jax.Array,
+                    scale_b: jax.Array) -> jax.Array:
     return (acc.astype(jnp.float32)
             * scale_a[:, None].astype(jnp.float32)
             * scale_b[None, :].astype(jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "fused", "backend"))
+def quantized_matmul(a_q: jax.Array, b_q: jax.Array, scale_a: jax.Array,
+                     scale_b: jax.Array, *, backend: str = "pallas"
+                     ) -> jax.Array:
+    """Dequantizing matmul: int8/int4-valued operands with per-row (M,)
+    activation scales and per-column (N,) weight scales -> f32."""
+    return _scale_epilogue(int8_matmul(a_q, b_q, backend=backend),
+                           scale_a, scale_b)
+
+
+def quantized_matmul_packed(a_q: jax.Array, b_packed: jax.Array,
+                            scale_a: jax.Array, scale_b: jax.Array, *,
+                            backend: str = "pallas") -> jax.Array:
+    """Dequantizing matmul over prepared nibble-packed weights: same
+    epilogue as :func:`quantized_matmul`, so prepared int4 serving is
+    bit-exact to the dynamic-quantization path on the same values."""
+    return _scale_epilogue(
+        int4_matmul_packed(a_q, b_packed, backend=backend),
+        scale_a, scale_b)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "fused", "backend", "interpret"))
+def _mp_matmul(a, b, cfg, *, fused: bool, backend: str, interpret: bool):
+    if backend == "xla":
+        return _ref.mp_matmul_xla(a, b, cfg, fused=fused)
+    return _mpmm.mp_matmul(a, b, cfg, fused=fused, interpret=interpret)
+
+
 def mp_matmul(a: jax.Array, b: jax.Array, cfg: IPUConfig = IPUConfig(),
               *, fused: bool = False, backend: str = "pallas"
               ) -> jax.Array:
@@ -77,6 +140,5 @@ def mp_matmul(a: jax.Array, b: jax.Array, cfg: IPUConfig = IPUConfig(),
 
     ``fused=False`` is the paper-faithful nine-plane datapath;
     ``fused=True`` the optimized single-plane variant (§Perf)."""
-    if backend == "xla":
-        return _ref.mp_matmul_xla(a, b, cfg, fused=fused)
-    return _mpmm.mp_matmul(a, b, cfg, fused=fused, interpret=_INTERPRET)
+    return _mp_matmul(a, b, cfg, fused=fused, backend=backend,
+                      interpret=kernel_interpret())

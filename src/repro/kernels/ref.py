@@ -24,9 +24,10 @@ def qmm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def pack_int4_ref(w: jax.Array) -> jax.Array:
-    """Pack int4 weights (K, N) int8 in [-8, 7] -> (K//2, N) bytes."""
-    lo = w[0::2].astype(jnp.int32) & 0xF
-    hi = w[1::2].astype(jnp.int32) & 0xF
+    """Pack int4 weights (..., K, N) int8 in [-8, 7] -> (..., K//2, N)
+    bytes; leading (stacked-block / expert) axes pass through."""
+    lo = w[..., 0::2, :].astype(jnp.int32) & 0xF
+    hi = w[..., 1::2, :].astype(jnp.int32) & 0xF
     return ((hi << 4) | lo).astype(jnp.int8)
 
 
@@ -34,8 +35,9 @@ def unpack_int4_ref(packed: jax.Array) -> jax.Array:
     p = packed.astype(jnp.int32)
     lo = ((p & 0xF) ^ 8) - 8
     hi = p >> 4
-    k2, n = packed.shape
-    return jnp.stack([lo, hi], 1).reshape(2 * k2, n).astype(jnp.int8)
+    k2, n = packed.shape[-2:]
+    out = jnp.stack([lo, hi], axis=-2)          # (..., K//2, 2, N)
+    return out.reshape(*packed.shape[:-2], 2 * k2, n).astype(jnp.int8)
 
 
 def mp_matmul_ref(a: jax.Array, b: jax.Array,

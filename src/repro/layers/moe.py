@@ -119,13 +119,25 @@ def forward(params, cfg: MoEConfig, x, policy, path: str):
     xe = act_sharding.constrain(xe, act_sharding.DP, act_sharding.MDL)
     spec = policy.spec_for(f"{path}/experts")
     fn = activation(cfg.act)
-    wg, wu, wd = (params["w_gate"]["w"], params["w_up"]["w"],
-                  params["w_down"]["w"])
-    if spec.weight_bits:  # per-expert per-out-channel fake-quant
-        from repro.quant.quantize import fake_quant
-        wg = fake_quant(wg.astype(jnp.float32), spec.weight_bits, axis=1)
-        wu = fake_quant(wu.astype(jnp.float32), spec.weight_bits, axis=1)
-        wd = fake_quant(wd.astype(jnp.float32), spec.weight_bits, axis=1)
+
+    def expert_weights(w):
+        """Raw stacked (E, d_in, d_out) experts fake-quant per call;
+        prepared containers (quant.prepare) dequantize from storage —
+        bit-exact to the dynamic value, no per-call quantization."""
+        from repro.layers.mplinear import note_weight_quant
+        from repro.quant.prepare import PreparedWeight
+        if isinstance(w, PreparedWeight):
+            return w.dequant()
+        if spec.weight_bits:  # per-expert per-out-channel fake-quant
+            from repro.quant.quantize import fake_quant
+            note_weight_quant()
+            return fake_quant(w.astype(jnp.float32), spec.weight_bits,
+                              axis=-2)
+        return w
+
+    wg, wu, wd = (expert_weights(params["w_gate"]["w"]),
+                  expert_weights(params["w_up"]["w"]),
+                  expert_weights(params["w_down"]["w"]))
     g = jnp.einsum("gecd,edf->gecf", xe.astype(jnp.bfloat16),
                    wg.astype(jnp.bfloat16))
     u = jnp.einsum("gecd,edf->gecf", xe.astype(jnp.bfloat16),

@@ -1,17 +1,35 @@
 """Mixed-precision linear layer: every model projection routes through
-here, and the PrecisionPolicy decides which datapath executes it.
+here, and the PrecisionSpec decides which datapath executes it.
+
+Dispatch is a registry (``spec.mode -> executor``) instead of an
+``if/elif`` ladder: new modes (int12, per-group scales, fp8) plug in via
+:func:`register_executor` without touching any call site. Every executor
+consumes either a raw fp32 weight *or* a ``quant.prepare.PreparedWeight``
+container holding the weight in its deployment storage format — the
+prepared path skips the per-call weight quantization entirely (decode
+stops re-quantizing static weights every token) and, for packed INT4,
+feeds nibbles straight to the packed kernel.
 
 Paths:
   bf16 / fp32  — dense jnp.dot in the compute dtype.
   int8 / int4  — fake-quant (default; MXU + shardable + STE gradients)
-                 or exact integer Pallas kernels (fidelity).
+                 or exact integer Pallas kernels (fidelity). Prepared
+                 weights dequantize (fake-quant path, bit-exact to the
+                 dynamic quantize-dequantize) or ride the int kernels
+                 directly (exact path).
   fp16_ipu     — exact=False: fp16-cast operands, f32 accumulation (what
                  a w>=28 IPU computes up to accumulator granularity);
                  exact=True: bit-exact kernels.ops.mp_matmul.
+
+The ``count_weight_quant`` hook counts dynamic (per-call) weight
+quantizations entering a trace — the observability surface the
+serving-smoke CI contract uses to prove prepared replicas never
+quantize weights per decode step.
 """
 from __future__ import annotations
 
-from typing import Optional
+import contextlib
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +37,132 @@ import jax.numpy as jnp
 from repro.core.policy import PrecisionSpec
 from repro.kernels import ops as kops
 from repro.layers.common import dense_init
+from repro.quant.prepare import PreparedWeight
 from repro.quant.quantize import fake_quant, quantize_symmetric
 
+# ------------------------------------------------------------- registry
+
+_EXECUTORS: Dict[str, Callable] = {}
+
+
+def register_executor(*modes: str):
+    """Register an executor for one or more policy modes. The executor
+    signature is ``fn(w, x, spec, compute_dtype) -> y`` where ``w`` is a
+    raw (d_in, d_out) array or a PreparedWeight and ``x`` is
+    (..., d_in); it returns (..., d_out) before bias/cast."""
+    def deco(fn):
+        for m in modes:
+            _EXECUTORS[m] = fn
+        return fn
+    return deco
+
+
+def executor_for(mode: str) -> Callable:
+    try:
+        return _EXECUTORS[mode]
+    except KeyError:
+        raise ValueError(
+            f"no executor registered for precision mode {mode!r} "
+            f"(known: {sorted(_EXECUTORS)})") from None
+
+
+# ------------------------------------------- weight-quantization counter
+
+_WEIGHT_QUANT_COUNT: Optional[List[int]] = None
+
+
+@contextlib.contextmanager
+def count_weight_quant():
+    """Count dynamic weight quantizations traced while open. Prepared
+    weights never hit this counter; raw weights under an int/fp16 spec
+    bump it once per projection per traced forward."""
+    global _WEIGHT_QUANT_COUNT
+    prev = _WEIGHT_QUANT_COUNT
+    box = [0]
+    _WEIGHT_QUANT_COUNT = box
+    try:
+        yield box
+    finally:
+        _WEIGHT_QUANT_COUNT = prev
+
+
+def note_weight_quant(n: int = 1):
+    """Executors (and moe.forward) call this on the dynamic
+    weight-quantize branch; a no-op outside count_weight_quant()."""
+    if _WEIGHT_QUANT_COUNT is not None:
+        _WEIGHT_QUANT_COUNT[0] += n
+
+
+# ------------------------------------------------------------ executors
+
+def _weight_scale_vec(w: PreparedWeight) -> jax.Array:
+    """(N,) per-out-channel scales from the stored keepdims layout."""
+    return w.scale.reshape(-1)
+
+
+@register_executor("bf16", "fp32")
+def _dense_executor(w, x, spec: PrecisionSpec, compute_dtype):
+    dt = jnp.bfloat16 if spec.mode == "bf16" else jnp.float32
+    wf = w.dequant() if isinstance(w, PreparedWeight) else w
+    return jnp.dot(x.astype(dt), wf.astype(dt),
+                   preferred_element_type=jnp.float32)
+
+
+@register_executor("int8", "int4")
+def _int_executor(w, x, spec: PrecisionSpec, compute_dtype):
+    bits = spec.weight_bits
+    prepared = (isinstance(w, PreparedWeight)
+                and w.weight_bits == bits)
+    if not spec.exact:
+        # fake-quant both operands; per-out-channel weight scales.
+        # Prepared weights dequantize to the identical q * scale value.
+        if prepared:
+            wq = w.dequant()
+        else:
+            note_weight_quant()
+            wraw = w.dequant() if isinstance(w, PreparedWeight) else w
+            wq = fake_quant(wraw.astype(jnp.float32), bits, axis=0)
+        xq = fake_quant(x.astype(jnp.float32), bits if bits == 8 else 8)
+        return jnp.dot(xq.astype(compute_dtype), wq.astype(compute_dtype),
+                       preferred_element_type=jnp.float32)
+    # exact integer kernel path: dynamic activation quantization, weight
+    # operands straight from storage when prepared
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    aq, sa = quantize_symmetric(x2, 8, axis=1)
+    if prepared and w.kind == "int4_packed":
+        y = kops.quantized_matmul_packed(aq, w.data, sa[:, 0],
+                                         _weight_scale_vec(w))
+    elif prepared:
+        y = kops.quantized_matmul(aq, w.data, sa[:, 0],
+                                  _weight_scale_vec(w))
+    else:
+        note_weight_quant()
+        wraw = w.dequant() if isinstance(w, PreparedWeight) else w
+        wq, sw = quantize_symmetric(wraw, bits, axis=0)
+        y = kops.quantized_matmul(aq, wq, sa[:, 0], sw[0, :])
+    return y.reshape(*lead, -1)
+
+
+@register_executor("fp16_ipu")
+def _fp16_ipu_executor(w, x, spec: PrecisionSpec, compute_dtype):
+    if isinstance(w, PreparedWeight) and w.kind == "fp16":
+        w16 = w.data
+    else:
+        note_weight_quant()
+        wraw = w.dequant() if isinstance(w, PreparedWeight) else w
+        w16 = wraw.astype(jnp.float16)
+    if not spec.exact:
+        return jnp.dot(x.astype(jnp.float16), w16,
+                       preferred_element_type=jnp.float32)
+    cfg = spec.ipu
+    lead = x.shape[:-1]
+    x2 = x.astype(jnp.float16).reshape(-1, x.shape[-1])
+    y = kops.mp_matmul(x2, w16, cfg, backend="xla")
+    return y.astype(jnp.float32).reshape(*lead, -1)
+
+
+# -------------------------------------------------------------- wrapper
 
 def linear_init(key, d_in: int, d_out: int, bias: bool = False,
                 dtype=jnp.float32):
@@ -33,44 +175,8 @@ def linear_init(key, d_in: int, d_out: int, bias: bool = False,
 def mp_linear(params, x: jax.Array, spec: PrecisionSpec,
               compute_dtype=jnp.bfloat16) -> jax.Array:
     """y = x @ w (+ b) under the precision spec. x: (..., d_in)."""
-    w = params["w"]
+    y = executor_for(spec.mode)(params["w"], x, spec, compute_dtype)
     b = params.get("b")
-
-    if spec.mode in ("bf16", "fp32"):
-        dt = jnp.bfloat16 if spec.mode == "bf16" else jnp.float32
-        y = jnp.dot(x.astype(dt), w.astype(dt),
-                    preferred_element_type=jnp.float32)
-
-    elif spec.mode in ("int8", "int4"):
-        bits = spec.weight_bits
-        if not spec.exact:
-            # fake-quant both operands; per-out-channel weight scales
-            wq = fake_quant(w.astype(jnp.float32), bits, axis=0)
-            xq = fake_quant(x.astype(jnp.float32), bits if bits == 8 else 8)
-            y = jnp.dot(xq.astype(compute_dtype), wq.astype(compute_dtype),
-                        preferred_element_type=jnp.float32)
-        else:
-            lead = x.shape[:-1]
-            x2 = x.reshape(-1, x.shape[-1])
-            aq, sa = quantize_symmetric(x2, 8, axis=1)
-            wq, sw = quantize_symmetric(w, bits, axis=0)
-            y = kops.quantized_matmul(aq, wq, sa[:, 0], sw[0, :])
-            y = y.reshape(*lead, -1)
-
-    elif spec.mode == "fp16_ipu":
-        if not spec.exact:
-            y = jnp.dot(x.astype(jnp.float16), w.astype(jnp.float16),
-                        preferred_element_type=jnp.float32)
-        else:
-            cfg = spec.ipu
-            lead = x.shape[:-1]
-            x2 = x.astype(jnp.float16).reshape(-1, x.shape[-1])
-            y = kops.mp_matmul(x2, w.astype(jnp.float16), cfg,
-                               backend="xla")
-            y = y.astype(jnp.float32).reshape(*lead, -1)
-    else:
-        raise ValueError(spec.mode)
-
     if b is not None:
         y = y + b.astype(y.dtype)
     return y.astype(compute_dtype)

@@ -17,7 +17,8 @@ to the token sequence.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+import re
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -123,6 +124,115 @@ def projection_groups(cfg: ModelConfig) -> Tuple["ProjGroup", ...]:
     return tuple(groups)
 
 
+def _lm_projection_paths(cfg: ModelConfig
+                         ) -> Callable[[str], Optional[str]]:
+    kinds = lm.group_kinds(cfg)
+
+    def path_for(p: str) -> Optional[str]:
+        m = re.fullmatch(r"blocks/b(\d+)/attn/(w[qkvo])", p)
+        if m:
+            return f"block/{kinds[int(m.group(1))]}/attn/{m.group(2)}"
+        m = re.fullmatch(r"blocks/b\d+/mlp/(w_(?:gate|up|down))", p)
+        if m:
+            return f"block/mlp/{m.group(1)}"
+        if re.fullmatch(r"blocks/b\d+/moe/(?:w_gate|w_up|w_down)", p):
+            return "block/moe/experts"
+        return None
+
+    return path_for
+
+
+def _vlm_projection_paths(cfg: ModelConfig
+                          ) -> Callable[[str], Optional[str]]:
+    base = _lm_projection_paths(cfg)
+
+    def path_for(p: str) -> Optional[str]:
+        m = re.fullmatch(r"projector/(fc[12])", p)
+        if m:
+            return f"projector/{m.group(1)}"
+        return base(p)
+
+    return path_for
+
+
+def _rwkv_projection_paths(cfg: ModelConfig
+                           ) -> Callable[[str], Optional[str]]:
+    def path_for(p: str) -> Optional[str]:
+        m = re.fullmatch(r"blocks/mix/(w_[rkvgo]|c_(?:key|val|rec))", p)
+        if m:
+            return f"block/mix/{m.group(1)}"
+        return None
+
+    return path_for
+
+
+def _griffin_projection_paths(cfg: ModelConfig
+                              ) -> Callable[[str], Optional[str]]:
+    def path_for(p: str) -> Optional[str]:
+        m = re.fullmatch(
+            r"(?:blocks/b\d+|tail/\d+)/rec/(w_in_rnn|w_in_gate|w_out)", p)
+        if m:
+            return f"block/rec/{m.group(1)}"
+        m = re.fullmatch(r"(?:blocks/b\d+|tail/\d+)/attn/(w[qkvo])", p)
+        if m:
+            return f"block/attn/{m.group(1)}"
+        m = re.fullmatch(
+            r"(?:blocks/b\d+|tail/\d+)/mlp/(w_(?:gate|up|down))", p)
+        if m:
+            return f"block/mlp/{m.group(1)}"
+        return None
+
+    return path_for
+
+
+def _encdec_projection_paths(cfg: ModelConfig
+                             ) -> Callable[[str], Optional[str]]:
+    def path_for(p: str) -> Optional[str]:
+        if p == "frontend_proj":
+            return "frontend_proj"
+        m = re.fullmatch(r"enc_blocks/attn/(w[qkvo])", p)
+        if m:
+            return f"enc/attn/{m.group(1)}"
+        m = re.fullmatch(r"enc_blocks/mlp/(w_(?:gate|up|down))", p)
+        if m:
+            return f"enc/mlp/{m.group(1)}"
+        m = re.fullmatch(r"dec_blocks/(attn|xattn)/(w[qkvo])", p)
+        if m:
+            return f"dec/{m.group(1)}/{m.group(2)}"
+        m = re.fullmatch(r"dec_blocks/mlp/(w_(?:gate|up|down))", p)
+        if m:
+            return f"dec/mlp/{m.group(1)}"
+        return None
+
+    return path_for
+
+
+_PROJECTION_PATHS = {
+    "lm": _lm_projection_paths,
+    "vlm": _vlm_projection_paths,
+    "rwkv": _rwkv_projection_paths,
+    "griffin": _griffin_projection_paths,
+    "encdec": _encdec_projection_paths,
+}
+
+
+def projection_paths(cfg: ModelConfig) -> Callable[[str], Optional[str]]:
+    """Param-tree container path -> runtime policy path for every
+    projection that routes through the precision policy (the map
+    ``quant.prepare.prepare_params`` consumes). Paths the family never
+    routes (embeddings, norms, MoE router, recurrence gates) resolve to
+    None and stay untouched by preparation."""
+    return _PROJECTION_PATHS[cfg.family](cfg)
+
+
+def _prepare_fn(cfg: ModelConfig) -> Callable:
+    def prepare(params, policy):
+        from repro.quant.prepare import prepare_params
+        return prepare_params(params, policy, projection_paths(cfg))
+
+    return prepare
+
+
 class ModelAPI(NamedTuple):
     cfg: ModelConfig
     init: Callable
@@ -130,6 +240,9 @@ class ModelAPI(NamedTuple):
     prefill: Callable
     decode_step: Callable
     init_cache: Callable
+    # prepare(params, policy) -> params with each projection weight in
+    # its deployment storage format (see quant/prepare.py)
+    prepare: Callable = None
 
 
 def build(cfg: ModelConfig) -> ModelAPI:
@@ -143,6 +256,7 @@ def build(cfg: ModelConfig) -> ModelAPI:
             lambda p, batch, caches: lm.decode_step(
                 p, cfg, batch["token"], batch["pos"], caches),
             lambda bsz, max_len: lm.init_cache(cfg, bsz, max_len),
+            _prepare_fn(cfg),
         )
     if cfg.family == "rwkv":
         return ModelAPI(
@@ -154,6 +268,7 @@ def build(cfg: ModelConfig) -> ModelAPI:
             lambda p, batch, caches: rwkv.decode_step(
                 p, cfg, batch["token"], batch["pos"], caches),
             lambda bsz, max_len: rwkv.init_cache(cfg, bsz, max_len),
+            _prepare_fn(cfg),
         )
     if cfg.family == "griffin":
         return ModelAPI(
@@ -165,6 +280,7 @@ def build(cfg: ModelConfig) -> ModelAPI:
             lambda p, batch, caches: griffin.decode_step(
                 p, cfg, batch["token"], batch["pos"], caches),
             lambda bsz, max_len: griffin.init_cache(cfg, bsz, max_len),
+            _prepare_fn(cfg),
         )
     if cfg.family == "encdec":
         return ModelAPI(
@@ -176,6 +292,7 @@ def build(cfg: ModelConfig) -> ModelAPI:
             lambda p, batch, state: encdec.decode_step(
                 p, cfg, batch["token"], batch["pos"], state),
             lambda bsz, max_len: encdec.init_cache(cfg, bsz, max_len),
+            _prepare_fn(cfg),
         )
     if cfg.family == "vlm":
         return ModelAPI(
@@ -188,6 +305,7 @@ def build(cfg: ModelConfig) -> ModelAPI:
                 p, cfg, batch["token"], batch["pos"], caches),
             lambda bsz, max_len: vlm.init_cache(
                 cfg, bsz, max_len + (cfg.n_patches or 0)),
+            _prepare_fn(cfg),
         )
     raise ValueError(cfg.family)
 

@@ -4,3 +4,10 @@ from repro.quant.quantize import (  # noqa: F401
     dequantize,
     calibrate_absmax,
 )
+from repro.quant.prepare import (  # noqa: F401
+    MODE_BYTES_PER_PARAM,
+    PreparedWeight,
+    prepare_params,
+    prepare_weight,
+    weight_resident_bytes,
+)

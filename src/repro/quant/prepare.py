@@ -1,0 +1,206 @@
+"""Ahead-of-time weight preparation: the paper's deployment story.
+
+The accelerator consumes *stored* integer operands — INT4 weights ride
+as packed nibbles (halving SRAM/HBM traffic, §2/§3.2) and FP16 is
+realized on the same integer datapath — so re-quantizing static weights
+on every forward call is pure overhead. ``prepare_params`` walks a param
+tree once and, per ``PrecisionSpec``, replaces each projection's fp32
+``w`` with a :class:`PreparedWeight` container in its target storage
+format:
+
+  * int8       — int8 rows + per-out-channel f32 scales;
+  * int4       — nibble-packed bytes (``kernels.ops.pack_int4``) +
+                 scales (falls back to int8-storage int4 when the
+                 contraction dim is odd);
+  * fp16_ipu   — fp16-cast weights;
+  * bf16/fp32  — untouched (raw array stays in place).
+
+``PreparedWeight`` is a registered pytree, so prepared trees thread
+through ``jax.lax.scan`` over stacked blocks, ``jax.jit`` arguments and
+``jax.eval_shape`` exactly like raw params (every data leaf keeps the
+stacked leading axes; quantization always reduces over axis -2, the
+contraction dim). Dequant-on-demand (:meth:`PreparedWeight.dequant`)
+reproduces the dynamic fake-quant forward value bit-exactly — it is the
+same ``q * scale`` product on the same ``q``/``scale`` — which is what
+makes prepared and dynamic serving equivalent (tests/test_prepare.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy, PrecisionSpec
+from repro.quant.quantize import quantize_symmetric
+
+# storage bytes per weight element by policy mode (scales excluded);
+# the table tools/plan_report.py and the serving memory columns use
+MODE_BYTES_PER_PARAM = {
+    "fp32": 4.0, "bf16": 2.0, "fp16_ipu": 2.0, "int8": 1.0, "int4": 0.5,
+}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PreparedWeight:
+    """One projection weight in its deployment storage format.
+
+    ``kind`` (static): 'int8' | 'int4' (int8-storage nibble values) |
+    'int4_packed' (two nibbles per byte along the contraction dim) |
+    'fp16'. ``data`` carries the stored operand, ``scale`` the
+    per-out-channel f32 scales (keepdims over axis -2; ``None`` for
+    fp16). Leading stacked-block axes are preserved so scan slices
+    prepared weights exactly like raw ones.
+    """
+
+    data: jax.Array
+    scale: Optional[jax.Array] = dataclasses.field(default=None)
+    kind: str = dataclasses.field(default="int8",
+                                  metadata=dict(static=True))
+
+    @property
+    def weight_bits(self) -> Optional[int]:
+        return {"int8": 8, "int4": 4, "int4_packed": 4}.get(self.kind)
+
+    def unpacked(self) -> jax.Array:
+        """Integer storage with nibbles unpacked (int kinds only)."""
+        if self.kind == "int4_packed":
+            from repro.kernels import ops as kops
+            return kops.unpack_int4(self.data)
+        return self.data
+
+    def dequant(self) -> jax.Array:
+        """f32 weights — bit-exact to the dynamic fake-quant forward
+        value for int kinds (same q * scale on the same q, scale)."""
+        if self.kind == "fp16":
+            return self.data.astype(jnp.float32)
+        return self.unpacked().astype(jnp.float32) * self.scale
+
+    def nbytes(self) -> int:
+        return int(self.data.nbytes
+                   + (self.scale.nbytes if self.scale is not None else 0))
+
+
+def prepare_weight(w: jax.Array, spec: PrecisionSpec
+                   ) -> Union[jax.Array, "PreparedWeight"]:
+    """Prepare ONE weight array (..., d_in, d_out) for ``spec``.
+
+    bf16/fp32 (and already-prepared containers) pass through untouched;
+    int modes quantize over axis -2 (per-out-channel scales), int4
+    additionally nibble-packs when the contraction dim is even.
+    """
+    if isinstance(w, PreparedWeight):
+        return w                     # idempotent: preparing twice is a no-op
+    if spec.mode in ("bf16", "fp32"):
+        return w
+    if spec.mode == "fp16_ipu":
+        return PreparedWeight(w.astype(jnp.float16), None, "fp16")
+    bits = spec.weight_bits
+    q, s = quantize_symmetric(w.astype(jnp.float32), bits, axis=-2)
+    if bits == 4 and w.shape[-2] % 2 == 0:
+        from repro.kernels import ops as kops
+        return PreparedWeight(kops.pack_int4(q), s, "int4_packed")
+    return PreparedWeight(q, s, "int8" if bits == 8 else "int4")
+
+
+PathResolver = Union[Callable[[str], Optional[str]], Mapping[str, str]]
+
+
+def _resolver(paths: PathResolver) -> Callable[[str], Optional[str]]:
+    if callable(paths):
+        return paths
+    return paths.get
+
+
+def prepare_params(params, policy: PrecisionPolicy, paths: PathResolver):
+    """Walk ``params`` once and prepare every projection weight.
+
+    ``paths`` maps a param-tree container path (``'blocks/b0/attn/wq'``,
+    the dict holding the ``'w'`` leaf) to the policy path the runtime
+    passes to ``policy.spec_for`` (``'block/full/attn/wq'``) — or None
+    for parameters that never route through the precision policy
+    (embeddings, norms, the MoE router, recurrence gates). Families
+    provide their map via ``models.registry`` (the ``prepare=`` hook).
+
+    Pure: returns a new tree; raw leaves (and containers whose spec is
+    bf16/fp32) are passed through by reference, so preparing twice is a
+    structural no-op and mixed policies leave full-precision groups
+    untouched.
+    """
+    resolve = _resolver(paths)
+
+    def walk(node, prefix: str):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                child = f"{prefix}/{k}" if prefix else k
+                if k == "w" and isinstance(v, (jax.Array, PreparedWeight)):
+                    pol_path = resolve(prefix)
+                    if pol_path is not None:
+                        out[k] = prepare_weight(v, policy.spec_for(pol_path))
+                        continue
+                out[k] = walk(v, child)
+            return out
+        if isinstance(node, (list, tuple)):
+            items = [walk(v, f"{prefix}/{i}" if prefix else str(i))
+                     for i, v in enumerate(node)]
+            return type(node)(items)
+        return node
+
+    return walk(params, "")
+
+
+def iter_projection_weights(params, paths: PathResolver):
+    """Yield (container_path, weight_leaf) for every projection the
+    ``paths`` map targets — raw arrays and PreparedWeight alike."""
+    resolve = _resolver(paths)
+
+    def walk(node, prefix: str):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                child = f"{prefix}/{k}" if prefix else k
+                if (k == "w" and isinstance(v, (jax.Array, PreparedWeight))
+                        and resolve(prefix) is not None):
+                    yield prefix, v
+                else:
+                    yield from walk(v, child)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                yield from walk(v, f"{prefix}/{i}" if prefix else str(i))
+
+    yield from walk(params, "")
+
+
+def _leaf_bytes(leaf: Any) -> int:
+    if isinstance(leaf, PreparedWeight):
+        return leaf.nbytes()
+    nb = getattr(leaf, "nbytes", None)
+    return int(nb) if nb is not None else 0
+
+
+def weight_resident_bytes(params, paths: Optional[PathResolver] = None
+                          ) -> Dict[str, Any]:
+    """Weight memory actually resident in a param tree.
+
+    Returns ``{'total': bytes over every leaf, 'projections': bytes of
+    the policy-routed projection weights (when ``paths`` is given),
+    'by_kind': projection bytes per storage kind ('raw' = unprepared
+    fp32/bf16 arrays)}`` — the per-replica numbers serving metrics and
+    serve_bench report.
+    """
+    total = sum(_leaf_bytes(lf) for lf in jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, PreparedWeight)))
+    out: Dict[str, Any] = {"total": int(total)}
+    if paths is not None:
+        by_kind: Dict[str, int] = {}
+        proj = 0
+        for _, w in iter_projection_weights(params, paths):
+            b = _leaf_bytes(w)
+            kind = w.kind if isinstance(w, PreparedWeight) else "raw"
+            by_kind[kind] = by_kind.get(kind, 0) + b
+            proj += b
+        out["projections"] = int(proj)
+        out["by_kind"] = by_kind
+    return out

@@ -23,6 +23,16 @@ prompt in prefill but over single tokens in decode, so the two
 admission paths agree exactly only up to that scale granularity — an
 inherent property of dynamic fake-quant, not of the cache merge (which
 tests verify bitwise-closely under bf16).
+
+Weights are PREPARED at construction (``quant.prepare`` via the model
+family's ``api.prepare`` hook, default on): each replica stores its
+projections in the policy's deployment format — packed int4 nibbles,
+int8 + scales, fp16 casts — so decode never re-quantizes static weights
+per token and per-replica weight-resident bytes reflect the policy
+(``weight_bytes()`` / ``metrics()['weight_bytes']``). Preparation is
+output-equivalent to dynamic quantization (tests/test_prepare.py);
+``prepare_weights=False`` restores the dynamic path (benchmarked as the
+baseline in benchmarks/serve_bench.py).
 """
 from __future__ import annotations
 
@@ -109,11 +119,11 @@ class ServingEngine:
                  batch_slots: int = 4, cache_len: int = 512,
                  greedy: bool = True, prefill_chunk: int = 32,
                  prefill: str = "auto", scheduler=None,
+                 prepare_weights: bool = True,
                  clock: Callable[[], float] = time.monotonic):
         from repro.serving.scheduler import AdmissionScheduler
         self.cfg = cfg
         self.api = api
-        self.params = params
         self.b = batch_slots
         self.cache_len = cache_len
         self.greedy = greedy
@@ -123,6 +133,13 @@ class ServingEngine:
         # missing/invalid plan file fails at engine construction, not on
         # the first decode (plan: refs load repro.autotune artifacts)
         self.policy = policy_mod.get_policy(cfg.precision_policy)
+        # prepared-weight datapath: quantize/pack the replica's weights
+        # ONCE at construction (quant.prepare) so decode never
+        # re-quantizes static weights per token and int4 replicas hold
+        # packed nibbles instead of fp32
+        self.prepared = bool(prepare_weights) and api.prepare is not None
+        self.params = api.prepare(params, self.policy) if self.prepared \
+            else params
         self.caches = api.init_cache(batch_slots, cache_len)
         self.pos = np.zeros(batch_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
@@ -161,6 +178,28 @@ class ServingEngine:
                 self.params, self.caches)
         return dict(records)
 
+    def weight_bytes(self) -> Dict:
+        """Weight memory resident in this replica's param tree: total
+        bytes, the policy-routed projection subset, and a per-storage-
+        kind breakdown ('raw' = unprepared fp32/bf16)."""
+        from repro.quant.prepare import weight_resident_bytes
+        return weight_resident_bytes(
+            self.params, registry.projection_paths(self.cfg))
+
+    def weight_quant_trace_count(self) -> int:
+        """Dynamic weight quantizations traced into ONE decode step —
+        the counter hook the serving-smoke contract asserts is zero for
+        prepared replicas. Traced abstractly, no compute runs."""
+        from repro.layers import mplinear
+        tok = jnp.zeros((self.b, 1), jnp.int32)
+        pos = jnp.zeros((self.b,), jnp.int32)
+        with mplinear.count_weight_quant() as box:
+            jax.eval_shape(
+                lambda p, c: self.api.decode_step(
+                    p, {"token": tok, "pos": pos}, c),
+                self.params, self.caches)
+        return box[0]
+
     def metrics(self) -> Dict:
         """Aggregate request latency metrics + engine counters."""
         from repro.serving.metrics import summarize_requests
@@ -168,6 +207,8 @@ class ServingEngine:
         m["counters"] = dict(self.counters)
         m["queue"] = len(self.scheduler)
         m["active_slots"] = sum(r is not None for r in self.slot_req)
+        m["prepared_weights"] = self.prepared
+        m["weight_bytes"] = self.weight_bytes()
         return m
 
     def has_pending(self) -> bool:

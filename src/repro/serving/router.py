@@ -132,8 +132,11 @@ def _replica_name(policy_name: str) -> str:
 def build_replicas(cfg: ModelConfig, policy_names: Sequence[str],
                    params=None, batch_slots: int = 4, cache_len: int = 128,
                    **engine_kw) -> List[Replica]:
-    """One replica per policy/plan ref, sharing a single parameter set
-    (policies quantize at apply time, so params are policy-independent)."""
+    """One replica per policy/plan ref, initialized from a single raw
+    parameter set. Each engine *prepares* its own storage copy from its
+    policy at construction (quant.prepare): the int4 replica holds
+    packed nibbles + scales, the bf16 replica the raw tree — so the
+    per-replica ``cost['weight_bytes']`` genuinely differ."""
     import jax
 
     from repro.models import registry
@@ -152,9 +155,10 @@ def build_replicas(cfg: ModelConfig, policy_names: Sequence[str],
             name = f"{name}#{names[name]}"
         else:
             names[name] = 0
+        cost = replica_cost(rcfg, engine.policy)
+        cost["weight_bytes"] = engine.weight_bytes()
         replicas.append(Replica(name=name, policy_name=pname,
-                                engine=engine,
-                                cost=replica_cost(rcfg, engine.policy)))
+                                engine=engine, cost=cost))
     return replicas
 
 

@@ -12,6 +12,11 @@ autotune-smoke cold/warm contract:
   * admission runs through the batched prefill path — zero
     teacher-forced prompt tokens, > 0 prefill calls;
   * per-request metrics (TTFT / queue delay) are populated;
+  * the int4 replica serves PREPARED weights: its traced decode step
+    performs zero dynamic weight quantizations (the
+    ``mplinear.count_weight_quant`` hook), its packed projection storage
+    is <= 1/6 of the raw fp32 bytes, and a control engine with
+    preparation disabled shows the counter is live (> 0);
   * a second identical run routes identically (determinism contract —
     the analogue of the warm-cache run reproducing the cold plan).
 """
@@ -22,7 +27,7 @@ from typing import List, Optional
 
 import numpy as np
 
-REPLICAS = ("int8_serving", "bf16")
+REPLICAS = ("int8_serving", "bf16", "int4_serving")
 
 
 def _run_workload(requests: int, slots: int, max_new: int, seed: int):
@@ -85,6 +90,25 @@ def main(argv: Optional[List[str]] = None) -> int:
         assert rep["metrics"]["ttft_s"], f"{name}: no TTFT samples"
         assert rep["metrics"]["queue_delay_s"], f"{name}: no queue delays"
 
+    # --- prepared-weight contract: the int4 replica holds packed
+    # storage and its decode trace never quantizes a weight
+    int4 = next(rep for rep in router.replicas
+                if rep.policy_name == "int4_serving")
+    assert int4.engine.prepared, "int4 replica did not prepare weights"
+    assert int4.engine.weight_quant_trace_count() == 0, \
+        "prepared int4 replica still quantizes weights per decode step"
+    wb = int4.engine.weight_bytes()
+    raw = next(rep for rep in router.replicas if rep.policy_name == "bf16")
+    raw_proj = raw.engine.weight_bytes()["projections"]
+    assert wb["projections"] * 6 <= raw_proj, (wb, raw_proj)
+    # the counter hook is live: an unprepared engine shows > 0
+    from repro.serving.engine import ServingEngine
+    dyn = ServingEngine(int4.engine.cfg, int4.engine.api,
+                        raw.engine.params, batch_slots=args.slots,
+                        cache_len=64, prepare_weights=False)
+    dyn_quants = dyn.weight_quant_trace_count()
+    assert dyn_quants > 0, "dynamic control engine counted no quants"
+
     # --- determinism: an identical second run routes identically
     router2, _, _ = _run_workload(args.requests, args.slots,
                                   args.max_new, args.seed)
@@ -100,5 +124,7 @@ def main(argv: Optional[List[str]] = None) -> int:
               f"queue_p90={m['queue_delay_s'].get('p90', 0) * 1e3:.1f}ms")
     print(f"serving-smoke OK: {len(completed)} requests over "
           f"{len(counters)} replicas in {ticks} ticks, "
-          f"counters={counters}")
+          f"counters={counters}; int4 prepared "
+          f"{wb['projections']}B vs {raw_proj}B fp32 projections, "
+          f"0 weight quants/step (dynamic control: {dyn_quants})")
     return 0

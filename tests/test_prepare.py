@@ -1,0 +1,241 @@
+"""Prepared-weight datapath coverage (quant/prepare.py + the mplinear
+precision-dispatch registry).
+
+The contract under refactor: preparing a weight ahead of time must not
+change what the datapath computes —
+
+  * exact int8/int4 kernel path: bit-exact (same integer operands, same
+    scale epilogue — prepared int4 additionally rides packed nibbles);
+  * fake-quant and fp16_ipu paths: allclose (in fact bit-equal, since
+    dequant-on-demand reproduces the same q * scale product);
+  * at model scale, prepared params thread through scan/jit/eval_shape
+    like raw ones and decode bit-exactly matches dynamic quantization;
+  * preparation is idempotent and leaves bf16/fp32 groups untouched;
+  * packed int4 storage round-trips and costs <= 1/6 of fp32.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced
+from repro.core.ipu import IPUConfig
+from repro.core.policy import (PrecisionPolicy, PrecisionSpec, get_policy)
+from repro.kernels import ops as kops
+from repro.layers import mplinear
+from repro.layers.mplinear import mp_linear
+from repro.models import registry
+from repro.quant.prepare import (PreparedWeight, prepare_params,
+                                 prepare_weight, weight_resident_bytes)
+
+ARCH = "qwen2-0.5b"
+
+
+def _wx(k=32, n=24, m=6, seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, (k, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (2, m, k)), jnp.float32)
+    return w, x
+
+
+# ------------------------------------------------------- single weights
+
+class TestPreparedLinear:
+    @pytest.mark.parametrize("mode", ["int8", "int4"])
+    def test_exact_kernel_path_bit_exact(self, mode):
+        """The acceptance bar: prepared integer storage feeds the exact
+        Pallas kernel path bit-identically to dynamic quantization."""
+        w, x = _wx()
+        spec = PrecisionSpec(mode, exact=True)
+        pw = prepare_weight(w, spec)
+        assert isinstance(pw, PreparedWeight)
+        if mode == "int4":
+            assert pw.kind == "int4_packed"
+        y_dyn = mp_linear({"w": w}, x, spec)
+        y_prep = mp_linear({"w": pw}, x, spec)
+        np.testing.assert_array_equal(np.asarray(y_dyn),
+                                      np.asarray(y_prep))
+
+    @pytest.mark.parametrize("mode", ["int8", "int4"])
+    def test_fake_quant_path_allclose(self, mode):
+        w, x = _wx(seed=1)
+        spec = PrecisionSpec(mode)
+        y_dyn = mp_linear({"w": w}, x, spec)
+        y_prep = mp_linear({"w": prepare_weight(w, spec)}, x, spec)
+        np.testing.assert_allclose(np.asarray(y_dyn, np.float32),
+                                   np.asarray(y_prep, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("exact", [False, True])
+    def test_fp16_ipu_path_allclose(self, exact):
+        w, x = _wx(seed=2)
+        spec = PrecisionSpec("fp16_ipu", exact=exact,
+                             ipu=IPUConfig(n=16, w=28))
+        y_dyn = mp_linear({"w": w}, x, spec)
+        y_prep = mp_linear({"w": prepare_weight(w, spec)}, x, spec)
+        np.testing.assert_allclose(np.asarray(y_dyn, np.float32),
+                                   np.asarray(y_prep, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_odd_contraction_dim_falls_back_unpacked(self):
+        w = jnp.ones((5, 4), jnp.float32)
+        pw = prepare_weight(w, PrecisionSpec("int4"))
+        assert pw.kind == "int4"          # int8-storage nibbles, no pack
+        np.testing.assert_array_equal(np.asarray(pw.unpacked()),
+                                      np.asarray(pw.data))
+
+    def test_unknown_mode_has_no_executor(self):
+        with pytest.raises(ValueError, match="no executor"):
+            mplinear.executor_for("int12")
+
+
+# ------------------------------------------------------ pack round trip
+
+class TestPackRoundTrip:
+    def test_model_scale_pack_unpack(self):
+        """Every packed container in a prepared reduced model unpacks
+        back to exactly the dynamically quantized integer weights."""
+        from repro.quant.quantize import quantize_symmetric
+        cfg = dataclasses.replace(reduced(ARCH),
+                                  precision_policy="int4_serving")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        prepared = api.prepare(params, get_policy(cfg.precision_policy))
+
+        def pairs(raw, prep):
+            if isinstance(prep, PreparedWeight):
+                yield raw, prep
+            elif isinstance(prep, dict):
+                for k in prep:
+                    yield from pairs(raw[k], prep[k])
+            elif isinstance(prep, (list, tuple)):
+                for r, p in zip(raw, prep):
+                    yield from pairs(r, p)
+
+        n_packed = 0
+        for raw_w, pw in pairs(params, prepared):
+            if pw.kind != "int4_packed":
+                continue
+            n_packed += 1
+            q, s = quantize_symmetric(raw_w.astype(jnp.float32), 4,
+                                      axis=-2)
+            np.testing.assert_array_equal(np.asarray(pw.unpacked()),
+                                          np.asarray(q))
+            np.testing.assert_array_equal(np.asarray(pw.scale),
+                                          np.asarray(s))
+        assert n_packed > 0, "no packed containers in an int4 plan"
+
+    def test_leading_dims_roundtrip(self):
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.integers(-8, 8, (3, 4, 10, 6)), jnp.int8)
+        np.testing.assert_array_equal(
+            np.asarray(kops.unpack_int4(kops.pack_int4(q))), np.asarray(q))
+
+
+# --------------------------------------------------------- model scale
+
+class TestModelScale:
+    @pytest.mark.parametrize("arch,policy", [
+        ("qwen2-0.5b", "int8_serving"),
+        ("qwen2-0.5b", "int4_serving"),
+        ("qwen2-0.5b", "paper_hybrid"),
+        ("rwkv6-1.6b", "int8_serving"),
+        ("recurrentgemma-9b", "int4_serving"),
+        ("mixtral-8x7b", "int8_serving"),
+    ])
+    def test_prepared_decode_matches_dynamic(self, arch, policy):
+        cfg = dataclasses.replace(reduced(arch), precision_policy=policy)
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        prepared = api.prepare(params, get_policy(policy))
+        caches = api.init_cache(2, 16)
+        batch = {"token": jnp.full((2, 1), 7, jnp.int32),
+                 "pos": jnp.full((2,), 3, jnp.int32)}
+        l_dyn, _ = api.decode_step(params, batch, caches)
+        l_prep, _ = api.decode_step(prepared, batch, caches)
+        np.testing.assert_allclose(np.asarray(l_dyn, np.float32),
+                                   np.asarray(l_prep, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_idempotent_and_mixed_policy(self):
+        """Preparing twice is a no-op; bf16-routed groups keep their raw
+        arrays (same objects, untouched by a mixed policy)."""
+        policy = PrecisionPolicy(
+            "mixed_t",
+            rules=((r"attn/", PrecisionSpec("int8")),),
+            default=PrecisionSpec("bf16"))
+        cfg = dataclasses.replace(reduced(ARCH), precision_policy="bf16")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        paths = registry.projection_paths(cfg)
+        once = prepare_params(params, policy, paths)
+        twice = prepare_params(once, policy, paths)
+        flat1 = jax.tree.leaves(
+            once, is_leaf=lambda x: isinstance(x, PreparedWeight))
+        flat2 = jax.tree.leaves(
+            twice, is_leaf=lambda x: isinstance(x, PreparedWeight))
+        assert all(a is b for a, b in zip(flat1, flat2))
+        # attn projections prepared, mlp left raw
+        assert isinstance(once["blocks"]["b0"]["attn"]["wq"]["w"],
+                          PreparedWeight)
+        assert once["blocks"]["b0"]["mlp"]["w_gate"]["w"] is \
+            params["blocks"]["b0"]["mlp"]["w_gate"]["w"]
+
+    def test_int4_weight_bytes_ratio(self):
+        """Paper memory win at model scale: packed int4 projection
+        storage <= 1/6 of the fp32 bytes (1/8 + scales)."""
+        cfg = dataclasses.replace(reduced(ARCH),
+                                  precision_policy="int4_serving")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        paths = registry.projection_paths(cfg)
+        raw = weight_resident_bytes(params, paths)
+        prep = weight_resident_bytes(
+            api.prepare(params, get_policy("int4_serving")), paths)
+        assert raw["projections"] > 0
+        assert prep["projections"] * 6 <= raw["projections"], (prep, raw)
+        assert prep["total"] < raw["total"]
+
+
+# ------------------------------------------------------------- serving
+
+class TestServingPrepared:
+    def test_engine_prepares_and_counts_zero_weight_quants(self):
+        from repro.serving import ServingEngine
+        cfg = dataclasses.replace(reduced(ARCH),
+                                  precision_policy="int8_serving")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, api, params, batch_slots=2, cache_len=32)
+        assert eng.prepared
+        assert eng.weight_quant_trace_count() == 0
+        dyn = ServingEngine(cfg, api, params, batch_slots=2, cache_len=32,
+                            prepare_weights=False)
+        assert not dyn.prepared
+        assert dyn.weight_quant_trace_count() > 0
+        # prepared engine serves end to end and reports weight memory
+        req_tokens = np.asarray([3, 1, 4, 1, 5], np.int32)
+        from repro.serving import Request
+        eng.submit(Request(rid=0, prompt=req_tokens, max_new_tokens=3))
+        eng.run_until_drained()
+        assert eng.completed[0].new_tokens == 3
+        m = eng.metrics()
+        assert m["prepared_weights"] is True
+        assert m["weight_bytes"]["projections"] < \
+            dyn.metrics()["weight_bytes"]["projections"]
+
+    def test_replica_costs_carry_weight_bytes(self):
+        from repro.serving import Router, build_replicas
+        cfg = reduced(ARCH)
+        reps = build_replicas(cfg, ("int4_serving", "bf16"),
+                              batch_slots=2, cache_len=32)
+        by_name = {r.policy_name: r for r in reps}
+        b_int4 = by_name["int4_serving"].cost["weight_bytes"]
+        b_bf16 = by_name["bf16"].cost["weight_bytes"]
+        assert b_int4["projections"] * 6 <= b_bf16["projections"]
+        report = Router(reps).report()
+        for rep in report["replicas"].values():
+            assert "weight_bytes" in rep["cost"]
