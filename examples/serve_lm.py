@@ -44,10 +44,15 @@ def _pct(block, key="p50"):
     return f"{block.get(key, 0) * 1e3:.1f}ms" if block else "n/a"
 
 
+def _engine_kw(args):
+    return {"decode_block": args.decode_block,
+            "act_calibration": "auto" if args.calibrate else None}
+
+
 def run_router(args, cfg):
     policies = [p for p in args.replicas.split(",") if p]
     replicas = build_replicas(cfg, policies, batch_slots=args.slots,
-                              cache_len=128)
+                              cache_len=128, **_engine_kw(args))
     router = Router(replicas, strategy=args.strategy)
     for rep in replicas:
         storage = "prepared" if rep.engine.prepared else "dynamic"
@@ -84,7 +89,7 @@ def run_single(args, cfg):
     api = registry.build(cfg)
     params = api.init(jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, api, params, batch_slots=args.slots,
-                           cache_len=128)
+                           cache_len=128, **_engine_kw(args))
     if args.plan:
         from repro.autotune.plan import load_plan
         plan = load_plan(args.plan)
@@ -102,12 +107,15 @@ def run_single(args, cfg):
     total_new = sum(r.new_tokens for r in engine.completed.values())
     m = engine.metrics()
     print(f"policy={policy_name} requests={args.requests} "
-          f"slots={args.slots} ticks={ticks}")
+          f"slots={args.slots} ticks={ticks} "
+          f"decode_block={engine.decode_block}"
+          + (" calibrated" if m["act_calibrated"] else ""))
     print(f"generated {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s on CPU); "
           f"ttft_p50={_pct(m['ttft_s'])} "
           f"queue_p90={_pct(m['queue_delay_s'], 'p90')} "
-          f"prefill_calls={m['counters']['prefill_calls']}")
+          f"prefill_calls={m['counters']['prefill_calls']} "
+          f"host_syncs={m['counters']['host_syncs']}")
     for rid in sorted(engine.completed)[:3]:
         r = engine.completed[rid]
         print(f"  req{rid}: prompt={list(r.prompt[:6])}... -> "
@@ -142,6 +150,13 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--decode-block", type=int, default=1,
+                    help="tokens decoded per host dispatch (jitted scan "
+                         "with on-device greedy selection; 1 = per-token; "
+                         "quantized policies also need --calibrate)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="calibrate static activation scales at engine "
+                         "construction (drops the per-token absmax)")
     args = ap.parse_args()
 
     cfg = reduced("qwen2-0.5b")

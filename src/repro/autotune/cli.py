@@ -96,6 +96,11 @@ def cmd_search(argv: List[str]) -> int:
                          "(default: uniform-INT8 accuracy)")
     ap.add_argument("--out", default=None,
                     help=f"plan path (default {DEFAULT_PLAN_DIR}/<arch>.json)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run a short activation-calibration pass "
+                         "(quant.calibrate on the reduced config, under "
+                         "the selected plan's own policy) and embed the "
+                         "static act scales in the plan artifact")
     args = ap.parse_args(argv)
     arch = resolve_arch(args.model)
     engine = exp.EngineConfig.from_args(args)
@@ -108,6 +113,9 @@ def cmd_search(argv: List[str]) -> int:
     plan = dataclasses.replace(plan, meta={
         **plan.meta, "seq": args.seq, "seed": args.seed,
         "shapes": args.shapes, "probe": not args.no_probe})
+    if args.calibrate:
+        plan = dataclasses.replace(
+            plan, act_scales=plan_act_scales(plan, seed=args.seed))
     out = args.out or f"{DEFAULT_PLAN_DIR}/{arch_slug(arch)}.json"
     plan.save(out)
 
@@ -148,6 +156,42 @@ def cmd_score(argv: List[str]) -> int:
               sys.stdout, indent=1, sort_keys=True)
     print()
     return 0
+
+
+def plan_act_scales(plan: PrecisionPlan, seed: int = 0) -> dict:
+    """Calibrated static activation scales for ``plan``: forwards random
+    token batches through the family-preserving reduced model under the
+    plan's own policy (so downstream activations carry the plan's
+    quantization noise) and records every projection's input absmax —
+    the ``quant.calibrate`` pass, keyed to ride in the plan artifact.
+
+    Scales are measured on the ``PRNGKey(0)`` model init — the fixed
+    convention of every serving entry point (serve_lm, smoke,
+    serve_bench, build_replicas) — regardless of the search ``seed``,
+    which only drives the calibration token draws; embedding scales
+    calibrated on a differently-initialized model would silently
+    mis-grid every activation at serve time. A replica serving a
+    different checkpoint should re-calibrate (``act_calibration="auto"``
+    on a plan without scales, or an explicit ``calibrate_act_scales``
+    dict) rather than consume plan scales measured on other weights."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import reduced
+    from repro.core.policy import POLICIES, register_policy
+    from repro.models import registry
+    from repro.quant.calibrate import calibrate_act_scales
+
+    name = f"_calib/{plan.name}"
+    register_policy(dc.replace(plan.to_policy(), name=name))
+    try:
+        cfg = dc.replace(reduced(plan.arch), precision_policy=name)
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        return calibrate_act_scales(cfg, api, params, seed=seed)
+    finally:
+        POLICIES.pop(name, None)
 
 
 def plan_weight_bytes(arch: str, modes, shapes: str = "full"

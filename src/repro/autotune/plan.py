@@ -69,6 +69,11 @@ class PrecisionPlan:
     metrics: Dict[str, Any] = dataclasses.field(default_factory=dict)
     frontier: Tuple[Dict[str, Any], ...] = ()
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # calibrated static activation scales {runtime policy path -> f32
+    # scale} (quant.calibrate): a plan searched offline ships its own
+    # calibration, and serving engines resolving the plan consume the
+    # scales via ``act_calibration="auto"``
+    act_scales: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if self.default_mode not in MODES:
@@ -99,6 +104,7 @@ class PrecisionPlan:
             "metrics": self.metrics,
             "frontier": list(self.frontier),
             "meta": self.meta,
+            "act_scales": dict(self.act_scales),
         }
 
     @classmethod
@@ -115,6 +121,7 @@ class PrecisionPlan:
             metrics=obj.get("metrics", {}),
             frontier=tuple(obj.get("frontier", [])),
             meta=obj.get("meta", {}),
+            act_scales=obj.get("act_scales", {}),
         )
 
     def save(self, path: str) -> str:
@@ -140,3 +147,9 @@ def load_policy(path: str) -> PrecisionPolicy:
     ``get_policy`` resolution in the model zoo never re-reads the file."""
     apath = os.path.abspath(path)
     return _load_policy_cached(apath, os.stat(apath).st_mtime_ns)
+
+
+def load_act_scales(path: str) -> Dict[str, float]:
+    """Calibrated activation scales carried by a plan artifact (empty
+    when the plan was searched without calibration)."""
+    return dict(load_plan(path).act_scales)

@@ -100,8 +100,15 @@ def int4_matmul_packed(a: jax.Array, b_packed: jax.Array, *,
 
 def _scale_epilogue(acc: jax.Array, scale_a: jax.Array,
                     scale_b: jax.Array) -> jax.Array:
-    return (acc.astype(jnp.float32)
-            * scale_a[:, None].astype(jnp.float32)
+    """Fold activation/weight scales into the int32 accumulator.
+
+    ``scale_a`` is either per-row (M,) — dynamic per-token absmax — or a
+    0-d scalar: a *calibrated static* activation scale (quant.calibrate)
+    rides straight in with no broadcast and no per-row gather."""
+    scale_a = jnp.asarray(scale_a, jnp.float32)
+    if scale_a.ndim:
+        scale_a = scale_a[:, None]
+    return (acc.astype(jnp.float32) * scale_a
             * scale_b[None, :].astype(jnp.float32))
 
 
@@ -109,7 +116,8 @@ def quantized_matmul(a_q: jax.Array, b_q: jax.Array, scale_a: jax.Array,
                      scale_b: jax.Array, *, backend: str = "pallas"
                      ) -> jax.Array:
     """Dequantizing matmul: int8/int4-valued operands with per-row (M,)
-    activation scales and per-column (N,) weight scales -> f32."""
+    or scalar (static calibrated) activation scales and per-column (N,)
+    weight scales -> f32."""
     return _scale_epilogue(int8_matmul(a_q, b_q, backend=backend),
                            scale_a, scale_b)
 

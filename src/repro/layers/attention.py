@@ -85,13 +85,13 @@ def _project_qkv(params, cfg: AttnConfig, x, positions, policy, path,
                  kv_input=None):
     spec = policy.spec_for
     b, s, _ = x.shape
-    q = mp_linear(params["wq"], x, spec(f"{path}/wq")).reshape(
+    q = mp_linear(params["wq"], x, spec(f"{path}/wq"), path=f"{path}/wq").reshape(
         b, s, cfg.n_heads, cfg.head_dim)
     kv_src = x if kv_input is None else kv_input
     bk, sk, _ = kv_src.shape
-    k = mp_linear(params["wk"], kv_src, spec(f"{path}/wk")).reshape(
+    k = mp_linear(params["wk"], kv_src, spec(f"{path}/wk"), path=f"{path}/wk").reshape(
         bk, sk, cfg.n_kv_heads, cfg.head_dim)
-    v = mp_linear(params["wv"], kv_src, spec(f"{path}/wv")).reshape(
+    v = mp_linear(params["wv"], kv_src, spec(f"{path}/wv"), path=f"{path}/wv").reshape(
         bk, sk, cfg.n_kv_heads, cfg.head_dim)
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm"]["w"])
@@ -217,7 +217,7 @@ def forward(params, cfg: AttnConfig, x, positions, policy: PrecisionPolicy,
     if kv_valid is None:
         kv_valid = jnp.ones(k.shape[:2], bool)
     out = _attend(cfg, q, k, v, positions, k_pos, kv_valid)
-    return mp_linear(params["wo"], out, policy.spec_for(f"{path}/wo"))
+    return mp_linear(params["wo"], out, policy.spec_for(f"{path}/wo"), path=f"{path}/wo")
 
 
 def prefill(params, cfg: AttnConfig, x, positions, cache: KVCache,
@@ -253,7 +253,7 @@ def prefill(params, cfg: AttnConfig, x, positions, cache: KVCache,
         v=write(cache.v, v_w),
         pos=write(cache.pos, pos_w),
     )
-    return mp_linear(params["wo"], out, policy.spec_for(f"{path}/wo")), \
+    return mp_linear(params["wo"], out, policy.spec_for(f"{path}/wo"), path=f"{path}/wo"), \
         new_cache
 
 
@@ -274,5 +274,5 @@ def decode_step(params, cfg: AttnConfig, x, pos, cache: KVCache,
     cpos = cache.pos.at[bidx, slot].set(pos)
     new_cache = KVCache(ck, cv, cpos)
     out = _attend(cfg, q, ck, cv, positions, cpos, cpos >= 0)
-    return mp_linear(params["wo"], out, policy.spec_for(f"{path}/wo")), \
+    return mp_linear(params["wo"], out, policy.spec_for(f"{path}/wo"), path=f"{path}/wo"), \
         new_cache

@@ -20,9 +20,9 @@ def init(key, d_model: int, d_ff: int, dtype=jnp.float32):
 
 def forward(params, x, policy, path: str, act: str = "silu"):
     fn = activation(act)
-    g = mp_linear(params["w_gate"], x, policy.spec_for(f"{path}/w_gate"))
-    u = mp_linear(params["w_up"], x, policy.spec_for(f"{path}/w_up"))
+    g = mp_linear(params["w_gate"], x, policy.spec_for(f"{path}/w_gate"), path=f"{path}/w_gate")
+    u = mp_linear(params["w_up"], x, policy.spec_for(f"{path}/w_up"), path=f"{path}/w_up")
     h = act_sharding.ffn_hidden(
         fn(g.astype(jnp.float32)).astype(u.dtype) * u)
     return act_sharding.batch_seq(
-        mp_linear(params["w_down"], h, policy.spec_for(f"{path}/w_down")))
+        mp_linear(params["w_down"], h, policy.spec_for(f"{path}/w_down"), path=f"{path}/w_down"))

@@ -21,10 +21,20 @@ Paths:
                  a w>=28 IPU computes up to accumulator granularity);
                  exact=True: bit-exact kernels.ops.mp_matmul.
 
-The ``count_weight_quant`` hook counts dynamic (per-call) weight
-quantizations entering a trace — the observability surface the
-serving-smoke CI contract uses to prove prepared replicas never
-quantize weights per decode step.
+Activations mirror the weight story one PR later: int executors
+calibrate an absmax per call (dynamic scale) unless the PreparedWeight
+carries a *calibrated static scale* (``quant.calibrate`` ->
+``PreparedWeight.act_scale``), in which case the per-token reduce is
+skipped and the scalar scale rides straight into the quantized-matmul
+epilogue.
+
+The ``count_weight_quant`` / ``count_act_quant`` hooks count dynamic
+(per-call) weight / activation quantizations entering a trace — the
+observability surface the serving-smoke CI contract uses to prove
+prepared replicas never quantize weights per decode step and calibrated
+replicas never absmax-reduce activations. ``collect_act_stats`` is the
+calibration-time hook: while open, every ``mp_linear`` call records its
+input absmax under the projection's policy path.
 """
 from __future__ import annotations
 
@@ -93,6 +103,67 @@ def note_weight_quant(n: int = 1):
         _WEIGHT_QUANT_COUNT[0] += n
 
 
+# ---------------------------------------- activation-quantization hooks
+
+_ACT_QUANT_COUNT: Optional[List[int]] = None
+_ACT_STATS: Optional[Dict[str, float]] = None
+
+
+@contextlib.contextmanager
+def count_act_quant():
+    """Count dynamic activation-scale calibrations (per-call absmax
+    reduces) traced while open. Calibrated containers (a PreparedWeight
+    carrying ``act_scale``) never hit this counter; every other int
+    projection bumps it once per traced forward."""
+    global _ACT_QUANT_COUNT
+    prev = _ACT_QUANT_COUNT
+    box = [0]
+    _ACT_QUANT_COUNT = box
+    try:
+        yield box
+    finally:
+        _ACT_QUANT_COUNT = prev
+
+
+def note_act_quant(n: int = 1):
+    """Executors call this on the dynamic activation-absmax branch; a
+    no-op outside count_act_quant()."""
+    if _ACT_QUANT_COUNT is not None:
+        _ACT_QUANT_COUNT[0] += n
+
+
+@contextlib.contextmanager
+def collect_act_stats():
+    """Record per-projection activation absmax while open (calibration).
+
+    Yields a dict {policy path -> running absmax over every forward run
+    inside the context}. Values arrive via ``jax.debug.callback`` so
+    recording works inside ``lax.scan`` over stacked blocks (one record
+    per executed iteration, concrete at runtime); callers should run
+    their forwards eagerly and flush (``jax.effects_barrier``) before
+    reading the dict."""
+    global _ACT_STATS
+    prev = _ACT_STATS
+    stats: Dict[str, float] = {}
+    _ACT_STATS = stats
+    try:
+        yield stats
+    finally:
+        _ACT_STATS = prev
+
+
+def _note_act_absmax(path: Optional[str], x: jax.Array):
+    if _ACT_STATS is None or path is None:
+        return
+
+    def record(amax):
+        stats = _ACT_STATS
+        if stats is not None:
+            stats[path] = max(stats.get(path, 0.0), float(amax))
+
+    jax.debug.callback(record, jnp.max(jnp.abs(x.astype(jnp.float32))))
+
+
 # ------------------------------------------------------------ executors
 
 def _weight_scale_vec(w: PreparedWeight) -> jax.Array:
@@ -113,34 +184,54 @@ def _int_executor(w, x, spec: PrecisionSpec, compute_dtype):
     bits = spec.weight_bits
     prepared = (isinstance(w, PreparedWeight)
                 and w.weight_bits == bits)
+    # calibrated static activation scale (quant.calibrate): quantize
+    # against the stored grid instead of absmax-reducing per call
+    act_scale = w.act_scale if prepared else None
     if not spec.exact:
         # fake-quant both operands; per-out-channel weight scales.
-        # Prepared weights dequantize to the identical q * scale value.
-        if prepared:
+        # Prepared weights dequantize to the identical q * scale value;
+        # staged containers (quant.prepare.stage_params, blocked
+        # decode) already hold it in the compute dtype.
+        if prepared and w.staged:
+            wq = w.data
+        elif prepared:
             wq = w.dequant()
         else:
             note_weight_quant()
             wraw = w.dequant() if isinstance(w, PreparedWeight) else w
             wq = fake_quant(wraw.astype(jnp.float32), bits, axis=0)
-        xq = fake_quant(x.astype(jnp.float32), bits if bits == 8 else 8)
+        if act_scale is None:
+            note_act_quant()
+        xq = fake_quant(x.astype(jnp.float32), 8, scale=act_scale)
         return jnp.dot(xq.astype(compute_dtype), wq.astype(compute_dtype),
                        preferred_element_type=jnp.float32)
-    # exact integer kernel path: dynamic activation quantization, weight
-    # operands straight from storage when prepared
+    # exact integer kernel path: weight operands straight from storage
+    # when prepared; activation scale static when calibrated (the scalar
+    # rides straight into the quantized-matmul epilogue), absmax per
+    # token row otherwise
+    if prepared and w.staged:
+        raise ValueError("staged containers carry dequantized operands; "
+                         "exact integer kernels need int storage "
+                         "(stage_params never stages exact specs)")
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    aq, sa = quantize_symmetric(x2, 8, axis=1)
+    if act_scale is None:
+        note_act_quant()
+        aq, sa = quantize_symmetric(x2, 8, axis=1)
+        sa = sa[:, 0]
+    else:
+        aq, sa = quantize_symmetric(x2, 8, scale=act_scale)
     if prepared and w.kind == "int4_packed":
-        y = kops.quantized_matmul_packed(aq, w.data, sa[:, 0],
+        y = kops.quantized_matmul_packed(aq, w.data, sa,
                                          _weight_scale_vec(w))
     elif prepared:
-        y = kops.quantized_matmul(aq, w.data, sa[:, 0],
+        y = kops.quantized_matmul(aq, w.data, sa,
                                   _weight_scale_vec(w))
     else:
         note_weight_quant()
         wraw = w.dequant() if isinstance(w, PreparedWeight) else w
         wq, sw = quantize_symmetric(wraw, bits, axis=0)
-        y = kops.quantized_matmul(aq, wq, sa[:, 0], sw[0, :])
+        y = kops.quantized_matmul(aq, wq, sa, sw[0, :])
     return y.reshape(*lead, -1)
 
 
@@ -173,8 +264,14 @@ def linear_init(key, d_in: int, d_out: int, bias: bool = False,
 
 
 def mp_linear(params, x: jax.Array, spec: PrecisionSpec,
-              compute_dtype=jnp.bfloat16) -> jax.Array:
-    """y = x @ w (+ b) under the precision spec. x: (..., d_in)."""
+              compute_dtype=jnp.bfloat16,
+              path: Optional[str] = None) -> jax.Array:
+    """y = x @ w (+ b) under the precision spec. x: (..., d_in).
+
+    ``path`` is the projection's policy path (the same string the call
+    site resolved the spec with) — only consumed by the calibration
+    hook (``collect_act_stats``) to key activation statistics."""
+    _note_act_absmax(path, x)
     y = executor_for(spec.mode)(params["w"], x, spec, compute_dtype)
     b = params.get("b")
     if b is not None:

@@ -110,15 +110,15 @@ def forward(params, cfg: RGLRUConfig, x, state: RGLRUState, policy,
             path: str) -> Tuple[jax.Array, RGLRUState]:
     """Full recurrent block over (B, S, d)."""
     sp = policy.spec_for
-    xr = mp_linear(params["w_in_rnn"], x, sp(f"{path}/w_in_rnn"))
-    gate = mp_linear(params["w_in_gate"], x, sp(f"{path}/w_in_gate"))
+    xr = mp_linear(params["w_in_rnn"], x, sp(f"{path}/w_in_rnn"), path=f"{path}/w_in_rnn")
+    gate = mp_linear(params["w_in_gate"], x, sp(f"{path}/w_in_gate"), path=f"{path}/w_in_gate")
     xr, new_tail = _causal_conv(xr, params["conv_w"], params["conv_b"],
                                 state.conv)
     a, b = _gates(params, xr)
     h, h_last = _scan_rglru(a, b, state.h)
     out = h * jax.nn.gelu(gate.astype(jnp.float32))
     out = mp_linear(params["w_out"], out.astype(x.dtype),
-                    sp(f"{path}/w_out"))
+                    sp(f"{path}/w_out"), path=f"{path}/w_out")
     return out, RGLRUState(h_last, new_tail)
 
 
@@ -126,13 +126,13 @@ def decode_step(params, cfg: RGLRUConfig, x, state: RGLRUState, policy,
                 path: str) -> Tuple[jax.Array, RGLRUState]:
     """x: (B, 1, d)."""
     sp = policy.spec_for
-    xr = mp_linear(params["w_in_rnn"], x, sp(f"{path}/w_in_rnn"))
-    gate = mp_linear(params["w_in_gate"], x, sp(f"{path}/w_in_gate"))
+    xr = mp_linear(params["w_in_rnn"], x, sp(f"{path}/w_in_rnn"), path=f"{path}/w_in_rnn")
+    gate = mp_linear(params["w_in_gate"], x, sp(f"{path}/w_in_gate"), path=f"{path}/w_in_gate")
     xr, new_tail = _causal_conv(xr, params["conv_w"], params["conv_b"],
                                 state.conv)
     a, b = _gates(params, xr)
     h = a[:, 0] * state.h + b[:, 0]
     out = h[:, None] * jax.nn.gelu(gate.astype(jnp.float32))
     out = mp_linear(params["w_out"], out.astype(x.dtype),
-                    sp(f"{path}/w_out"))
+                    sp(f"{path}/w_out"), path=f"{path}/w_out")
     return out, RGLRUState(h, new_tail)

@@ -101,10 +101,10 @@ def _projections(params, cfg: RWKVConfig, x, shifted, policy, path):
     xg = _mix(x, shifted, mu["g"])
     xw = _mix(x, shifted, mu["w"])
     sp = policy.spec_for
-    r = mp_linear(params["w_r"], xr, sp(f"{path}/w_r")).reshape(b, s, h, n)
-    k = mp_linear(params["w_k"], xk, sp(f"{path}/w_k")).reshape(b, s, h, n)
-    v = mp_linear(params["w_v"], xv, sp(f"{path}/w_v")).reshape(b, s, h, n)
-    g = mp_linear(params["w_g"], xg, sp(f"{path}/w_g"))
+    r = mp_linear(params["w_r"], xr, sp(f"{path}/w_r"), path=f"{path}/w_r").reshape(b, s, h, n)
+    k = mp_linear(params["w_k"], xk, sp(f"{path}/w_k"), path=f"{path}/w_k").reshape(b, s, h, n)
+    v = mp_linear(params["w_v"], xv, sp(f"{path}/w_v"), path=f"{path}/w_v").reshape(b, s, h, n)
+    g = mp_linear(params["w_g"], xg, sp(f"{path}/w_g"), path=f"{path}/w_g")
     ww = (jnp.tanh(xw.astype(jnp.float32) @
                    params["w_lora_a"].astype(jnp.float32))
           @ params["w_lora_b"].astype(jnp.float32)
@@ -176,7 +176,7 @@ def time_mix(params, cfg: RWKVConfig, x, state: RWKVState, policy,
     out = out.reshape(b, s, d).astype(x.dtype)
     out = out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
     sp2 = policy.spec_for(f"{path}/w_o")
-    out = mp_linear(params["w_o"], out, sp2)
+    out = mp_linear(params["w_o"], out, sp2, path=f"{path}/w_o")
     return out, RWKVState(s_fin, x_last, state.x_prev_c)
 
 
@@ -195,7 +195,7 @@ def time_mix_step(params, cfg: RWKVConfig, x, state: RWKVState, policy,
     s_new = state.s * w1[..., None] + kv
     out = o.reshape(b, 1, d).astype(x.dtype)
     out = out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
-    out = mp_linear(params["w_o"], out, policy.spec_for(f"{path}/w_o"))
+    out = mp_linear(params["w_o"], out, policy.spec_for(f"{path}/w_o"), path=f"{path}/w_o")
     return out, RWKVState(s_new, x[:, -1], state.x_prev_c)
 
 
@@ -209,10 +209,10 @@ def channel_mix(params, cfg: RWKVConfig, x, state: RWKVState, policy,
     xk = _mix(x, shifted, params["c_mu"]["k"])
     xr = _mix(x, shifted, params["c_mu"]["r"])
     sp = policy.spec_for
-    kk = mp_linear(params["c_key"], xk, sp(f"{path}/c_key"))
+    kk = mp_linear(params["c_key"], xk, sp(f"{path}/c_key"), path=f"{path}/c_key")
     kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
-    vv = mp_linear(params["c_val"], kk, sp(f"{path}/c_val"))
+    vv = mp_linear(params["c_val"], kk, sp(f"{path}/c_val"), path=f"{path}/c_val")
     rr = jax.nn.sigmoid(mp_linear(params["c_rec"], xr,
-                                  sp(f"{path}/c_rec")).astype(jnp.float32))
+                                  sp(f"{path}/c_rec"), path=f"{path}/c_rec").astype(jnp.float32))
     out = (rr * vv.astype(jnp.float32)).astype(x.dtype)
     return out, RWKVState(state.s, state.x_prev_t, x_last)

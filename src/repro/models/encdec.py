@@ -83,7 +83,7 @@ def encode(params, cfg: ModelConfig, frames):
     policy = get_policy(cfg.precision_policy)
     from repro.layers.mplinear import mp_linear
     x = mp_linear(params["frontend_proj"], frames.astype(
-        jnp.dtype(cfg.compute_dtype)), policy.spec_for("frontend_proj"))
+        jnp.dtype(cfg.compute_dtype)), policy.spec_for("frontend_proj"), path="frontend_proj")
     b, t, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
 

@@ -226,11 +226,88 @@ def projection_paths(cfg: ModelConfig) -> Callable[[str], Optional[str]]:
 
 
 def _prepare_fn(cfg: ModelConfig) -> Callable:
-    def prepare(params, policy):
+    def prepare(params, policy, act_scales=None):
         from repro.quant.prepare import prepare_params
-        return prepare_params(params, policy, projection_paths(cfg))
+        return prepare_params(params, policy, projection_paths(cfg),
+                              act_scales=act_scales)
 
     return prepare
+
+
+# families eligible for the blocked decode fast path: decode_step must
+# consume a {'token', 'pos'} batch, emit last-position logits, and keep
+# batch rows independent — AND the masked pad steps a budget-exhausted
+# slot keeps receiving inside a block must be causally invisible. That
+# holds for position-tagged KV caches (the pad write at position 0 is
+# overwritten/masked exactly as under per-token dispatch) but NOT for
+# recurrent state (rwkv/griffin fold every consumed token into O(1)
+# state, so the block-vs-tick pad cadence difference diverges the
+# token streams — measured, not hypothetical); encdec's decode state
+# only exists after prefill, so it cannot serve through the engine's
+# decode program at all. Mirror of
+# ``repro.serving.engine._FAST_PREFILL_FAMILIES`` for new families.
+_BLOCK_DECODE_FAMILIES = ("lm", "vlm")
+
+
+def block_decode_eligible(cfg: ModelConfig) -> bool:
+    return cfg.family in _BLOCK_DECODE_FAMILIES
+
+
+def make_block_decode(api: "ModelAPI", n: int, policy=None) -> Callable:
+    """Generic multi-token decode block: a ``lax.scan`` of ``n``
+    ``api.decode_step`` calls with on-device greedy token selection.
+
+    Returns ``fn(params, tok, pos, remaining, state) -> (tokens, tok,
+    pos, remaining, state)`` where ``tok``/``pos``/``remaining`` are
+    (B,) int32 (current input token, absolute position, tokens left in
+    each slot's budget) and ``tokens`` is the (n, B) int32 greedy
+    trajectory. Slots with an exhausted budget are masked: they feed the
+    pad token at position 0 — exactly what the per-token engine feeds
+    freed slots — and stop advancing, so a host driving blocks of n is
+    token-for-token identical to one dispatching single steps, while
+    syncing once per block instead of once per token. Callers jit the
+    result (one compile per distinct ``n``).
+
+    Weight operands are STAGED once per block
+    (``quant.prepare.stage_params``): fake-quant int projections
+    materialize their compute-dtype dequantized form — the identical
+    array the executors rebuild from packed storage every call — before
+    the scan, so the n steps reuse it instead of re-deriving it n
+    times. Bit-exact, and engine storage stays packed.
+
+    ``policy`` is the already-resolved PrecisionPolicy the staging walk
+    routes specs from; engines pass their eagerly-resolved policy so a
+    ``plan:`` file that disappears after construction (or a transient
+    registered policy) cannot fail the first blocked dispatch. Resolved
+    here — never at trace time — when omitted."""
+    if not block_decode_eligible(api.cfg):
+        raise ValueError(
+            f"family {api.cfg.family!r} is not eligible for blocked "
+            f"decode (want one of {_BLOCK_DECODE_FAMILIES})")
+    if policy is None:
+        from repro.core.policy import get_policy
+        policy = get_policy(api.cfg.precision_policy)
+
+    def run(params, tok, pos, remaining, state):
+        from repro.quant.prepare import stage_params
+        params = stage_params(params, policy, projection_paths(api.cfg))
+        def body(carry, _):
+            tok, pos, rem, st = carry
+            active = rem > 0
+            batch = {"token": jnp.where(active, tok, 0)[:, None],
+                     "pos": jnp.where(active, pos, 0)}
+            logits, st = api.decode_step(params, batch, st)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = jnp.where(active, nxt, tok)
+            pos = jnp.where(active, pos + 1, pos)
+            rem = jnp.where(active, rem - 1, rem)
+            return (tok, pos, rem, st), nxt
+
+        (tok, pos, remaining, state), tokens = jax.lax.scan(
+            body, (tok, pos, remaining, state), None, length=n)
+        return tokens, tok, pos, remaining, state
+
+    return run
 
 
 class ModelAPI(NamedTuple):

@@ -34,10 +34,10 @@ def _project(params, cfg: ModelConfig, patches):
     policy = get_policy(cfg.precision_policy)
     x = patches.astype(jnp.dtype(cfg.compute_dtype))
     x = mp_linear(params["projector"]["fc1"], x,
-                  policy.spec_for("projector/fc1"))
+                  policy.spec_for("projector/fc1"), path="projector/fc1")
     x = jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
     return mp_linear(params["projector"]["fc2"], x,
-                     policy.spec_for("projector/fc2"))
+                     policy.spec_for("projector/fc2"), path="projector/fc2")
 
 
 def _prefix_seq(params, cfg: ModelConfig, tokens, patches):

@@ -4,6 +4,11 @@ from repro.quant.quantize import (  # noqa: F401
     dequantize,
     calibrate_absmax,
 )
+from repro.quant.calibrate import (  # noqa: F401
+    ACT_BITS,
+    calibrate_act_scales,
+    scales_from_absmax,
+)
 from repro.quant.prepare import (  # noqa: F401
     MODE_BYTES_PER_PARAM,
     PreparedWeight,

@@ -1,0 +1,93 @@
+"""Static activation-scale calibration — the deployment-side fix for
+the last per-token overhead of the int datapaths.
+
+Dynamic fake-quant calibrates an absmax per *call*: every int8/int4
+projection runs a full activation reduce on every decode token, and the
+scale it finds spans a whole prompt in prefill but a single token in
+decode, so the two admission paths only agree up to that granularity.
+The paper's accelerator instead consumes operands quantized against
+*stored* scales — operand preparation, not the MACs, is the overhead
+worth engineering away (cf. FlexiBit in PAPERS.md).
+
+``calibrate_act_scales`` runs a short calibration pass — a few prefill
+forwards over calibration prompts, or random token batches exactly like
+the autotune divergence probe (``registry.materialize_batch``) — with
+the :func:`repro.layers.mplinear.collect_act_stats` hook open, and turns
+the observed per-projection absmax into symmetric 8-bit scales keyed by
+the runtime policy path (``'block/full/attn/wq'``). The resulting dict:
+
+  * attaches to prepared weights (``quant.prepare.prepare_params(...,
+    act_scales=...)`` -> ``PreparedWeight.act_scale``), where the int
+    executors consume it instead of reducing;
+  * serializes into ``repro.autotune`` plan artifacts (``act_scales``
+    field), so an offline-searched plan carries its calibration;
+  * makes prefill and decode fake-quant numerics identical — a fixed
+    rounding grid is elementwise, so quantizing a prompt matrix equals
+    quantizing its rows token by token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+# activations always quantize symmetrically to 8 bits in this codebase
+# (see layers.mplinear._int_executor); scale = absmax / (2^7 - 1)
+ACT_BITS = 8
+ACT_QMAX = (1 << (ACT_BITS - 1)) - 1
+
+
+def scales_from_absmax(absmax: Dict[str, float],
+                       pct: float = 1.0) -> Dict[str, float]:
+    """Observed per-path absolute maxima -> symmetric 8-bit scales.
+
+    ``pct`` < 1 shrinks the clip range (simple outlier clipping); the
+    floor mirrors ``quantize.calibrate_absmax`` so an all-zero
+    calibration stream cannot emit a zero scale.
+    """
+    return {path: max(m * pct, 1e-8) / ACT_QMAX
+            for path, m in absmax.items()}
+
+
+def calibrate_act_scales(cfg, api=None, params=None, *,
+                         prompts: Optional[Sequence] = None,
+                         n_batches: int = 2, batch: int = 2,
+                         seq_len: int = 16, seed: int = 0,
+                         pct: float = 1.0) -> Dict[str, float]:
+    """Per-projection static activation scales for serving ``cfg``.
+
+    Runs ``n_batches`` prefill forwards — over ``prompts`` (token
+    arrays, each run as a single-sequence batch) when given, else over
+    random token batches shaped like the autotune probe — through the
+    model under its own precision policy (so downstream activations see
+    the same quantization noise they will at serve time), recording
+    every projection's input absmax via ``collect_act_stats``. Returns
+    {policy path -> f32 scale}; feed it to ``prepare_params`` /
+    ``ServingEngine(act_calibration=...)``.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs.base import InputShape
+    from repro.layers import mplinear
+    from repro.models import registry
+
+    if api is None:
+        api = registry.build(cfg)
+    if params is None:
+        params = api.init(jax.random.PRNGKey(seed))
+
+    with mplinear.collect_act_stats() as absmax:
+        if prompts is not None:
+            for p in prompts:
+                tokens = np.asarray(p, np.int32)[None, :]
+                caches = api.init_cache(1, tokens.shape[1])
+                api.prefill(params, {"tokens": tokens}, caches)
+        else:
+            shape = InputShape("calib", seq_len, batch, "prefill")
+            for i in range(n_batches):
+                cal = registry.materialize_batch(cfg, shape, seed=seed + i)
+                caches = api.init_cache(batch, seq_len)
+                api.prefill(params, cal, caches)
+        # the stats arrive through jax.debug callbacks: make sure every
+        # dispatched forward has flushed before reading them
+        jax.effects_barrier()
+    return scales_from_absmax(absmax, pct=pct)

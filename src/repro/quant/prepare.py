@@ -53,16 +53,33 @@ class PreparedWeight:
     per-out-channel f32 scales (keepdims over axis -2; ``None`` for
     fp16). Leading stacked-block axes are preserved so scan slices
     prepared weights exactly like raw ones.
+
+    'staged8' / 'staged4' are *trace-time* kinds (``stage_params``):
+    ``data`` holds the compute-dtype dequantized weights a blocked
+    decode program materializes ONCE per block and reuses every scan
+    step. They never live in engine storage — weight-resident bytes
+    always describe the packed/int forms above.
+
+    ``act_scale`` optionally carries the *calibrated static activation
+    scale* of the projection (f32 scalar, from ``quant.calibrate``):
+    int executors that find one quantize incoming activations with it
+    instead of running a per-token absmax reduce.
     """
 
     data: jax.Array
     scale: Optional[jax.Array] = dataclasses.field(default=None)
     kind: str = dataclasses.field(default="int8",
                                   metadata=dict(static=True))
+    act_scale: Optional[jax.Array] = dataclasses.field(default=None)
 
     @property
     def weight_bits(self) -> Optional[int]:
-        return {"int8": 8, "int4": 4, "int4_packed": 4}.get(self.kind)
+        return {"int8": 8, "int4": 4, "int4_packed": 4,
+                "staged8": 8, "staged4": 4}.get(self.kind)
+
+    @property
+    def staged(self) -> bool:
+        return self.kind in ("staged8", "staged4")
 
     def unpacked(self) -> jax.Array:
         """Integer storage with nibbles unpacked (int kinds only)."""
@@ -74,22 +91,28 @@ class PreparedWeight:
     def dequant(self) -> jax.Array:
         """f32 weights — bit-exact to the dynamic fake-quant forward
         value for int kinds (same q * scale on the same q, scale)."""
-        if self.kind == "fp16":
+        if self.kind == "fp16" or self.staged:
             return self.data.astype(jnp.float32)
         return self.unpacked().astype(jnp.float32) * self.scale
 
     def nbytes(self) -> int:
         return int(self.data.nbytes
-                   + (self.scale.nbytes if self.scale is not None else 0))
+                   + (self.scale.nbytes if self.scale is not None else 0)
+                   + (self.act_scale.nbytes
+                      if self.act_scale is not None else 0))
 
 
-def prepare_weight(w: jax.Array, spec: PrecisionSpec
+def prepare_weight(w: jax.Array, spec: PrecisionSpec,
+                   act_scale: Optional[float] = None
                    ) -> Union[jax.Array, "PreparedWeight"]:
     """Prepare ONE weight array (..., d_in, d_out) for ``spec``.
 
     bf16/fp32 (and already-prepared containers) pass through untouched;
     int modes quantize over axis -2 (per-out-channel scales), int4
     additionally nibble-packs when the contraction dim is even.
+    ``act_scale`` (calibrated static activation scale, int modes only)
+    is stored on the container so executors skip the per-token
+    activation absmax reduce.
     """
     if isinstance(w, PreparedWeight):
         return w                     # idempotent: preparing twice is a no-op
@@ -98,11 +121,16 @@ def prepare_weight(w: jax.Array, spec: PrecisionSpec
     if spec.mode == "fp16_ipu":
         return PreparedWeight(w.astype(jnp.float16), None, "fp16")
     bits = spec.weight_bits
+    # the act-scale leaf carries the weight's leading stacked-block axes
+    # (broadcast) so scan slices prepared trees exactly like raw ones,
+    # leaving a 0-d scalar per block
+    a = None if act_scale is None else jnp.full(w.shape[:-2], act_scale,
+                                                jnp.float32)
     q, s = quantize_symmetric(w.astype(jnp.float32), bits, axis=-2)
     if bits == 4 and w.shape[-2] % 2 == 0:
         from repro.kernels import ops as kops
-        return PreparedWeight(kops.pack_int4(q), s, "int4_packed")
-    return PreparedWeight(q, s, "int8" if bits == 8 else "int4")
+        return PreparedWeight(kops.pack_int4(q), s, "int4_packed", a)
+    return PreparedWeight(q, s, "int8" if bits == 8 else "int4", a)
 
 
 PathResolver = Union[Callable[[str], Optional[str]], Mapping[str, str]]
@@ -114,7 +142,34 @@ def _resolver(paths: PathResolver) -> Callable[[str], Optional[str]]:
     return paths.get
 
 
-def prepare_params(params, policy: PrecisionPolicy, paths: PathResolver):
+def _map_projections(params, resolve: Callable[[str], Optional[str]],
+                     fn: Callable[[str, Any], Any]):
+    """Rebuild ``params`` with ``fn(container_path, weight)`` applied to
+    every projection 'w' leaf ``resolve`` targets — the one tree walk
+    preparation and staging share. Untargeted leaves (and containers)
+    pass through by reference."""
+    def walk(node, prefix: str):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                child = f"{prefix}/{k}" if prefix else k
+                if (k == "w" and isinstance(v, (jax.Array, PreparedWeight))
+                        and resolve(prefix) is not None):
+                    out[k] = fn(prefix, v)
+                else:
+                    out[k] = walk(v, child)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(
+                walk(v, f"{prefix}/{i}" if prefix else str(i))
+                for i, v in enumerate(node))
+        return node
+
+    return walk(params, "")
+
+
+def prepare_params(params, policy: PrecisionPolicy, paths: PathResolver,
+                   act_scales: Optional[Mapping[str, float]] = None):
     """Walk ``params`` once and prepare every projection weight.
 
     ``paths`` maps a param-tree container path (``'blocks/b0/attn/wq'``,
@@ -123,6 +178,8 @@ def prepare_params(params, policy: PrecisionPolicy, paths: PathResolver):
     for parameters that never route through the precision policy
     (embeddings, norms, the MoE router, recurrence gates). Families
     provide their map via ``models.registry`` (the ``prepare=`` hook).
+    ``act_scales`` (policy path -> calibrated static activation scale,
+    from ``quant.calibrate``) rides onto each int container it covers.
 
     Pure: returns a new tree; raw leaves (and containers whose spec is
     bf16/fp32) are passed through by reference, so preparing twice is a
@@ -131,25 +188,46 @@ def prepare_params(params, policy: PrecisionPolicy, paths: PathResolver):
     """
     resolve = _resolver(paths)
 
-    def walk(node, prefix: str):
-        if isinstance(node, dict):
-            out = {}
-            for k, v in node.items():
-                child = f"{prefix}/{k}" if prefix else k
-                if k == "w" and isinstance(v, (jax.Array, PreparedWeight)):
-                    pol_path = resolve(prefix)
-                    if pol_path is not None:
-                        out[k] = prepare_weight(v, policy.spec_for(pol_path))
-                        continue
-                out[k] = walk(v, child)
-            return out
-        if isinstance(node, (list, tuple)):
-            items = [walk(v, f"{prefix}/{i}" if prefix else str(i))
-                     for i, v in enumerate(node)]
-            return type(node)(items)
-        return node
+    def prep(prefix: str, w):
+        pol_path = resolve(prefix)
+        a = act_scales.get(pol_path) if act_scales is not None else None
+        return prepare_weight(w, policy.spec_for(pol_path), act_scale=a)
 
-    return walk(params, "")
+    return _map_projections(params, resolve, prep)
+
+
+def stage_params(params, policy: PrecisionPolicy, paths: PathResolver,
+                 compute_dtype=jnp.bfloat16):
+    """Stage every fake-quant projection for a multi-step decode block.
+
+    Called INSIDE a jitted block program (``registry.make_block_decode``):
+    int containers whose spec runs the fake-quant path (``exact=False``)
+    are replaced by 'staged' containers holding
+    ``dequant().astype(compute_dtype)`` — the exact array the executor
+    would otherwise rebuild from storage on every scan step — and
+    bf16-routed raw f32 weights are cast once the same way. Bit-exact by
+    construction (the identical value, computed once instead of N
+    times); engine storage is untouched because staging only exists in
+    the traced program. Exact-kernel and fp16 specs consume storage
+    operands directly, so they pass through.
+    """
+    resolve = _resolver(paths)
+
+    def stage(prefix: str, w):
+        spec = policy.spec_for(resolve(prefix))
+        if spec.exact:
+            return w
+        if isinstance(w, PreparedWeight):
+            if w.weight_bits and not w.staged:
+                return PreparedWeight(
+                    w.dequant().astype(compute_dtype), None,
+                    f"staged{w.weight_bits}", w.act_scale)
+            return w
+        if spec.mode == "bf16":          # raw weights: one cast per block
+            return w.astype(compute_dtype)
+        return w
+
+    return _map_projections(params, resolve, stage)
 
 
 def iter_projection_weights(params, paths: PathResolver):

@@ -30,6 +30,8 @@ def quantize_symmetric(x: jax.Array, bits: int, axis=None,
     qmax = (1 << (bits - 1)) - 1
     if scale is None:
         scale = calibrate_absmax(x, axis=axis) / qmax
+    else:
+        scale = jnp.asarray(scale, jnp.float32)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax - 1, qmax)
     return q.astype(jnp.int8), scale.astype(jnp.float32)
 
@@ -38,15 +40,22 @@ def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
-def fake_quant(x: jax.Array, bits: int, axis=None) -> jax.Array:
+def fake_quant(x: jax.Array, bits: int, axis=None,
+               scale: Optional[jax.Array] = None) -> jax.Array:
     """Quantize-dequantize with a straight-through estimator.
 
     Forward: the value the INT datapath would compute (up to the exact
     integer matmul, which is error-free); backward: identity. Keeps the
     matmul on the MXU and shards like a dense op — the at-scale mode.
+
+    With an explicit ``scale`` (calibrated static activation scale) the
+    absmax reduce is skipped entirely: the rounding grid is fixed, so
+    the result is elementwise and therefore bit-identical whether ``x``
+    is a whole prompt matrix or its rows one token at a time — what
+    makes calibrated prefill and decode admission numerics agree.
     """
     def qdq(v):
-        q, s = quantize_symmetric(v, bits, axis=axis)
+        q, s = quantize_symmetric(v, bits, axis=axis, scale=scale)
         return dequantize(q, s).astype(v.dtype)
 
     return x + jax.lax.stop_gradient(qdq(x) - x)

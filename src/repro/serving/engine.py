@@ -17,13 +17,6 @@ invariant holds for attention caches but *not* for recurrent state
 path is gated per family and everything else falls back to the
 teacher-forced admission loop the engine always had.
 
-One numeric caveat: policies with *dynamic* activation scales (int8 /
-int4 fake-quant calibrate absmax per tensor) quantize over the whole
-prompt in prefill but over single tokens in decode, so the two
-admission paths agree exactly only up to that scale granularity — an
-inherent property of dynamic fake-quant, not of the cache merge (which
-tests verify bitwise-closely under bf16).
-
 Weights are PREPARED at construction (``quant.prepare`` via the model
 family's ``api.prepare`` hook, default on): each replica stores its
 projections in the policy's deployment format — packed int4 nibbles,
@@ -33,6 +26,33 @@ per token and per-replica weight-resident bytes reflect the policy
 output-equivalent to dynamic quantization (tests/test_prepare.py);
 ``prepare_weights=False`` restores the dynamic path (benchmarked as the
 baseline in benchmarks/serve_bench.py).
+
+Activation scales can be CALIBRATED the same way (``act_calibration=``:
+a {path: scale} dict, or ``"auto"`` to take them from the serving
+plan's ``act_scales`` or run a short ``quant.calibrate`` pass at
+construction): int executors then quantize activations against stored
+static scales — zero per-token absmax reduces
+(``act_quant_trace_count()``), and prefill/decode fake-quant numerics
+become identical (a fixed rounding grid is elementwise), so batched and
+teacher-forced admission agree exactly as they do under bf16. An
+UNCALIBRATED int engine (the default) keeps the historical dynamic
+behavior: the per-tensor absmax spans the whole prompt in prefill but
+single tokens in decode, so its two admission paths agree only up to
+that scale granularity, and the shared absmax couples batch rows.
+
+Decode runs a FAST PATH when ``decode_block > 1``: a jitted
+``lax.scan`` of ``decode_block`` ``decode_step`` calls with on-device
+greedy selection (``models.registry.make_block_decode``), per-slot
+active masks and remaining-token budgets carried in the scan state. The
+host syncs generated tokens once per block instead of once per token
+(the ``host_syncs`` counter); admission still runs between blocks.
+``decode_block=1`` dispatches single steps exactly as before, and the
+blocked path is token-for-token identical to it per request
+(tests/test_serving.py::TestBlockedDecode) — which is also why it
+requires per-slot-independent decode: eligible families only
+(position-tagged caches), greedy selection, and no dynamically-scaled
+fake-quant projections (their batch-row coupling is rejected at
+construction; calibrate or use exact kernels).
 """
 from __future__ import annotations
 
@@ -120,6 +140,7 @@ class ServingEngine:
                  greedy: bool = True, prefill_chunk: int = 32,
                  prefill: str = "auto", scheduler=None,
                  prepare_weights: bool = True,
+                 act_calibration=None, decode_block: int = 1,
                  clock: Callable[[], float] = time.monotonic):
         from repro.serving.scheduler import AdmissionScheduler
         self.cfg = cfg
@@ -133,13 +154,26 @@ class ServingEngine:
         # missing/invalid plan file fails at engine construction, not on
         # the first decode (plan: refs load repro.autotune artifacts)
         self.policy = policy_mod.get_policy(cfg.precision_policy)
+        # cheap decode_block validation FIRST: a misconfigured fast
+        # path must not pay the calibration forwards below before
+        # failing
+        self.decode_block = max(int(decode_block), 1)
+        if self.decode_block > 1 and not self.greedy:
+            raise ValueError("decode_block > 1 selects tokens on device "
+                             "(greedy argmax); needs greedy=True")
+        if self.decode_block > 1 and not registry.block_decode_eligible(cfg):
+            raise ValueError(
+                f"family {cfg.family!r} is not eligible for blocked decode")
         # prepared-weight datapath: quantize/pack the replica's weights
         # ONCE at construction (quant.prepare) so decode never
         # re-quantizes static weights per token and int4 replicas hold
-        # packed nibbles instead of fp32
+        # packed nibbles instead of fp32; calibrated static activation
+        # scales ride on the prepared containers the same way
         self.prepared = bool(prepare_weights) and api.prepare is not None
-        self.params = api.prepare(params, self.policy) if self.prepared \
-            else params
+        self.act_scales = self._resolve_act_scales(act_calibration, params)
+        self.params = api.prepare(params, self.policy,
+                                  act_scales=self.act_scales) \
+            if self.prepared else params
         self.caches = api.init_cache(batch_slots, cache_len)
         self.pos = np.zeros(batch_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
@@ -154,51 +188,165 @@ class ServingEngine:
                 f"prefill; family {cfg.family!r} is not eligible")
         self._fast_prefill = (cfg.family in _FAST_PREFILL_FAMILIES
                               if prefill == "auto" else prefill == "batched")
-        self.counters = {"ticks": 0, "decode_steps": 0, "prefill_calls": 0,
-                         "prefill_tokens": 0, "teacher_forced_tokens": 0,
+        if self.decode_block > 1:
+            # dynamic fake-quant calibrates ONE absmax over the whole
+            # (slots, 1, d) activation tensor, coupling batch rows — a
+            # blocked engine's pad cadence would then leak into other
+            # slots' tokens (measured). Exact int kernels quantize
+            # per row and calibrated scales are elementwise, so both
+            # stay per-slot independent.
+            uncovered = self._dynamic_fake_int_paths(params)
+            if uncovered:
+                raise ValueError(
+                    "decode_block > 1 needs per-slot-independent "
+                    "decode, but dynamically-scaled fake-quant "
+                    "projections couple batch rows through their "
+                    "shared per-tensor activation absmax "
+                    f"({sorted(uncovered)[:3]}...); calibrate static "
+                    "activation scales (act_calibration='auto' or a "
+                    "quant.calibrate dict) or serve exact int kernels")
+        self.counters = {"ticks": 0, "decode_steps": 0, "host_syncs": 0,
+                         "prefill_calls": 0, "prefill_tokens": 0,
+                         "teacher_forced_tokens": 0,
                          "admitted": 0, "submitted": 0}
         self._decode = jax.jit(
             lambda p, tok, pos, c: api.decode_step(
                 p, {"token": tok, "pos": pos}, c))
         self._prefill_admit = jax.jit(self._prefill_admit_impl)
+        # blocked-decode programs, one jit cache entry per block length
+        # (lengths are min(decode_block, largest remaining budget), so
+        # at most decode_block distinct compiles)
+        self._block_fns: Dict[int, Callable] = {}
+        # params are immutable after preparation: walk the tree for the
+        # resident-bytes report once, not on every metrics() call
+        from repro.quant.prepare import weight_resident_bytes
+        self._weight_bytes = weight_resident_bytes(
+            self.params, registry.projection_paths(self.cfg))
+
+    def _resolve_act_scales(self, act_calibration, params):
+        """None | mapping | 'auto' -> {policy path: static scale}.
+
+        'auto' prefers scales embedded in a ``plan:`` artifact (the
+        searched plan carries its calibration — which assumes the plan
+        was calibrated against the same seeded-init checkpoint this
+        replica serves) and otherwise runs a short random-token
+        calibration pass over the raw params."""
+        if act_calibration is None:
+            return None
+        if not self.prepared:
+            # refusing beats silently measuring the dynamic path: the
+            # scales only take effect through prepared containers
+            raise ValueError("act_calibration requires prepared weights "
+                             "(prepare_weights=True)")
+        if isinstance(act_calibration, dict):
+            return dict(act_calibration)
+        if act_calibration != "auto":
+            raise ValueError(
+                f"act_calibration must be None, a dict or 'auto', got "
+                f"{act_calibration!r}")
+        if not self._routes_int(params):
+            # nothing would consume the scales (e.g. a pure-bf16
+            # policy): skip the pass and keep act_calibrated honest
+            return None
+        pol = self.cfg.precision_policy
+        if pol.startswith("plan:"):
+            from repro.autotune.plan import load_act_scales
+            scales = load_act_scales(pol[len("plan:"):])
+            if scales:
+                return scales
+        from repro.quant.calibrate import calibrate_act_scales
+        return calibrate_act_scales(self.cfg, self.api, params)
+
+    def _routes_int(self, params) -> bool:
+        """Does the policy route any projection of this param tree to an
+        int mode? (Pure tree walk + spec resolution; no compute.)"""
+        from repro.quant.prepare import iter_projection_weights
+        paths = registry.projection_paths(self.cfg)
+        return any(
+            self.policy.spec_for(paths(prefix)).weight_bits
+            for prefix, _ in iter_projection_weights(params, paths))
+
+    def _dynamic_fake_int_paths(self, params) -> set:
+        """Policy paths routed to fake-quant int modes whose activation
+        scale stays dynamic (no calibrated scale covers them) — the
+        projections whose per-tensor absmax couples batch rows. MoE
+        expert stacks are exempt: ``moe.forward`` fake-quants weights
+        only (activations ride the bf16 einsums untouched), so there is
+        no row coupling — and no mp_linear call for calibration to ever
+        cover."""
+        from repro.quant.prepare import iter_projection_weights
+        paths = registry.projection_paths(self.cfg)
+        scales = self.act_scales or {}
+        out = set()
+        for prefix, _ in iter_projection_weights(params, paths):
+            pol_path = paths(prefix)
+            if pol_path == "block/moe/experts":
+                continue
+            spec = self.policy.spec_for(pol_path)
+            if (spec.weight_bits and not spec.exact
+                    and pol_path not in scales):
+                out.add(pol_path)
+        return out
 
     # ------------------------------------------------------- observability
 
+    def _trace_decode(self, hook):
+        """Trace ONE decode step abstractly (``jax.eval_shape`` — no
+        compute runs, the KV caches are untouched) under a capture
+        context manager and return whatever the context yielded. The
+        shared scaffolding of every trace-time assertion surface:
+        routing, weight-quant and act-quant counters.
+
+        Traces the program the engine actually dispatches: the plain
+        ``decode_step`` at ``decode_block=1``, or the blocked scan
+        program — staging walk included — on the fast path, so the
+        counter contracts keep covering what really runs (a staging
+        regression that dropped scales or storage would fire here)."""
+        with hook() as captured:
+            if self.decode_block > 1:
+                fn = registry.make_block_decode(self.api, 1,
+                                                policy=self.policy)
+                zeros = jnp.zeros((self.b,), jnp.int32)
+                jax.eval_shape(
+                    lambda p, c: fn(p, zeros, zeros,
+                                    jnp.ones((self.b,), jnp.int32), c),
+                    self.params, self.caches)
+            else:
+                tok = jnp.zeros((self.b, 1), jnp.int32)
+                pos = jnp.zeros((self.b,), jnp.int32)
+                jax.eval_shape(
+                    lambda p, c: self.api.decode_step(
+                        p, {"token": tok, "pos": pos}, c),
+                    self.params, self.caches)
+        return captured
+
     def routing_report(self) -> Dict[str, str]:
         """Observed (parameter path -> datapath mode) of one decode step
-        under the active policy. Traced abstractly (``jax.eval_shape``)
-        so it never runs compute or touches the KV caches — the
-        verification surface the plan-routing assertion tests use."""
-        tok = jnp.zeros((self.b, 1), jnp.int32)
-        pos = jnp.zeros((self.b,), jnp.int32)
-        with policy_mod.trace_routing() as records:
-            jax.eval_shape(
-                lambda p, c: self.api.decode_step(
-                    p, {"token": tok, "pos": pos}, c),
-                self.params, self.caches)
-        return dict(records)
+        under the active policy — the verification surface the
+        plan-routing assertion tests use."""
+        return dict(self._trace_decode(policy_mod.trace_routing))
 
     def weight_bytes(self) -> Dict:
         """Weight memory resident in this replica's param tree: total
         bytes, the policy-routed projection subset, and a per-storage-
-        kind breakdown ('raw' = unprepared fp32/bf16)."""
-        from repro.quant.prepare import weight_resident_bytes
-        return weight_resident_bytes(
-            self.params, registry.projection_paths(self.cfg))
+        kind breakdown ('raw' = unprepared fp32/bf16). Computed once at
+        construction — params are immutable after preparation."""
+        return self._weight_bytes
 
     def weight_quant_trace_count(self) -> int:
         """Dynamic weight quantizations traced into ONE decode step —
         the counter hook the serving-smoke contract asserts is zero for
-        prepared replicas. Traced abstractly, no compute runs."""
+        prepared replicas."""
         from repro.layers import mplinear
-        tok = jnp.zeros((self.b, 1), jnp.int32)
-        pos = jnp.zeros((self.b,), jnp.int32)
-        with mplinear.count_weight_quant() as box:
-            jax.eval_shape(
-                lambda p, c: self.api.decode_step(
-                    p, {"token": tok, "pos": pos}, c),
-                self.params, self.caches)
-        return box[0]
+        return self._trace_decode(mplinear.count_weight_quant)[0]
+
+    def act_quant_trace_count(self) -> int:
+        """Dynamic activation-scale calibrations (per-token absmax
+        reduces) traced into ONE decode step — zero for calibrated
+        replicas (static scales), > 0 for any dynamically-scaled int
+        projection."""
+        from repro.layers import mplinear
+        return self._trace_decode(mplinear.count_act_quant)[0]
 
     def metrics(self) -> Dict:
         """Aggregate request latency metrics + engine counters."""
@@ -208,6 +356,8 @@ class ServingEngine:
         m["queue"] = len(self.scheduler)
         m["active_slots"] = sum(r is not None for r in self.slot_req)
         m["prepared_weights"] = self.prepared
+        m["act_calibrated"] = self.act_scales is not None
+        m["decode_block"] = self.decode_block
         m["weight_bytes"] = self.weight_bytes()
         return m
 
@@ -322,17 +472,39 @@ class ServingEngine:
         logits, self.caches = self._decode(
             self.params, jnp.array(tok), jnp.array(self.pos), self.caches)
         self.pos[slot] += 1
+        self.counters["host_syncs"] += 1
         return int(np.asarray(jnp.argmax(logits[slot])))
 
     # --------------------------------------------------------- decode loop
 
+    def _block_decode(self, n: int) -> Callable:
+        fn = self._block_fns.get(n)
+        if fn is None:
+            # pass the eagerly-resolved policy: a plan: file deleted
+            # after construction must not fail the first dispatch
+            fn = jax.jit(registry.make_block_decode(self.api, n,
+                                                    policy=self.policy))
+            self._block_fns[n] = fn
+        return fn
+
+    def _finish_slot(self, s: int, now: float):
+        req = self.slot_req[s]
+        req.done = True
+        req.finish_time = now
+        self.completed[req.rid] = req
+        self.slot_req[s] = None
+        self.pos[s] = 0
+
     def step(self):
-        """One engine tick: admit + one decode for every active slot."""
+        """One engine tick: admit + one decode block (``decode_block``
+        tokens, one host sync) for every active slot."""
         self._admit()
         self.counters["ticks"] += 1
         active = [s for s in range(self.b) if self.slot_req[s] is not None]
         if not active:
             return False
+        if self.decode_block > 1:
+            return self._step_block(active)
         tok = np.zeros((self.b, 1), np.int32)
         for s in active:
             tok[s, 0] = self.slot_req[s].next_input
@@ -342,6 +514,7 @@ class ServingEngine:
             self.params, jnp.array(tok), jnp.array(self.pos),
             self.caches)
         self.counters["decode_steps"] += 1
+        self.counters["host_syncs"] += 1
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         now = self.clock()
         for s in active:
@@ -351,12 +524,40 @@ class ServingEngine:
                 req.first_token_time = now
             req.tokens.append(int(nxt[s]))
             req.next_input = int(nxt[s])
-            if len(req.tokens) - len(req.prompt) >= req.max_new_tokens:
-                req.done = True
-                req.finish_time = now
-                self.completed[req.rid] = req
-                self.slot_req[s] = None
-                self.pos[s] = 0
+            if req.new_tokens >= req.max_new_tokens:
+                self._finish_slot(s, now)
+        return True
+
+    def _step_block(self, active: List[int]) -> bool:
+        """Fast path: run min(decode_block, largest remaining budget)
+        decode steps in ONE dispatch (jitted scan with on-device argmax
+        + active masks) and sync the token trajectory once. Slot budgets
+        are host-known, so each slot's active prefix of the block is
+        replayed host-side without a second sync."""
+        rem = np.zeros(self.b, np.int32)
+        tok = np.zeros(self.b, np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            rem[s] = req.max_new_tokens - req.new_tokens
+            tok[s] = req.next_input
+        n = int(min(self.decode_block, int(rem.max())))
+        tokens, _, _, _, self.caches = self._block_decode(n)(
+            self.params, jnp.array(tok), jnp.array(self.pos),
+            jnp.array(rem), self.caches)
+        tokens = np.asarray(tokens)          # ONE host sync per block
+        self.counters["decode_steps"] += n
+        self.counters["host_syncs"] += 1
+        now = self.clock()
+        for s in active:
+            req = self.slot_req[s]
+            steps = int(min(rem[s], n))      # this slot's active prefix
+            if req.first_token_time is None:
+                req.first_token_time = now
+            req.tokens.extend(int(t) for t in tokens[:steps, s])
+            req.next_input = int(tokens[steps - 1, s])
+            self.pos[s] += steps
+            if req.new_tokens >= req.max_new_tokens:
+                self._finish_slot(s, now)
         return True
 
     def run_until_drained(self, max_ticks: int = 10_000):

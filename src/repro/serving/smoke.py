@@ -18,7 +18,14 @@ autotune-smoke cold/warm contract:
     is <= 1/6 of the raw fp32 bytes, and a control engine with
     preparation disabled shows the counter is live (> 0);
   * a second identical run routes identically (determinism contract —
-    the analogue of the warm-cache run reproducing the cold plan).
+    the analogue of the warm-cache run reproducing the cold plan);
+  * the decode FAST PATH holds its contracts on a blocked + calibrated
+    replica (``--decode-block``, default 4): token-for-token identical
+    output to the per-token engine on every request, the
+    decode_steps-vs-ticks counter relation (full blocks between
+    admission waves, one host sync per block), zero per-step weight
+    quants still, and zero per-token activation absmax reduces
+    (``mplinear.count_act_quant`` — static calibrated scales).
 """
 from __future__ import annotations
 
@@ -56,14 +63,58 @@ def _run_workload(requests: int, slots: int, max_new: int, seed: int):
     return router, reqs, ticks
 
 
+def _run_blocked_pair(decode_block: int, requests: int, slots: int,
+                      max_new: int, seed: int):
+    """The same workload through a per-token and a blocked+calibrated
+    int8 engine pair (shared raw params); returns both engines and the
+    per-request token streams."""
+    import jax
+
+    from repro.configs import reduced
+    from repro.models import registry
+    from repro.serving.engine import Request, ServingEngine
+
+    import dataclasses
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy="int8_serving")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    scales = None
+    engines, tokens = {}, {}
+    for blk in (1, decode_block):
+        eng = ServingEngine(cfg, api, params, batch_slots=slots,
+                            cache_len=64, decode_block=blk,
+                            act_calibration=scales or "auto")
+        scales = eng.act_scales      # calibrate once, share the scales
+        rng = np.random.default_rng(seed)
+        reqs = [Request(rid=rid,
+                        prompt=rng.integers(0, cfg.vocab,
+                                            int(rng.integers(3, 12)),
+                                            dtype=np.int32),
+                        max_new_tokens=max_new)
+                for rid in range(requests)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        engines[blk] = eng
+        tokens[blk] = {r.rid: list(r.tokens) for r in reqs}
+    return engines, tokens
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.serving smoke", description=__doc__)
     ap.add_argument("--requests", type=int, default=9)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=3)
+    ap.add_argument("--decode-block", type=int, default=4,
+                    help="block size of the fast-path replica (>= 2: "
+                         "the contract compares it against per-token)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.decode_block < 2:
+        ap.error("--decode-block must be >= 2 (the blocked replica is "
+                 "compared against a decode_block=1 engine)")
 
     router, reqs, ticks = _run_workload(args.requests, args.slots,
                                         args.max_new, args.seed)
@@ -115,6 +166,28 @@ def main(argv: Optional[List[str]] = None) -> int:
     assert router2.routing_counters() == counters, \
         (router2.routing_counters(), counters)
 
+    # --- decode fast path: a blocked + calibrated replica reproduces
+    # the per-token engine token-for-token, honours the counter
+    # contract (a tick dispatches at most one block, a block syncs the
+    # host once), and the fast path still performs zero per-step weight
+    # quants and zero per-token activation absmax reduces
+    blk = args.decode_block
+    engines, tokens = _run_blocked_pair(blk, args.requests, args.slots,
+                                        args.max_new, args.seed)
+    assert tokens[blk] == tokens[1], \
+        "blocked decode diverged from per-token decode"
+    fast, per_tok = engines[blk].counters, engines[1].counters
+    assert per_tok["host_syncs"] == per_tok["decode_steps"], per_tok
+    assert fast["decode_steps"] <= fast["ticks"] * blk, (fast, blk)
+    assert fast["host_syncs"] * blk >= fast["decode_steps"], (fast, blk)
+    assert fast["host_syncs"] < per_tok["host_syncs"], (fast, per_tok)
+    assert engines[blk].weight_quant_trace_count() == 0, \
+        "blocked replica quantizes weights per decode step"
+    assert engines[blk].act_quant_trace_count() == 0, \
+        "calibrated replica still absmax-reduces activations"
+    assert dyn.act_quant_trace_count() > 0, \
+        "dynamic control engine counted no activation quants"
+
     for name, rep in report["replicas"].items():
         m = rep["metrics"]
         print(f"replica {name}: routed={rep['routed']} "
@@ -126,5 +199,9 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"{len(counters)} replicas in {ticks} ticks, "
           f"counters={counters}; int4 prepared "
           f"{wb['projections']}B vs {raw_proj}B fp32 projections, "
-          f"0 weight quants/step (dynamic control: {dyn_quants})")
+          f"0 weight quants/step (dynamic control: {dyn_quants}); "
+          f"decode_block={blk} token-identical with "
+          f"{fast['host_syncs']} syncs / {fast['decode_steps']} steps "
+          f"(per-token: {per_tok['host_syncs']}), 0 act quants/step "
+          f"(dynamic control: {dyn.act_quant_trace_count()})")
     return 0

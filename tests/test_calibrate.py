@@ -1,0 +1,247 @@
+"""Static activation-scale calibration coverage.
+
+The contracts: a calibration pass produces a scale for every projection
+the policy routes; calibrated containers make int executors skip the
+per-token absmax reduce (``count_act_quant`` == 0) without changing the
+quantization semantics (a fixed rounding grid is elementwise, so
+quantizing a prompt matrix is bit-identical to quantizing its rows one
+token at a time — which is also why calibrated batched-prefill and
+teacher-forced admission numerics agree exactly as they do under bf16);
+and plans carry their calibration through JSON into a serving engine.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+
+ARCH = "qwen2-0.5b"
+
+
+@pytest.fixture(scope="module")
+def int8_setup():
+    import jax
+
+    from repro.models import registry
+    cfg = dataclasses.replace(reduced(ARCH),
+                              precision_policy="int8_serving")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+@pytest.fixture(scope="module")
+def scales(int8_setup):
+    from repro.quant.calibrate import calibrate_act_scales
+    cfg, api, params = int8_setup
+    return calibrate_act_scales(cfg, api, params)
+
+
+# ------------------------------------------------------- the core claim
+
+def test_static_scale_quant_is_elementwise_bit_identical():
+    """fake_quant against a FIXED scale gives the same values whether it
+    sees the whole prompt matrix or its rows one token at a time — the
+    property that erases the prefill/decode scale-granularity caveat
+    (dynamic absmax spans the prompt in prefill, one token in decode)."""
+    import jax.numpy as jnp
+
+    from repro.quant.quantize import calibrate_absmax, fake_quant
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(6, 16)), jnp.float32)
+    scale = float(calibrate_absmax(x)) / 127
+    whole = np.asarray(fake_quant(x, 8, scale=scale))
+    rows = np.stack([np.asarray(fake_quant(x[i], 8, scale=scale))
+                     for i in range(x.shape[0])])
+    np.testing.assert_array_equal(whole, rows)
+    # ...whereas dynamic per-call scales genuinely differ between views
+    whole_dyn = np.asarray(fake_quant(x, 8))
+    rows_dyn = np.stack([np.asarray(fake_quant(x[i], 8))
+                         for i in range(x.shape[0])])
+    assert not np.array_equal(whole_dyn, rows_dyn)
+
+
+def test_static_scale_matches_dynamic_on_same_absmax():
+    """With the static scale set to what absmax would have found, the
+    calibrated path reproduces the dynamic value bit-exactly — the
+    executors changed where the scale comes from, not the arithmetic."""
+    import jax.numpy as jnp
+
+    from repro.quant.quantize import calibrate_absmax, fake_quant
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    s = calibrate_absmax(x) / 127
+    np.testing.assert_array_equal(np.asarray(fake_quant(x, 8)),
+                                  np.asarray(fake_quant(x, 8, scale=s)))
+
+
+# ------------------------------------------------------ calibration pass
+
+def test_calibrate_covers_every_routed_projection(int8_setup, scales):
+    """Every path the decode step routes through the policy must have a
+    calibrated scale (prefill exercises the same projections)."""
+    from repro.serving.engine import ServingEngine
+    cfg, api, params = int8_setup
+    eng = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16)
+    routed = set(eng.routing_report())
+    assert routed <= set(scales), routed - set(scales)
+    assert all(s > 0 for s in scales.values())
+
+
+def test_calibrate_on_prompts(int8_setup):
+    from repro.quant.calibrate import calibrate_act_scales
+    cfg, api, params = int8_setup
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (5, 9)]
+    s = calibrate_act_scales(cfg, api, params, prompts=prompts)
+    assert s and all(v > 0 for v in s.values())
+
+
+def test_prepare_attaches_and_threads_scales(int8_setup, scales):
+    from repro.core.policy import get_policy
+    from repro.quant.prepare import (PreparedWeight,
+                                     iter_projection_weights)
+    from repro.models.registry import projection_paths
+    cfg, api, params = int8_setup
+    prepared = api.prepare(params, get_policy(cfg.precision_policy),
+                           act_scales=scales)
+    paths = projection_paths(cfg)
+    n_scaled = 0
+    for p, w in iter_projection_weights(prepared, paths):
+        if isinstance(w, PreparedWeight) and w.weight_bits:
+            assert w.act_scale is not None, p
+            # the scale leaf carries the stacked-block leading axes
+            assert w.act_scale.shape == w.data.shape[:-2], p
+            n_scaled += 1
+    assert n_scaled > 0
+
+
+# --------------------------------------------------- engine integration
+
+def test_calibrated_engine_zero_act_quants(int8_setup, scales):
+    from repro.serving.engine import ServingEngine
+    cfg, api, params = int8_setup
+    cal = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16,
+                        act_calibration=scales)
+    dyn = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16)
+    assert cal.act_quant_trace_count() == 0
+    assert cal.weight_quant_trace_count() == 0
+    assert dyn.act_quant_trace_count() > 0
+    assert cal.metrics()["act_calibrated"] is True
+    assert dyn.metrics()["act_calibrated"] is False
+
+
+def test_calibration_requires_prepared_weights(int8_setup, scales):
+    """Scales only take effect through prepared containers: asking for
+    calibration with preparation off must fail, not silently measure
+    the dynamic path."""
+    from repro.serving.engine import ServingEngine
+    cfg, api, params = int8_setup
+    with pytest.raises(ValueError, match="prepared weights"):
+        ServingEngine(cfg, api, params, batch_slots=2, cache_len=16,
+                      prepare_weights=False, act_calibration=scales)
+
+
+def test_calibrated_prefill_matches_teacher_forced(int8_setup, scales):
+    """With static scales the batched-prefill and teacher-forced
+    admission paths agree under int8 fake-quant exactly like they do
+    under bf16 (the dynamic-scale granularity caveat is gone): same
+    per-slot cache prefixes, same first generated token, same
+    first-step logits."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving.engine import Request, ServingEngine
+    cfg, api, params = int8_setup
+    lengths = [5, 1, 9]
+    rng = np.random.default_rng(0)
+    engines = {}
+    for mode in ("batched", "teacher"):
+        eng = ServingEngine(cfg, api, params, batch_slots=3,
+                            cache_len=64, prefill=mode, prefill_chunk=4,
+                            act_calibration=scales)
+        r = np.random.default_rng(0)
+        for i, n in enumerate(lengths):
+            eng.submit(Request(
+                rid=i, prompt=r.integers(0, cfg.vocab, n, dtype=np.int32),
+                max_new_tokens=2))
+        eng._admit()
+        engines[mode] = eng
+    fast, slow = engines["batched"], engines["teacher"]
+    assert np.array_equal(fast.pos, slow.pos)
+    for lf, ls in zip(jax.tree.leaves(fast.caches),
+                      jax.tree.leaves(slow.caches)):
+        for slot, n in enumerate(lengths):
+            if n <= 1:
+                continue
+            a = np.asarray(lf[:, slot, :n - 1], np.float32)
+            b = np.asarray(ls[:, slot, :n - 1], np.float32)
+            np.testing.assert_allclose(a, b, rtol=0.05, atol=0.05)
+    tok = np.zeros((fast.b, 1), np.int32)
+    for s in range(fast.b):
+        assert fast.slot_req[s].next_input == slow.slot_req[s].next_input
+        tok[s, 0] = fast.slot_req[s].next_input
+
+    def first_logits(eng):
+        logits, _ = eng._decode(eng.params, jnp.array(tok),
+                                jnp.array(eng.pos), eng.caches)
+        return np.asarray(logits, np.float32)
+
+    np.testing.assert_allclose(first_logits(fast), first_logits(slow),
+                               rtol=0.1, atol=0.1)
+
+
+# ------------------------------------------------------- plan artifacts
+
+def test_plan_carries_act_scales(int8_setup, scales, tmp_path):
+    """A plan ships its calibration: saved scales round-trip through
+    JSON and an engine resolving the plan with act_calibration='auto'
+    consumes them instead of re-calibrating."""
+    from repro.autotune.plan import (PlanRule, PrecisionPlan,
+                                     load_act_scales)
+    from repro.models import registry
+    from repro.models.registry import projection_groups
+
+    cfg, api, params = int8_setup
+    groups = {g.name: g for g in projection_groups(cfg)}
+    plan = PrecisionPlan(
+        name="cal", arch=ARCH,
+        rules=(PlanRule("attn_qkv", groups["attn_qkv"].pattern, "int8"),
+               PlanRule("ffn_in", groups["ffn_in"].pattern, "int8")),
+        default_mode="bf16", act_scales=dict(scales))
+    path = str(tmp_path / "cal_plan.json")
+    plan.save(path)
+    assert load_act_scales(path) == pytest.approx(scales)
+
+    from repro.serving.engine import ServingEngine
+    pcfg = dataclasses.replace(cfg, precision_policy=f"plan:{path}")
+    papi = registry.build(pcfg)
+    eng = ServingEngine(pcfg, papi, params, batch_slots=2, cache_len=16,
+                        act_calibration="auto")
+    assert eng.act_scales == pytest.approx(scales)
+    assert eng.act_quant_trace_count() == 0
+
+
+def test_plan_without_scales_falls_back_to_calibration(int8_setup,
+                                                       tmp_path):
+    from repro.autotune.plan import PlanRule, PrecisionPlan
+    from repro.models import registry
+    from repro.models.registry import projection_groups
+
+    cfg, _, params = int8_setup
+    groups = {g.name: g for g in projection_groups(cfg)}
+    plan = PrecisionPlan(
+        name="nocal", arch=ARCH,
+        rules=(PlanRule("attn_qkv", groups["attn_qkv"].pattern, "int8"),),
+        default_mode="bf16")
+    path = str(tmp_path / "nocal_plan.json")
+    plan.save(path)
+    from repro.serving.engine import ServingEngine
+    pcfg = dataclasses.replace(cfg, precision_policy=f"plan:{path}")
+    papi = registry.build(pcfg)
+    eng = ServingEngine(pcfg, papi, params, batch_slots=2, cache_len=16,
+                        act_calibration="auto")
+    assert eng.act_scales          # ran its own calibration pass
+    assert eng.act_quant_trace_count() == 0

@@ -212,6 +212,157 @@ class TestBatchedPrefill:
         assert eng.counters["teacher_forced_tokens"] == 2
 
 
+class TestBlockedDecode:
+    """The decode fast path (jitted scan + on-device argmax, one host
+    sync per block) must be a pure dispatch optimization: per-request
+    token streams are identical to per-token decode at every block
+    size, because batch rows are independent and masked (budget-
+    exhausted) slots feed exactly what the per-token engine feeds freed
+    slots (pad token at position 0)."""
+
+    LENGTHS = [5, 7, 3, 9, 4, 6]
+    BUDGETS = [6, 3, 8, 2, 5, 4]      # mixed: slots mask mid-block
+
+    def _tokens(self, lm_setup, cfg=None, **kw):
+        if cfg is None:
+            cfg = dataclasses.replace(lm_setup[0],
+                                      precision_policy="bf16")
+        from repro.models import registry
+        api = registry.build(cfg)
+        eng = ServingEngine(cfg, api, lm_setup[2], batch_slots=3,
+                            cache_len=64, **kw)
+        reqs = _requests(cfg, self.LENGTHS, self.BUDGETS)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        return {r.rid: list(r.tokens) for r in reqs}, eng
+
+    def test_blocked_equals_per_token_all_block_sizes(self, lm_setup):
+        base, _ = self._tokens(lm_setup)
+        for blk in (1, 2, 3, 8):
+            toks, eng = self._tokens(lm_setup, decode_block=blk)
+            assert toks == base, f"decode_block={blk} diverged"
+            for rid, budget in enumerate(self.BUDGETS):
+                assert len(toks[rid]) == self.LENGTHS[rid] + budget
+
+    def test_block_one_is_per_token_engine(self, lm_setup):
+        """decode_block=1 must reproduce today's behavior exactly —
+        same tokens AND same counters (one host sync per decode)."""
+        base, eng0 = self._tokens(lm_setup)
+        toks, eng1 = self._tokens(lm_setup, decode_block=1)
+        assert toks == base
+        assert eng1.counters == eng0.counters
+        assert eng1.counters["host_syncs"] == eng1.counters["decode_steps"]
+
+    def test_blocked_counter_contract(self, lm_setup):
+        """A tick dispatches at most one block; a block syncs once."""
+        blk = 4
+        _, per_tok = self._tokens(lm_setup)
+        _, fast = self._tokens(lm_setup, decode_block=blk)
+        c, c1 = fast.counters, per_tok.counters
+        assert c["decode_steps"] <= c["ticks"] * blk, c
+        assert c["host_syncs"] * blk >= c["decode_steps"], c
+        assert c["host_syncs"] < c1["host_syncs"], (c, c1)
+        assert fast.metrics()["decode_block"] == blk
+
+    def test_blocked_quantized_policy_matches(self, lm_setup):
+        """int8 with calibrated static activation scales: the blocked
+        trajectory still matches per-token exactly."""
+        cfg = lm_setup[0]          # int8_serving
+        from repro.quant.calibrate import calibrate_act_scales
+        scales = calibrate_act_scales(cfg, lm_setup[1], lm_setup[2])
+        base, _ = self._tokens(lm_setup, cfg=cfg,
+                               act_calibration=scales)
+        toks, eng = self._tokens(lm_setup, cfg=cfg,
+                                 act_calibration=scales, decode_block=8)
+        assert toks == base
+        assert eng.act_quant_trace_count() == 0
+        assert eng.weight_quant_trace_count() == 0
+
+    def test_blocked_allows_moe_experts_uncovered(self):
+        """MoE expert stacks quantize weights only (activations ride
+        the bf16 einsums), so they cannot couple batch rows — and no
+        mp_linear call exists for calibration to cover them. The
+        dynamic-fake-quant guard must exempt them or MoE models could
+        never use the fast path under int policies."""
+        import jax
+
+        from repro.models import registry
+        from repro.quant.calibrate import calibrate_act_scales
+        cfg = dataclasses.replace(reduced("mixtral-8x7b"),
+                                  precision_policy="int8_serving")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        scales = calibrate_act_scales(cfg, api, params)
+        assert "block/moe/experts" not in scales
+        eng = ServingEngine(cfg, api, params, batch_slots=2,
+                            cache_len=32, decode_block=4,
+                            act_calibration=scales)
+        assert eng.act_quant_trace_count() == 0
+        assert eng.weight_quant_trace_count() == 0
+
+    def test_blocked_rejects_dynamic_fake_quant(self, lm_setup):
+        """Dynamic fake-quant activations share ONE per-tensor absmax
+        across batch rows, so a blocked engine's pad cadence would leak
+        into other slots' tokens (measured: uncalibrated int8 diverges
+        at block 4 under queue pressure) — rejected at construction."""
+        cfg, api, params = lm_setup          # int8_serving, uncalibrated
+        with pytest.raises(ValueError, match="per-slot-independent"):
+            ServingEngine(cfg, api, params, batch_slots=2, cache_len=32,
+                          decode_block=4)
+        # calibrated scales decouple the rows: construction succeeds
+        from repro.quant.calibrate import calibrate_act_scales
+        ServingEngine(cfg, api, params, batch_slots=2, cache_len=32,
+                      decode_block=4,
+                      act_calibration=calibrate_act_scales(cfg, api,
+                                                           params))
+
+    def test_blocked_requires_greedy(self, lm_setup):
+        cfg, api, params = lm_setup
+        with pytest.raises(ValueError, match="greedy"):
+            ServingEngine(cfg, api, params, batch_slots=2, cache_len=32,
+                          greedy=False, decode_block=4)
+
+    def test_blocked_equals_per_token_vlm(self):
+        """The other eligible family: vlm's position-tagged caches make
+        masked pad writes causally invisible too."""
+        import jax
+
+        from repro.models import registry
+        cfg = dataclasses.replace(reduced("internvl2-1b"),
+                                  precision_policy="bf16")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+
+        def run(blk):
+            eng = ServingEngine(cfg, api, params, batch_slots=2,
+                                cache_len=32, decode_block=blk)
+            reqs = _requests(cfg, [5, 7, 3, 4], [4, 2, 5, 3])
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_drained()
+            return {r.rid: list(r.tokens) for r in reqs}
+
+        assert run(1) == run(4)
+
+    def test_blocked_rejected_for_recurrent_families(self):
+        """Recurrent state folds every masked pad step in, so the
+        block-vs-tick pad cadence diverges the token streams (measured
+        on rwkv/griffin with mixed budgets) — blocked decode must fail
+        fast for them rather than silently drift."""
+        import jax
+
+        from repro.models import registry
+        cfg = reduced("rwkv6-1.6b")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="not eligible"):
+            ServingEngine(cfg, api, params, batch_slots=2, cache_len=16,
+                          decode_block=4)
+        with pytest.raises(ValueError, match="not eligible"):
+            registry.make_block_decode(api, 4)
+
+
 class TestRoutingReport:
     def test_plan_policy_routing_roundtrip(self, lm_setup, tmp_path):
         """Plan → policy → observed decode routing stays consistent
