@@ -23,7 +23,19 @@ Robustness: every engine of every policy is built and warmed up front,
 and the best-of-3 timed passes are INTERLEAVED across policies — each
 engine's samples span the whole bench wall-clock rather than one short
 per-policy window, so a machine-load swing cannot silently invert the
-cross-policy ratios. Emits two artifacts:
+cross-policy ratios.
+
+The BURSTY section measures what continuous batching buys under load:
+an open-loop wall-clock arrival trace (requests keep arriving on their
+own schedule whether or not the engine kept up) through two engines at
+the same ``decode_block`` — the continuous engine (mid-block admission
++ EOS stopping) against the flags-off PR-5-style baseline. Requests
+carry harvested per-request stop ids (from a greedy pre-run) so EOS
+events are guaranteed; the baseline cannot honour them and burns the
+full budget. Reported: TTFT p50/p95, SLO attainment (deadline = the
+baseline's own p50 TTFT) and goodput (``metrics.slo_report``).
+
+Emits two artifacts:
 
 * ``serve_bench.json`` — full per-policy detail (back-compat name);
 * ``BENCH_serving.json`` — the compact trajectory row ``benchmarks/run.py``
@@ -34,10 +46,12 @@ import time
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit, row
 from repro.configs import reduced
-from repro.serving import Request, Router, ServingEngine, build_replicas
+from repro.serving import (EngineConfig, Request, Router, SamplingParams,
+                           ServingEngine, build_replicas, slo_report)
 from repro.models import registry
 
 POLICIES = ("bf16", "int8_serving", "int4_serving", "paper_hybrid")
@@ -114,15 +128,16 @@ def _build_policy(policy: str):
     engines = {}
     calibration, block_params = "auto", params
     for blk in BLOCKS:
-        eng = ServingEngine(cfg, api, block_params, batch_slots=4,
-                            cache_len=128, prepare_weights=True,
-                            act_calibration=calibration, decode_block=blk)
+        eng = ServingEngine(cfg, api, block_params, config=EngineConfig(
+            batch_slots=4, cache_len=128, prepare_weights=True,
+            act_calibration=calibration, decode_block=blk))
         calibration = eng.act_scales
         block_params = eng.params
         engines[blk] = eng
-    engines["dynamic"] = ServingEngine(cfg, api, params, batch_slots=4,
-                                       cache_len=128,
-                                       prepare_weights=False)
+    engines["dynamic"] = ServingEngine(cfg, api, params,
+                                       config=EngineConfig(
+                                           batch_slots=4, cache_len=128,
+                                           prepare_weights=False))
     for eng in engines.values():
         _warmup(eng)
     return cfg, engines
@@ -171,7 +186,8 @@ def _bench_router():
     split on a mixed (third accuracy-tagged) workload."""
     cfg = reduced("qwen2-0.5b")
     replicas = build_replicas(cfg, ("int8_serving", "bf16"),
-                              batch_slots=2, cache_len=128)
+                              config=EngineConfig(batch_slots=2,
+                                                  cache_len=128))
     router = Router(replicas, strategy="plan_aware")
     for rep in replicas:
         _warmup(rep.engine)
@@ -186,6 +202,136 @@ def _bench_router():
         "counters": router.routing_counters(),
         "completed": len(router.completed),
     }
+
+
+# bursty open-loop section: request count, decode block, and where in
+# the greedy stream the harvested stop token sits (~1/5 of the budget,
+# so EOS stopping frees ~80% of a stopped request's decode work)
+BURSTY_N = 10
+BURSTY_BLOCK = 8
+BURSTY_STOP_AT = 6
+
+
+def _precompile_blocks(eng):
+    """Compile every (block length, greedy) program the continuous
+    engine can dispatch (mid-block cuts produce 1..decode_block), so no
+    compile lands inside the timed open-loop window. The carry is
+    all-inactive: the dispatch only pad-writes positions later real
+    writes overwrite."""
+    from repro.serving.config import MAX_STOP_IDS
+    zeros = jnp.zeros((eng.b,), jnp.int32)
+    carry = registry.DecodeCarry(
+        tok=zeros, pos=zeros, rem=zeros, taken=zeros,
+        stops=jnp.full((eng.b, MAX_STOP_IDS), -1, jnp.int32),
+        temp=jnp.zeros((eng.b,), jnp.float32), top_k=zeros,
+        top_p=jnp.ones((eng.b,), jnp.float32),
+        keys=jnp.zeros((eng.b, 2), jnp.uint32))
+    for n in range(1, eng.decode_block + 1):
+        tokens, _, eng.caches = eng._block_decode(n, False)(
+            eng.params, carry, eng.caches)
+    np.asarray(tokens)
+
+
+def _bursty_requests(cfg, stops):
+    rng = np.random.default_rng(2)
+    return [Request(rid=rid,
+                    prompt=rng.integers(0, cfg.vocab, PROMPT_LEN,
+                                        dtype=np.int32),
+                    max_new_tokens=MAX_NEW,
+                    sampling=SamplingParams(stop_ids=stops.get(rid, ())))
+            for rid in range(BURSTY_N)]
+
+
+def _drive_open_loop(engine, reqs, arrivals):
+    """Open-loop: each request submits at its wall-clock arrival time
+    regardless of engine progress (the load model closed-loop draining
+    can't produce — a slow engine faces a growing queue)."""
+    _reset(engine)
+    pending = sorted(zip(arrivals, reqs), key=lambda ar: ar[0])
+    t0 = time.time()
+    while pending or engine.has_pending():
+        now = time.time() - t0
+        while pending and pending[0][0] <= now:
+            engine.submit(pending.pop(0)[1])
+        if engine.has_pending():
+            engine.step()
+        else:
+            time.sleep(1e-4)
+    return time.time() - t0
+
+
+def _bench_bursty():
+    """Continuous engine vs flags-off baseline on the same open-loop
+    arrival trace, equal decode_block; returns the BENCH_serving
+    'bursty' block."""
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy="int8_serving")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cont_cfg = EngineConfig(batch_slots=2, cache_len=128,
+                            decode_block=BURSTY_BLOCK,
+                            act_calibration="auto")
+    cont = ServingEngine(cfg, api, params, config=cont_cfg)
+    base_cfg = dataclasses.replace(cont_cfg,
+                                   act_calibration=cont.act_scales,
+                                   mid_block_admission=False,
+                                   eos_stopping=False)
+    base = ServingEngine(cfg, api, cont.params, config=base_cfg)
+    for eng in (cont, base):
+        _warmup(eng)
+        _precompile_blocks(eng)
+
+    # greedy pre-run harvests a per-request stop id (for 2/3 of the
+    # requests) so the continuous engine is guaranteed EOS events; the
+    # baseline receives the SAME requests but cannot honour the stops
+    harvest = _bursty_requests(cfg, {})
+    for r in harvest:
+        base.submit(r)
+    base.run_until_drained()
+    stops = {r.rid: (int(r.tokens[len(r.prompt) + BURSTY_STOP_AT]),)
+             for r in harvest if r.rid % 3 != 0}
+
+    # arrival spacing from the baseline's own measured tick time: one
+    # request per ~1.2 ticks after an initial 4-request burst, so the
+    # queue stays non-empty while slots are busy
+    _reset(base)
+    for r in _bursty_requests(cfg, {}):
+        base.submit(r)
+    t0 = time.time()
+    ticks = base.run_until_drained()
+    per_tick = (time.time() - t0) / max(ticks, 1)
+    arrivals = [0.0 if i < 4 else (i - 3) * 1.2 * per_tick
+                for i in range(BURSTY_N)]
+
+    out = {"arrival_spacing_ms": per_tick * 1.2e3,
+           "decode_block": BURSTY_BLOCK}
+    slo = None
+    for name, eng in (("baseline", base), ("continuous", cont)):
+        reqs = _bursty_requests(cfg, stops)
+        dt = _drive_open_loop(eng, reqs, arrivals)
+        m = eng.metrics()
+        if slo is None:                 # deadline = baseline p50 TTFT
+            slo = m["ttft_s"]["p50"]
+        rep = slo_report(eng.completed.values(), slo)
+        out[name] = {
+            "seconds": dt,
+            "new_tokens": m["new_tokens"],
+            "ttft_p50_ms": m["ttft_s"]["p50"] * 1e3,
+            "ttft_p95_ms": m["ttft_s"]["p95"] * 1e3,
+            "slo_attainment": rep["attainment"],
+            "goodput_tok_per_s": rep["goodput_tok_per_s"],
+            "counters": {k: m["counters"][k] for k in
+                         ("short_blocks", "mid_block_admits",
+                          "eos_stops", "decode_steps", "host_syncs")},
+        }
+    out["ttft_slo_ms"] = slo * 1e3
+    out["ttft_p95_speedup"] = (out["baseline"]["ttft_p95_ms"]
+                               / max(out["continuous"]["ttft_p95_ms"],
+                                     1e-9))
+    out["goodput_speedup"] = (out["continuous"]["goodput_tok_per_s"]
+                              / max(out["baseline"]["goodput_tok_per_s"],
+                                    1e-9))
+    return out
 
 
 def run(verbose: bool = True, repeats: int = 3):
@@ -224,7 +370,19 @@ def run(verbose: bool = True, repeats: int = 3):
             router_r["seconds"] * 1e6 / max(MAX_NEW * N_REQUESTS, 1),
             f"{router_r['tok_per_s']:.1f} tok/s, "
             f"counters={router_r['counters']}")
-    emit("serve_bench", {**results, "router": router_r})
+    bursty = _bench_bursty()
+    if verbose:
+        for name in ("baseline", "continuous"):
+            b = bursty[name]
+            row(f"serve/bursty-{name}",
+                b["seconds"] * 1e6 / max(b["new_tokens"], 1),
+                f"ttft_p95={b['ttft_p95_ms']:.0f}ms "
+                f"slo={b['slo_attainment']:.2f} "
+                f"goodput={b['goodput_tok_per_s']:.1f} tok/s "
+                f"(eos_stops={b['counters']['eos_stops']}, "
+                f"mid_block={b['counters']['mid_block_admits']})")
+    emit("serve_bench", {**results, "router": router_r,
+                         "bursty": bursty})
 
     base = results["bf16"]["tok_per_s"]
     summary = {
@@ -270,6 +428,17 @@ def run(verbose: bool = True, repeats: int = 3):
                           for p in POLICIES},
         "router": {"tok_per_s": router_r["tok_per_s"],
                    "counters": router_r["counters"]},
+        "bursty": {
+            "ttft_slo_ms": bursty["ttft_slo_ms"],
+            "ttft_p95_ms": {k: bursty[k]["ttft_p95_ms"]
+                            for k in ("baseline", "continuous")},
+            "slo_attainment": {k: bursty[k]["slo_attainment"]
+                               for k in ("baseline", "continuous")},
+            "goodput_tok_per_s": {k: bursty[k]["goodput_tok_per_s"]
+                                  for k in ("baseline", "continuous")},
+            "ttft_p95_speedup": bursty["ttft_p95_speedup"],
+            "goodput_speedup": bursty["goodput_speedup"],
+        },
     }
     emit("BENCH_serving", summary)
     if verbose:
@@ -284,6 +453,14 @@ def run(verbose: bool = True, repeats: int = 3):
             f"({summary['block_speedup_8v1'][p]:.2f}x b8/b1, "
             f"{summary['speedup_vs_bf16_best_block'][p]:.2f}x bf16)"
             for p in POLICIES))
+        sb = summary["bursty"]
+        print(f"serve bursty: continuous ttft_p95="
+              f"{sb['ttft_p95_ms']['continuous']:.0f}ms vs baseline "
+              f"{sb['ttft_p95_ms']['baseline']:.0f}ms "
+              f"({sb['ttft_p95_speedup']:.2f}x), slo attainment "
+              f"{sb['slo_attainment']['continuous']:.2f} vs "
+              f"{sb['slo_attainment']['baseline']:.2f}, goodput "
+              f"{sb['goodput_speedup']:.2f}x")
     return summary
 
 

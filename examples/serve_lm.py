@@ -5,8 +5,10 @@ under mixed-precision policies — the paper's technique as deployment
 configuration. Two modes:
 
 * single engine (``--policy`` / ``--plan``): continuous batching with
-  batched prefill admission under one precision policy, printing the
-  per-projection routing report for plans;
+  chunked prefill admission under one precision policy (engine tuning
+  via ``EngineConfig``, per-request decoding via ``SamplingParams`` —
+  try ``--temperature 0.8``), printing the per-projection routing
+  report for plans;
 * multi-replica router (``--replicas``): each replica carries its own
   policy or searched plan, and the plan-aware router splits a mixed
   workload (a third of the requests are accuracy-tagged) by the
@@ -25,17 +27,20 @@ import numpy as np
 import jax
 
 from repro.configs import reduced
-from repro.serving import Request, Router, ServingEngine, build_replicas
+from repro.serving import (EngineConfig, Request, Router, SamplingParams,
+                           ServingEngine, build_replicas)
 
 
-def _mixed_workload(cfg, n, max_new, tagged_every=3):
+def _mixed_workload(cfg, n, max_new, tagged_every=3, temperature=0.0):
     rng = np.random.default_rng(0)
+    sampling = SamplingParams(temperature=temperature)
     reqs = []
     for rid in range(n):
         prompt = rng.integers(0, cfg.vocab, int(rng.integers(4, 12)),
                               dtype=np.int32)
         reqs.append(Request(
             rid=rid, prompt=prompt, max_new_tokens=max_new,
+            sampling=sampling,
             tags=("accuracy",) if rid % tagged_every == 0 else ()))
     return reqs
 
@@ -44,15 +49,16 @@ def _pct(block, key="p50"):
     return f"{block.get(key, 0) * 1e3:.1f}ms" if block else "n/a"
 
 
-def _engine_kw(args):
-    return {"decode_block": args.decode_block,
-            "act_calibration": "auto" if args.calibrate else None}
+def _engine_config(args):
+    return EngineConfig(
+        batch_slots=args.slots, cache_len=128,
+        decode_block=args.decode_block,
+        act_calibration="auto" if args.calibrate else None)
 
 
 def run_router(args, cfg):
     policies = [p for p in args.replicas.split(",") if p]
-    replicas = build_replicas(cfg, policies, batch_slots=args.slots,
-                              cache_len=128, **_engine_kw(args))
+    replicas = build_replicas(cfg, policies, config=_engine_config(args))
     router = Router(replicas, strategy=args.strategy)
     for rep in replicas:
         storage = "prepared" if rep.engine.prepared else "dynamic"
@@ -64,7 +70,8 @@ def run_router(args, cfg):
               f"({storage})")
 
     t0 = time.time()
-    for req in _mixed_workload(cfg, args.requests, args.max_new):
+    for req in _mixed_workload(cfg, args.requests, args.max_new,
+                               temperature=args.temperature):
         router.submit(req)
     ticks = router.run_until_drained()
     dt = time.time() - t0
@@ -88,8 +95,7 @@ def run_single(args, cfg):
     from repro.models import registry
     api = registry.build(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, api, params, batch_slots=args.slots,
-                           cache_len=128, **_engine_kw(args))
+    engine = ServingEngine(cfg, api, params, config=_engine_config(args))
     if args.plan:
         from repro.autotune.plan import load_plan
         plan = load_plan(args.plan)
@@ -99,7 +105,8 @@ def run_single(args, cfg):
             print(f"  route {path}: {mode}")
 
     t0 = time.time()
-    for req in _mixed_workload(cfg, args.requests, args.max_new):
+    for req in _mixed_workload(cfg, args.requests, args.max_new,
+                               temperature=args.temperature):
         engine.submit(req)
     ticks = engine.run_until_drained()
     dt = time.time() - t0
@@ -157,6 +164,10 @@ def main():
     ap.add_argument("--calibrate", action="store_true",
                     help="calibrate static activation scales at engine "
                          "construction (drops the per-token absmax)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature "
+                         "(SamplingParams; 0 = greedy, seeded on-device "
+                         "sampling otherwise)")
     args = ap.parse_args()
 
     cfg = reduced("qwen2-0.5b")

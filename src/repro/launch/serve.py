@@ -5,7 +5,10 @@ continuous-batching ``ServingEngine`` moved to ``repro.serving.engine``
 when serving grew into a subsystem (scheduler, multi-replica router,
 metrics). This module re-exports the public names so existing imports
 (``from repro.launch.serve import Request, ServingEngine``) keep
-working.
+working; the configuration surfaces (``EngineConfig`` /
+``SamplingParams``) re-export from ``repro.serving.config``.
 """
+from repro.serving.config import (EngineConfig,             # noqa: F401
+                                  SamplingParams)
 from repro.serving.engine import (Request, ServingEngine,   # noqa: F401
                                   make_serve_fns)

@@ -257,6 +257,40 @@ def prefill(params, cfg: AttnConfig, x, positions, cache: KVCache,
         new_cache
 
 
+def prefill_chunk(params, cfg: AttnConfig, x, positions, valid,
+                  cache: KVCache, policy, path):
+    """Prefill CONTINUATION: write one chunk of a prompt at arbitrary
+    absolute positions into a LIVE cache, attending the chunk's queries
+    against the whole updated cache (earlier chunks included) by
+    position tags — the serving-engine path that streams a long prompt
+    through multiple admission waves.
+
+    x: (B, S, d); positions: (B, S) absolute positions; valid: (B, S)
+    bool — invalid entries (padding rows/tails of the packed wave)
+    write nothing and their outputs are garbage the caller discards.
+    Requires S <= capacity (distinct ring slots within a chunk row).
+    Same write-then-attend order as ``decode_step``: a query at
+    position p sees every tag <= p already written, including its own
+    chunk's earlier tokens, so chunking is invariant to chunk size.
+    Scatter-indexed, unlike ``prefill``'s static rotation — this is the
+    few-slot engine path, not the sharded 32k prefill."""
+    q, k, v = _project_qkv(params, cfg, x, positions, policy, path)
+    cap = cache.k.shape[1]
+    slot = positions % cap                          # (B, S)
+    bidx = jnp.arange(x.shape[0], dtype=jnp.int32)[:, None]
+    vk = valid[..., None, None]
+    ck = cache.k.astype(k.dtype)
+    cv = cache.v.astype(v.dtype)
+    ck = ck.at[bidx, slot].set(jnp.where(vk, k, ck[bidx, slot]))
+    cv = cv.at[bidx, slot].set(jnp.where(vk, v, cv[bidx, slot]))
+    cpos = cache.pos.at[bidx, slot].set(
+        jnp.where(valid, positions, cache.pos[bidx, slot]))
+    new_cache = KVCache(ck, cv, cpos)
+    out = _attend(cfg, q, ck, cv, positions, cpos, cpos >= 0)
+    return mp_linear(params["wo"], out, policy.spec_for(f"{path}/wo"), path=f"{path}/wo"), \
+        new_cache
+
+
 def decode_step(params, cfg: AttnConfig, x, pos, cache: KVCache,
                 policy, path):
     """One-token decode. x: (B, 1, d); pos: (B,) absolute positions.

@@ -126,7 +126,8 @@ def _head(params, cfg: ModelConfig, x):
 
 
 def _apply_block(params, cfg: ModelConfig, kind: str, x, positions,
-                 policy, mode: str, cache: Optional[KVCache], pos):
+                 policy, mode: str, cache: Optional[KVCache], pos,
+                 valid=None):
     path = f"block/{kind}/attn"
     acfg = attn_cfg(cfg, kind)
     h = apply_norm(cfg.norm, x, params["ln1"])
@@ -137,6 +138,10 @@ def _apply_block(params, cfg: ModelConfig, kind: str, x, positions,
     elif mode == "prefill":
         a, new_cache = attention.prefill(params["attn"], acfg, h,
                                          positions, cache, policy, path)
+    elif mode == "chunk":
+        a, new_cache = attention.prefill_chunk(params["attn"], acfg, h,
+                                               positions, valid, cache,
+                                               policy, path)
     else:
         a, new_cache = attention.decode_step(params["attn"], acfg, h, pos,
                                              cache, policy, path)
@@ -165,7 +170,7 @@ def _remat_wrap(fn, cfg: ModelConfig):
 
 
 def _run_blocks(params, cfg: ModelConfig, x, positions, mode: str,
-                caches=None, pos=None):
+                caches=None, pos=None, valid=None):
     policy = get_policy(cfg.precision_policy)
     kinds = group_kinds(cfg)
 
@@ -177,7 +182,7 @@ def _run_blocks(params, cfg: ModelConfig, x, positions, mode: str,
         for i, kind in enumerate(kinds):
             c_i = gc[f"b{i}"] if gc is not None else None
             h, nc, a = _apply_block(gp[f"b{i}"], cfg, kind, h, positions,
-                                    policy, mode, c_i, pos)
+                                    policy, mode, c_i, pos, valid=valid)
             new_gc[f"b{i}"] = nc
             aux = aux + a
         return (h, aux), new_gc
@@ -251,6 +256,24 @@ def prefill(params, cfg: ModelConfig, tokens, caches):
                                    caches=caches)
     x = apply_norm(cfg.norm, x[:, -1:], params["final_norm"])
     return _head(params, cfg, x)[:, 0], new_caches
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, offsets, lengths,
+                  caches):
+    """Position-offset prefill continuation for the continuous engine.
+
+    tokens: (B, S) one chunk of each row's prompt; offsets: (B,)
+    absolute position of ``tokens[:, 0]``; lengths: (B,) valid tokens
+    per row (0 = row untouched). Writes the chunk's K/V into the LIVE
+    ``caches`` and returns them — no logits: the engine feeds the last
+    prompt token through ``decode_step``, which computes the head."""
+    b, s = tokens.shape
+    positions = offsets[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None]
+    x = _embed(params, cfg, jnp.where(valid, tokens, 0))
+    _, _, new_caches = _run_blocks(params, cfg, x, positions, "chunk",
+                                   caches=caches, valid=valid)
+    return new_caches
 
 
 def decode_step(params, cfg: ModelConfig, token, pos, caches):

@@ -253,20 +253,55 @@ def block_decode_eligible(cfg: ModelConfig) -> bool:
     return cfg.family in _BLOCK_DECODE_FAMILIES
 
 
-def make_block_decode(api: "ModelAPI", n: int, policy=None) -> Callable:
-    """Generic multi-token decode block: a ``lax.scan`` of ``n``
-    ``api.decode_step`` calls with on-device greedy token selection.
+class DecodeCarry(NamedTuple):
+    """Per-slot scan state of the blocked decode program.
 
-    Returns ``fn(params, tok, pos, remaining, state) -> (tokens, tok,
-    pos, remaining, state)`` where ``tok``/``pos``/``remaining`` are
-    (B,) int32 (current input token, absolute position, tokens left in
-    each slot's budget) and ``tokens`` is the (n, B) int32 greedy
-    trajectory. Slots with an exhausted budget are masked: they feed the
-    pad token at position 0 — exactly what the per-token engine feeds
-    freed slots — and stop advancing, so a host driving blocks of n is
+    All arrays are batch-leading (B = engine slots). ``rem`` is the
+    remaining token budget (0 = inactive/freed slot); ``taken`` counts
+    the steps a slot actually took inside the current block (the host
+    resets it to 0 per dispatch and replays ``tokens[:taken]`` — with
+    EOS stopping, ``rem`` alone no longer determines the active
+    prefix). ``stops`` holds each slot's stop ids (-1 = unused slot,
+    never matches a real token); ``temp``/``top_k``/``top_p`` are the
+    per-slot sampling parameters and ``keys`` the (B, 2) uint32 PRNG
+    keys the sampler threads through the scan."""
+
+    tok: Any     # (B,)  int32 current input token
+    pos: Any     # (B,)  int32 absolute position
+    rem: Any     # (B,)  int32 remaining budget, 0 = inactive
+    taken: Any   # (B,)  int32 steps taken this block
+    stops: Any   # (B, K) int32 stop ids, -1 = unused
+    temp: Any    # (B,)  f32 temperature, <= 0 = greedy
+    top_k: Any   # (B,)  int32, 0 = unrestricted
+    top_p: Any   # (B,)  f32
+    keys: Any    # (B, 2) uint32 PRNG keys
+
+
+def make_block_decode(api: "ModelAPI", n: int, policy=None,
+                      sample: bool = False) -> Callable:
+    """Generic multi-token decode block: a ``lax.scan`` of ``n``
+    ``api.decode_step`` calls with on-device token selection.
+
+    Returns ``fn(params, carry, state) -> (tokens, carry, state)`` with
+    ``carry`` a :class:`DecodeCarry` and ``tokens`` the (n, B) int32
+    trajectory (rows past a slot's ``taken`` are garbage the host
+    ignores). Slots with an exhausted budget are masked: they feed the
+    pad token at their current position — exactly what the per-token
+    engine feeds idle slots — and stop advancing, so a host driving
+    blocks of n is
     token-for-token identical to one dispatching single steps, while
-    syncing once per block instead of once per token. Callers jit the
-    result (one compile per distinct ``n``).
+    syncing once per block instead of once per token. A selected token
+    matching one of the slot's ``stops`` zeroes ``rem`` on device (EOS
+    stopping): the slot keeps its stop token, goes inactive for the
+    rest of the block, and the host frees it at the next sync. Callers
+    jit the result (one compile per distinct ``(n, sample)``).
+
+    ``sample=False`` selects greedy argmax for every slot;
+    ``sample=True`` compiles ``models.sampling.sample_tokens`` into the
+    scan — greedy rows (``temp <= 0``) still take the bit-identical
+    argmax, so one program serves mixed batches, and every active row
+    consumes exactly one key split per step (sampled streams are
+    invariant to ``decode_block``).
 
     Weight operands are STAGED once per block
     (``quant.prepare.stage_params``): fake-quant int projections
@@ -288,24 +323,42 @@ def make_block_decode(api: "ModelAPI", n: int, policy=None) -> Callable:
         from repro.core.policy import get_policy
         policy = get_policy(api.cfg.precision_policy)
 
-    def run(params, tok, pos, remaining, state):
+    def run(params, carry, state):
+        from repro.models.sampling import sample_tokens
         from repro.quant.prepare import stage_params
         params = stage_params(params, policy, projection_paths(api.cfg))
-        def body(carry, _):
-            tok, pos, rem, st = carry
+        c = carry
+
+        def body(inner, _):
+            tok, pos, rem, taken, keys, st = inner
             active = rem > 0
+            # inactive rows keep their REAL position: the pad write must
+            # land on the slot's current frontier (where the next real
+            # write — decode or prefill chunk — overwrites it before any
+            # query attends), never on position 0, which may hold live
+            # prompt context for a slot still mid-prefill
             batch = {"token": jnp.where(active, tok, 0)[:, None],
-                     "pos": jnp.where(active, pos, 0)}
+                     "pos": pos}
             logits, st = api.decode_step(params, batch, st)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if sample:
+                keys2, nxt = sample_tokens(keys, logits, c.temp,
+                                           c.top_k, c.top_p)
+                keys = jnp.where(active[:, None], keys2, keys)
+            else:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            hit = (nxt[:, None] == c.stops).any(axis=-1) & active
             tok = jnp.where(active, nxt, tok)
             pos = jnp.where(active, pos + 1, pos)
-            rem = jnp.where(active, rem - 1, rem)
-            return (tok, pos, rem, st), nxt
+            rem = jnp.where(active, jnp.where(hit, 0, rem - 1), rem)
+            taken = taken + active.astype(jnp.int32)
+            return (tok, pos, rem, taken, keys, st), nxt
 
-        (tok, pos, remaining, state), tokens = jax.lax.scan(
-            body, (tok, pos, remaining, state), None, length=n)
-        return tokens, tok, pos, remaining, state
+        (tok, pos, rem, taken, keys, state), tokens = jax.lax.scan(
+            body, (c.tok, c.pos, c.rem, c.taken, c.keys, state), None,
+            length=n)
+        out = c._replace(tok=tok, pos=pos, rem=rem, taken=taken,
+                         keys=keys)
+        return tokens, out, state
 
     return run
 
@@ -320,6 +373,11 @@ class ModelAPI(NamedTuple):
     # prepare(params, policy) -> params with each projection weight in
     # its deployment storage format (see quant/prepare.py)
     prepare: Callable = None
+    # prefill_chunk(params, batch, caches) -> caches: position-offset
+    # prefill continuation for the continuous engine (batch carries
+    # 'tokens' (B, S), 'offsets' (B,), 'lengths' (B,)); None for
+    # families whose prefill is not a pure token-cache fill
+    prefill_chunk: Callable = None
 
 
 def build(cfg: ModelConfig) -> ModelAPI:
@@ -334,6 +392,9 @@ def build(cfg: ModelConfig) -> ModelAPI:
                 p, cfg, batch["token"], batch["pos"], caches),
             lambda bsz, max_len: lm.init_cache(cfg, bsz, max_len),
             _prepare_fn(cfg),
+            lambda p, batch, caches: lm.prefill_chunk(
+                p, cfg, batch["tokens"], batch["offsets"],
+                batch["lengths"], caches),
         )
     if cfg.family == "rwkv":
         return ModelAPI(

@@ -2,16 +2,33 @@
 
 The runtime layer that turns the paper's payoff — mixed-precision
 datapaths trading accuracy for TOPS/W — into a deployment: requests are
-admitted through a batched prefill path (``engine``), scheduled with
-priorities and starvation protection (``scheduler``), and routed across
-replicas that each carry their own precision policy or searched
-``PrecisionPlan`` (``router``), with per-request latency metrics
-(``metrics``). ``repro.launch.serve`` remains a thin compat shim.
+admitted through a chunked-prefill continuous-batching loop
+(``engine``), scheduled with priorities and starvation protection
+(``scheduler``), and routed across replicas that each carry their own
+precision policy or searched ``PrecisionPlan`` (``router``), with
+per-request latency + SLO metrics (``metrics``). ``repro.launch.serve``
+remains a thin compat shim.
+
+Public configuration surfaces (``config``):
+
+* :class:`EngineConfig` — one frozen dataclass of engine-level tuning
+  (slots, cache length, prefill mode/chunk, decode block, prepared
+  weights, activation calibration, mid-block admission, EOS stopping,
+  engine eos_id/seed). ``ServingEngine(cfg, api, params,
+  config=EngineConfig(...))``; the old flat kwargs still work through
+  a deprecation shim.
+* :class:`SamplingParams` — per-request decoding behavior (temperature,
+  top_k, top_p, stop_ids, max_new_tokens, seed) carried on
+  ``Request.sampling``; the default is greedy, matching the old
+  engine-level ``greedy=True``.
 """
+from repro.serving.config import (EngineConfig,             # noqa: F401
+                                  SamplingParams)
 from repro.serving.engine import (Request, ServingEngine,   # noqa: F401
                                   make_serve_fns)
 from repro.serving.metrics import (percentiles,             # noqa: F401
-                                   request_metrics, summarize_requests)
+                                   request_metrics, slo_report,
+                                   summarize_requests)
 from repro.serving.router import (Replica, Router,          # noqa: F401
                                   build_replicas, replica_cost)
 from repro.serving.scheduler import (AdmissionScheduler,    # noqa: F401

@@ -1,63 +1,64 @@
-"""Continuous-batching serving engine with a batched prefill path.
+"""Continuous-batching serving engine (vLLM-shaped).
 
 ``make_serve_fns`` builds the sharded prefill/decode artifacts the
 dry-run lowers for the prefill_32k / decode_32k / long_500k cells.
 ``ServingEngine`` is the single-replica runtime: fixed decode slots over
 one shared KV cache, an :class:`repro.serving.scheduler.AdmissionScheduler`
-in front, and admission through the model's real ``prefill`` program —
-a prompt of length S costs one jitted prefill over a chunk-rounded
-bucket (O(S/chunk) prefill work), not S ``decode_step`` calls.
+in front, and a steady-state loop in which prefill and decode
+interleave. Engine tuning lives in one frozen
+:class:`repro.serving.config.EngineConfig` (``ServingEngine(cfg, api,
+params, config=EngineConfig(...))``; the legacy kwargs still map
+through a deprecation shim), and per-request decoding behavior lives in
+:class:`repro.serving.config.SamplingParams` on each ``Request``.
 
-Why bucket-padded prefill is safe here: the KV cache is position-tagged
-(``layers.attention.KVCache.pos``) and attention masks by tag, so the
-junk K/V a padded prefill writes past the prompt carries tags the causal
-mask rejects until the decode loop overwrites them in place. That
+The continuous loop, per tick:
+
+* **admission** drains the scheduler into free slots;
+* **chunked prefill continuation** advances every prefilling slot by
+  one ``prefill_chunk``-token wave in a SINGLE fixed-shape jitted
+  dispatch (``api.prefill_chunk``: position-offset scatter into the
+  live cache — one compile ever, no per-bucket programs). Long prompts
+  stream through multiple waves while other slots keep decoding, so
+  admission no longer requires ``prompt + generation <= cache_len``:
+  oversized requests serve with trailing-window (ring) context and are
+  stamped ``Request.truncated``;
+* **decode** runs one block: ``decode_block`` scan steps with on-device
+  selection (``models.registry.make_block_decode``), ONE host sync.
+  With ``mid_block_admission`` the engine cuts the block short while
+  requests are queued (boundaries chosen by queue depth), so freed
+  slots admit mid-stream instead of after a full drain. With
+  ``eos_stopping`` a generated stop id zeroes the slot's budget ON
+  DEVICE: short completions free their slot and budget mid-block.
+  Selection is per-request — greedy argmax by default, or
+  temperature/top-k/top-p sampling (``models.sampling.sample_tokens``)
+  with the PRNG key threaded through the scan carry, so sampled
+  streams are seeded-deterministic and invariant to ``decode_block``.
+
+Why position-offset prefill is safe here: the KV cache is
+position-tagged (``layers.attention.KVCache.pos``) and attention masks
+by tag, so chunk writes at absolute positions compose exactly like
+decode writes, and the garbage a masked pad row writes carries tags the
+next real write overwrites before any query attends them. That
 invariant holds for attention caches but *not* for recurrent state
 (rwkv/griffin fold every consumed token into O(1) state), so the fast
 path is gated per family and everything else falls back to the
 teacher-forced admission loop the engine always had.
 
 Weights are PREPARED at construction (``quant.prepare`` via the model
-family's ``api.prepare`` hook, default on): each replica stores its
-projections in the policy's deployment format — packed int4 nibbles,
-int8 + scales, fp16 casts — so decode never re-quantizes static weights
-per token and per-replica weight-resident bytes reflect the policy
-(``weight_bytes()`` / ``metrics()['weight_bytes']``). Preparation is
-output-equivalent to dynamic quantization (tests/test_prepare.py);
-``prepare_weights=False`` restores the dynamic path (benchmarked as the
-baseline in benchmarks/serve_bench.py).
-
-Activation scales can be CALIBRATED the same way (``act_calibration=``:
-a {path: scale} dict, or ``"auto"`` to take them from the serving
-plan's ``act_scales`` or run a short ``quant.calibrate`` pass at
-construction): int executors then quantize activations against stored
-static scales — zero per-token absmax reduces
-(``act_quant_trace_count()``), and prefill/decode fake-quant numerics
-become identical (a fixed rounding grid is elementwise), so batched and
-teacher-forced admission agree exactly as they do under bf16. An
-UNCALIBRATED int engine (the default) keeps the historical dynamic
-behavior: the per-tensor absmax spans the whole prompt in prefill but
-single tokens in decode, so its two admission paths agree only up to
-that scale granularity, and the shared absmax couples batch rows.
-
-Decode runs a FAST PATH when ``decode_block > 1``: a jitted
-``lax.scan`` of ``decode_block`` ``decode_step`` calls with on-device
-greedy selection (``models.registry.make_block_decode``), per-slot
-active masks and remaining-token budgets carried in the scan state. The
-host syncs generated tokens once per block instead of once per token
-(the ``host_syncs`` counter); admission still runs between blocks.
-``decode_block=1`` dispatches single steps exactly as before, and the
-blocked path is token-for-token identical to it per request
-(tests/test_serving.py::TestBlockedDecode) — which is also why it
-requires per-slot-independent decode: eligible families only
-(position-tagged caches), greedy selection, and no dynamically-scaled
-fake-quant projections (their batch-row coupling is rejected at
-construction; calibrate or use exact kernels).
+family's ``api.prepare`` hook, default on) and activation scales can be
+CALIBRATED (``act_calibration=``) — see quant/prepare.py and
+quant/calibrate.py; the trace counters
+(``weight_quant_trace_count`` / ``act_quant_trace_count``) assert the
+fast path performs zero dynamic weight quants and zero per-token
+activation absmax reduces. Dynamically-scaled fake-quant projections
+couple batch rows through their shared per-tensor absmax and are
+rejected for ``decode_block > 1`` at construction.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -69,9 +70,11 @@ from repro.configs.base import ModelConfig
 from repro.core import policy as policy_mod
 from repro.models import registry
 from repro.parallel import sharding as shd
+from repro.serving.config import (MAX_STOP_IDS, EngineConfig,
+                                  SamplingParams)
 
 # families whose prefill consumes only tokens and whose caches are
-# position-tagged (padding-safe): eligible for the batched prefill path
+# position-tagged (padding-safe): eligible for the chunked prefill path
 _FAST_PREFILL_FAMILIES = ("lm",)
 
 
@@ -111,44 +114,65 @@ class Request:
     tags: Tuple[str, ...] = ()   # e.g. ("accuracy",) for router SLOs
     tokens: Optional[List[int]] = None
     done: bool = False
-    error: Optional[str] = None        # set when rejected at admission
+    error: Optional[str] = None        # set on terminal admission errors
     next_input: Optional[int] = None   # next token to feed decode
     # timestamps stamped by scheduler/engine (engine clock domain)
     submit_time: Optional[float] = None
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # per-request decoding parameters (greedy by default)
+    sampling: SamplingParams = SamplingParams()
+    finish_reason: Optional[str] = None   # 'length' | 'stop'
+    truncated: bool = False        # served with trailing-window context
+    prefill_pos: int = 0           # prompt tokens consumed by prefill
 
     @property
     def new_tokens(self) -> int:
         return 0 if self.tokens is None else len(self.tokens) - len(self.prompt)
 
+    @property
+    def budget(self) -> int:
+        """Effective generation budget: ``sampling.max_new_tokens``
+        when set, else the request-level ``max_new_tokens``."""
+        if self.sampling.max_new_tokens is not None:
+            return self.sampling.max_new_tokens
+        return self.max_new_tokens
+
 
 class ServingEngine:
-    """Slot-based continuous batching with batched prefill admission.
+    """Slot-based continuous batching with chunked prefill admission.
 
     All slots share one decode program (fixed batch); free slots idle on
-    pad tokens. Admission drains the scheduler into free slots and runs
-    ONE jitted prefill over the whole wave: per-slot prompts are packed
-    into a (slots, L) token matrix (L rounded up to ``prefill_chunk`` to
-    bound recompiles), prefilled against a fresh cache, and the admitted
-    rows are merged into the live cache at their slot positions.
+    pad tokens. Admission drains the scheduler into free slots; every
+    tick one fixed-shape ``(slots, prefill_chunk)`` prefill wave
+    advances all prefilling slots at their own position offsets while
+    decode keeps running for the rest — no drain barrier between
+    admission and generation.
     """
 
     def __init__(self, cfg: ModelConfig, api: registry.ModelAPI, params,
-                 batch_slots: int = 4, cache_len: int = 512,
-                 greedy: bool = True, prefill_chunk: int = 32,
-                 prefill: str = "auto", scheduler=None,
-                 prepare_weights: bool = True,
-                 act_calibration=None, decode_block: int = 1,
-                 clock: Callable[[], float] = time.monotonic):
+                 config: Optional[EngineConfig] = None, *,
+                 scheduler=None,
+                 clock: Callable[[], float] = time.monotonic,
+                 **legacy_kwargs):
         from repro.serving.scheduler import AdmissionScheduler
+        if legacy_kwargs:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    f"kwargs, not both: {sorted(legacy_kwargs)}")
+            warnings.warn(
+                "ServingEngine(batch_slots=..., cache_len=..., ...) "
+                "kwargs are deprecated; pass config=EngineConfig(...) "
+                "(and per-request SamplingParams instead of 'greedy')",
+                DeprecationWarning, stacklevel=2)
+            config = EngineConfig.from_legacy_kwargs(legacy_kwargs)
+        self.config = config if config is not None else EngineConfig()
         self.cfg = cfg
         self.api = api
-        self.b = batch_slots
-        self.cache_len = cache_len
-        self.greedy = greedy
-        self.prefill_chunk = max(int(prefill_chunk), 1)
+        self.b = self.config.batch_slots
+        self.cache_len = self.config.cache_len
         self.clock = clock
         # resolve the serving policy up front: a bad policy name or a
         # missing/invalid plan file fails at engine construction, not on
@@ -157,10 +181,7 @@ class ServingEngine:
         # cheap decode_block validation FIRST: a misconfigured fast
         # path must not pay the calibration forwards below before
         # failing
-        self.decode_block = max(int(decode_block), 1)
-        if self.decode_block > 1 and not self.greedy:
-            raise ValueError("decode_block > 1 selects tokens on device "
-                             "(greedy argmax); needs greedy=True")
+        self.decode_block = self.config.decode_block
         if self.decode_block > 1 and not registry.block_decode_eligible(cfg):
             raise ValueError(
                 f"family {cfg.family!r} is not eligible for blocked decode")
@@ -169,19 +190,20 @@ class ServingEngine:
         # re-quantizes static weights per token and int4 replicas hold
         # packed nibbles instead of fp32; calibrated static activation
         # scales ride on the prepared containers the same way
-        self.prepared = bool(prepare_weights) and api.prepare is not None
-        self.act_scales = self._resolve_act_scales(act_calibration, params)
+        self.prepared = bool(self.config.prepare_weights) \
+            and api.prepare is not None
+        self.act_scales = self._resolve_act_scales(
+            self.config.act_calibration, params)
         self.params = api.prepare(params, self.policy,
                                   act_scales=self.act_scales) \
             if self.prepared else params
-        self.caches = api.init_cache(batch_slots, cache_len)
-        self.pos = np.zeros(batch_slots, np.int32)
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.caches = api.init_cache(self.b, self.cache_len)
+        self.pos = np.zeros(self.b, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * self.b
         self.scheduler = scheduler if scheduler is not None \
             else AdmissionScheduler()
         self.completed: Dict[int, Request] = {}
-        if prefill not in ("auto", "batched", "teacher"):
-            raise ValueError(f"prefill mode {prefill!r}")
+        prefill = self.config.prefill
         if prefill == "batched" and cfg.family not in _FAST_PREFILL_FAMILIES:
             raise ValueError(
                 f"batched prefill needs a position-tagged token-only "
@@ -208,15 +230,40 @@ class ServingEngine:
         self.counters = {"ticks": 0, "decode_steps": 0, "host_syncs": 0,
                          "prefill_calls": 0, "prefill_tokens": 0,
                          "teacher_forced_tokens": 0,
-                         "admitted": 0, "submitted": 0}
+                         "admitted": 0, "submitted": 0,
+                         "short_blocks": 0, "mid_block_admits": 0,
+                         "eos_stops": 0}
         self._decode = jax.jit(
             lambda p, tok, pos, c: api.decode_step(
                 p, {"token": tok, "pos": pos}, c))
-        self._prefill_admit = jax.jit(self._prefill_admit_impl)
-        # blocked-decode programs, one jit cache entry per block length
-        # (lengths are min(decode_block, largest remaining budget), so
-        # at most decode_block distinct compiles)
-        self._block_fns: Dict[int, Callable] = {}
+        # per-slot sampling state mirrored on host, scattered into the
+        # decode programs per dispatch (rows reset when slots free)
+        self._temp = np.zeros(self.b, np.float32)
+        self._topk = np.zeros(self.b, np.int32)
+        self._topp = np.ones(self.b, np.float32)
+        self._stops = np.full((self.b, MAX_STOP_IDS), -1, np.int32)
+        self._keys = np.zeros((self.b, 2), np.uint32)
+        self._stop_sets: List[frozenset] = [frozenset()] * self.b
+        from repro.models.sampling import sample_tokens
+        self._select = jax.jit(sample_tokens)
+        # effective prefill chunk: bounded by the smallest cache ring so
+        # a chunk's positions occupy distinct slots within each row
+        # (SWA groups cap at their window)
+        self.prefill_chunk = self.config.prefill_chunk
+        if self._fast_prefill:
+            caps = [c.pos.shape[-1]
+                    for c in jax.tree.leaves(
+                        self.caches, is_leaf=lambda x: hasattr(x, "pos"))]
+            self.prefill_chunk = max(
+                min(self.prefill_chunk, min(caps), self.cache_len), 1)
+            self._prefill_chunk_fn = jax.jit(
+                lambda p, tokens, offs, lens, c: api.prefill_chunk(
+                    p, {"tokens": tokens, "offsets": offs,
+                        "lengths": lens}, c))
+        # blocked-decode programs, one jit cache entry per (block
+        # length, sample?) pair — at most 2 * decode_block compiles
+        self._block_fns: Dict[Tuple[int, bool], Callable] = {}
+        self._last_block_short = False
         # params are immutable after preparation: walk the tree for the
         # resident-bytes report once, not on every metrics() call
         from repro.quant.prepare import weight_resident_bytes
@@ -307,10 +354,17 @@ class ServingEngine:
                 fn = registry.make_block_decode(self.api, 1,
                                                 policy=self.policy)
                 zeros = jnp.zeros((self.b,), jnp.int32)
-                jax.eval_shape(
-                    lambda p, c: fn(p, zeros, zeros,
-                                    jnp.ones((self.b,), jnp.int32), c),
-                    self.params, self.caches)
+                carry = registry.DecodeCarry(
+                    tok=zeros, pos=zeros,
+                    rem=jnp.ones((self.b,), jnp.int32),
+                    taken=zeros,
+                    stops=jnp.full((self.b, MAX_STOP_IDS), -1, jnp.int32),
+                    temp=jnp.zeros((self.b,), jnp.float32),
+                    top_k=zeros,
+                    top_p=jnp.ones((self.b,), jnp.float32),
+                    keys=jnp.zeros((self.b, 2), jnp.uint32))
+                jax.eval_shape(lambda p, c: fn(p, carry, c),
+                               self.params, self.caches)
             else:
                 tok = jnp.zeros((self.b, 1), jnp.int32)
                 pos = jnp.zeros((self.b,), jnp.int32)
@@ -358,6 +412,8 @@ class ServingEngine:
         m["prepared_weights"] = self.prepared
         m["act_calibrated"] = self.act_scales is not None
         m["decode_block"] = self.decode_block
+        m["mid_block_admission"] = self.config.mid_block_admission
+        m["eos_stopping"] = self.config.eos_stopping
         m["weight_bytes"] = self.weight_bytes()
         return m
 
@@ -369,97 +425,145 @@ class ServingEngine:
 
     def _capacity_needed(self, req: Request) -> int:
         """Cache positions the request will write: prompt prefill at
-        0..S-2, decode at S-1..S-2+max_new. Beyond cache_len the ring
-        write (pos % capacity) silently overwrites early context on
-        full-attention models, so oversized requests are rejected."""
-        if req.max_new_tokens <= 0:
+        0..S-2, decode at S-1..S-2+budget. Beyond ``cache_len`` the ring
+        write (pos % capacity) overwrites early context — the request
+        still serves, with trailing-window semantics, and is stamped
+        ``truncated`` at admission."""
+        if req.budget <= 0:
             return 0
-        return max(len(req.prompt) - 1, 0) + req.max_new_tokens
+        return max(len(req.prompt) - 1, 0) + req.budget
 
     def submit(self, req: Request):
-        if self._capacity_needed(req) > self.cache_len:
+        if not isinstance(req.sampling, SamplingParams):
+            raise TypeError(
+                f"req{req.rid}.sampling must be a SamplingParams, got "
+                f"{type(req.sampling).__name__}")
+        if len(self._merged_stops(req)) > MAX_STOP_IDS:
             raise ValueError(
-                f"req{req.rid}: prompt of {len(req.prompt)} tokens + "
-                f"{req.max_new_tokens} new tokens needs "
-                f"{self._capacity_needed(req)} cache positions, but "
-                f"cache_len={self.cache_len}")
+                f"req{req.rid}: stop_ids + engine eos_id exceed the "
+                f"{MAX_STOP_IDS} per-slot stop slots")
         self.scheduler.submit(req, now=self.clock())
         self.counters["submitted"] += 1
 
-    def _prefill_admit_impl(self, params, tokens, admit_mask, caches):
-        """One admission wave: prefill the packed (slots, L) prompts into
-        a fresh cache, then merge admitted rows into the live cache."""
-        fresh = self.api.init_cache(self.b, self.cache_len)
-        _, fresh = self.api.prefill(params, {"tokens": tokens}, fresh)
+    def _merged_stops(self, req: Request) -> Tuple[int, ...]:
+        stops = list(req.sampling.stop_ids)
+        if self.config.eos_id is not None \
+                and self.config.eos_id not in stops:
+            stops.append(self.config.eos_id)
+        return tuple(stops)
 
-        def merge(old, new):
-            # every cache leaf is (n_groups, slots, ...): batch axis 1
-            m = admit_mask.reshape((1, self.b) + (1,) * (old.ndim - 2))
-            return jnp.where(m, new.astype(old.dtype), old)
+    def _install_sampling(self, slot: int, req: Request):
+        sp = req.sampling
+        self._temp[slot] = sp.temperature
+        self._topk[slot] = sp.top_k
+        self._topp[slot] = sp.top_p
+        stops = self._merged_stops(req) if self.config.eos_stopping \
+            else ()
+        self._stops[slot] = -1
+        self._stops[slot, :len(stops)] = stops
+        self._stop_sets[slot] = frozenset(stops)
+        # per-request key derivation: explicit seed, else engine seed
+        # folded with the rid — placement- and block-size-independent
+        if sp.seed is not None:
+            key = jax.random.PRNGKey(sp.seed)
+        else:
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(self.config.seed),
+                req.rid & 0xFFFFFFFF)   # fold_in wants uint32-range data
+        self._keys[slot] = np.asarray(key, np.uint32)
 
-        return jax.tree.map(merge, caches, fresh)
+    def _clear_sampling(self, slot: int):
+        self._temp[slot] = 0.0
+        self._topk[slot] = 0
+        self._topp[slot] = 1.0
+        self._stops[slot] = -1
+        self._keys[slot] = 0
+        self._stop_sets[slot] = frozenset()
 
     def _admit(self):
         free = [s for s in range(self.b) if self.slot_req[s] is None]
         if not free:
             return
         now = self.clock()
-        wave: List[Tuple[int, Request]] = []
+        teacher: List[Tuple[int, Request]] = []
         for req in self.scheduler.select(len(free), now):
             req.admit_time = now
             req.tokens = [int(t) for t in req.prompt]
             self.counters["admitted"] += 1
-            if req.max_new_tokens <= 0 or len(req.prompt) == 0:
+            if req.budget <= 0 or len(req.prompt) == 0:
                 # nothing to generate: complete without holding a slot
                 req.done = True
+                req.finish_reason = "length"
                 req.finish_time = now
                 self.completed[req.rid] = req
                 continue
             if self._capacity_needed(req) > self.cache_len:
-                # submit() rejects these; a request injected straight
-                # into the scheduler fails terminally instead of
-                # killing the whole admission wave (and, via the
-                # router, every other replica's traffic)
-                req.done = True
-                req.error = (f"needs {self._capacity_needed(req)} cache "
-                             f"positions > cache_len={self.cache_len}")
-                req.finish_time = now
-                self.completed[req.rid] = req
-                continue
+                # chunked prefill lifted the old admission bound: the
+                # request serves with trailing-window (ring) context
+                req.truncated = True
             slot = free.pop(0)
             self.slot_req[slot] = req
-            self.pos[slot] = len(req.prompt) - 1
-            req.next_input = int(req.prompt[-1])
-            if len(req.prompt) > 1:
-                wave.append((slot, req))
-        if not wave:
-            return
-        if self._fast_prefill:
-            self._prefill_wave(wave)
-        else:
-            for slot, req in wave:
+            self._install_sampling(slot, req)
+            if self._last_block_short:
+                self.counters["mid_block_admits"] += 1
+            req.prefill_pos = 0
+            if len(req.prompt) == 1:
                 self.pos[slot] = 0
-                for t in req.prompt[:-1]:
-                    self._step_slot_token(slot, int(t))
-                self.counters["teacher_forced_tokens"] += \
-                    len(req.prompt) - 1
+                req.next_input = int(req.prompt[0])
+            elif self._fast_prefill:
+                # chunked continuation: the slot enters the prefilling
+                # state (next_input None) and advances one wave per
+                # tick in _prefill_tick; pos tracks the frontier so the
+                # idle decode write it receives meanwhile lands on a
+                # position the next chunk overwrites
+                self.pos[slot] = 0
+                req.next_input = None
+            else:
+                # teacher-forced fallback (recurrent-state families)
+                self.pos[slot] = 0
+                req.next_input = int(req.prompt[-1])
+                teacher.append((slot, req))
+        for slot, req in teacher:
+            for t in req.prompt[:-1]:
+                self._step_slot_token(slot, int(t))
+            req.prefill_pos = len(req.prompt) - 1
+            self.counters["teacher_forced_tokens"] += len(req.prompt) - 1
 
-    def _prefill_wave(self, wave: List[Tuple[int, Request]]):
-        lmax = max(len(req.prompt) - 1 for _, req in wave)
+    def _prefill_tick(self) -> bool:
+        """Advance every prefilling slot by one chunk in ONE fixed-shape
+        jitted dispatch; slots whose prompt completes become decodable
+        this tick."""
+        pref = [(s, r) for s, r in enumerate(self.slot_req)
+                if r is not None and r.next_input is None]
+        if not pref:
+            return False
         chunk = self.prefill_chunk
-        L = min(max(-(-lmax // chunk) * chunk, 1), self.cache_len)
-        tokens = np.zeros((self.b, L), np.int32)
-        mask = np.zeros((self.b,), bool)
-        for slot, req in wave:
-            t = np.asarray(req.prompt[:-1], np.int32)
-            tokens[slot, :t.size] = t
-            mask[slot] = True
-        self.caches = self._prefill_admit(
-            self.params, jnp.array(tokens), jnp.array(mask),
-            self.caches)
+        tokens = np.zeros((self.b, chunk), np.int32)
+        offs = np.zeros(self.b, np.int32)
+        lens = np.zeros(self.b, np.int32)
+        total = 0
+        for s, req in pref:
+            todo = len(req.prompt) - 1 - req.prefill_pos
+            take = min(chunk, todo)
+            tokens[s, :take] = np.asarray(
+                req.prompt[req.prefill_pos:req.prefill_pos + take],
+                np.int32)
+            offs[s] = req.prefill_pos
+            lens[s] = take
+            total += take
+        self.caches = self._prefill_chunk_fn(
+            self.params, jnp.array(tokens), jnp.array(offs),
+            jnp.array(lens), self.caches)
         self.counters["prefill_calls"] += 1
-        self.counters["prefill_tokens"] += int(
-            sum(len(req.prompt) - 1 for _, req in wave))
+        self.counters["prefill_tokens"] += total
+        for s, req in pref:
+            req.prefill_pos += int(lens[s])
+            if req.prefill_pos >= len(req.prompt) - 1:
+                self.pos[s] = len(req.prompt) - 1
+                req.next_input = int(req.prompt[-1])
+            else:
+                self.pos[s] = req.prefill_pos
+        return True
 
     def _step_slot_token(self, slot: int, token: int) -> int:
         """Teacher-forced fallback: feed one prompt token through decode
@@ -477,34 +581,64 @@ class ServingEngine:
 
     # --------------------------------------------------------- decode loop
 
-    def _block_decode(self, n: int) -> Callable:
-        fn = self._block_fns.get(n)
+    def _block_decode(self, n: int, sample: bool) -> Callable:
+        fn = self._block_fns.get((n, sample))
         if fn is None:
             # pass the eagerly-resolved policy: a plan: file deleted
             # after construction must not fail the first dispatch
-            fn = jax.jit(registry.make_block_decode(self.api, n,
-                                                    policy=self.policy))
-            self._block_fns[n] = fn
+            fn = jax.jit(registry.make_block_decode(
+                self.api, n, policy=self.policy, sample=sample))
+            self._block_fns[(n, sample)] = fn
         return fn
 
-    def _finish_slot(self, s: int, now: float):
+    def _finish_slot(self, s: int, now: float, reason: str):
         req = self.slot_req[s]
         req.done = True
         req.finish_time = now
+        req.finish_reason = reason
+        if reason == "stop":
+            self.counters["eos_stops"] += 1
         self.completed[req.rid] = req
         self.slot_req[s] = None
         self.pos[s] = 0
+        self._clear_sampling(s)
+
+    def _stop_hit(self, s: int, token: int) -> bool:
+        return bool(self._stop_sets[s]) and token in self._stop_sets[s]
+
+    def _choose_block(self, rem: np.ndarray) -> int:
+        """Block length for this dispatch. Mid-block admission policy:
+        while requests are queued, cut the block at the nearest
+        completion (smallest positive budget) or the queue-depth-scaled
+        boundary — ceil(decode_block / (1 + depth)) — whichever comes
+        first, but never below HALF the configured block. The floor
+        bounds the cost of the extra host syncs shorter blocks imply
+        (on dispatch-overhead-dominated hosts unbounded cutting
+        degrades both throughput and the TTFT it is meant to improve):
+        queued work admits after at most ~half a block, for at most one
+        extra sync per block."""
+        alive = rem[rem > 0]
+        full = int(min(self.decode_block, int(alive.max())))
+        depth = len(self.scheduler)
+        if self.config.mid_block_admission and depth > 0:
+            cut = min(int(alive.min()),
+                      -(-self.decode_block // (1 + depth)))
+            return max(1, min(full, max(cut, self.decode_block // 2)))
+        return max(full, 1)
 
     def step(self):
-        """One engine tick: admit + one decode block (``decode_block``
-        tokens, one host sync) for every active slot."""
+        """One engine tick: admit, advance prefilling slots one chunk,
+        run one decode block (one host sync) for the decodable slots."""
         self._admit()
         self.counters["ticks"] += 1
-        active = [s for s in range(self.b) if self.slot_req[s] is not None]
+        prefilled = self._fast_prefill and self._prefill_tick()
+        active = [s for s, r in enumerate(self.slot_req)
+                  if r is not None and r.next_input is not None]
         if not active:
-            return False
+            return prefilled
         if self.decode_block > 1:
             return self._step_block(active)
+        self._last_block_short = False
         tok = np.zeros((self.b, 1), np.int32)
         for s in active:
             tok[s, 0] = self.slot_req[s].next_input
@@ -515,49 +649,80 @@ class ServingEngine:
             self.caches)
         self.counters["decode_steps"] += 1
         self.counters["host_syncs"] += 1
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        if any(self._temp[s] > 0 for s in active):
+            keys2, nxt = self._select(
+                jnp.array(self._keys), logits, jnp.array(self._temp),
+                jnp.array(self._topk), jnp.array(self._topp))
+            nxt = np.asarray(nxt)
+            keys2 = np.asarray(keys2)
+            for s in active:
+                self._keys[s] = keys2[s]
+        else:
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
         now = self.clock()
         for s in active:
             req = self.slot_req[s]
             self.pos[s] += 1
             if req.first_token_time is None:
                 req.first_token_time = now
-            req.tokens.append(int(nxt[s]))
-            req.next_input = int(nxt[s])
-            if req.new_tokens >= req.max_new_tokens:
-                self._finish_slot(s, now)
+            t = int(nxt[s])
+            req.tokens.append(t)
+            req.next_input = t
+            if self.config.eos_stopping and self._stop_hit(s, t):
+                self._finish_slot(s, now, "stop")
+            elif req.new_tokens >= req.budget:
+                self._finish_slot(s, now, "length")
         return True
 
     def _step_block(self, active: List[int]) -> bool:
-        """Fast path: run min(decode_block, largest remaining budget)
-        decode steps in ONE dispatch (jitted scan with on-device argmax
-        + active masks) and sync the token trajectory once. Slot budgets
-        are host-known, so each slot's active prefix of the block is
-        replayed host-side without a second sync."""
+        """Fast path: run one decode block in ONE dispatch (jitted scan
+        with on-device selection + active masks + stop ids) and sync
+        the token trajectory once. Each slot's active prefix of the
+        block comes back in ``carry.taken`` (EOS stopping means the
+        host can no longer derive it from budgets alone)."""
         rem = np.zeros(self.b, np.int32)
         tok = np.zeros(self.b, np.int32)
         for s in active:
             req = self.slot_req[s]
-            rem[s] = req.max_new_tokens - req.new_tokens
+            rem[s] = req.budget - req.new_tokens
             tok[s] = req.next_input
-        n = int(min(self.decode_block, int(rem.max())))
-        tokens, _, _, _, self.caches = self._block_decode(n)(
-            self.params, jnp.array(tok), jnp.array(self.pos),
-            jnp.array(rem), self.caches)
+        n = self._choose_block(rem)
+        full = int(min(self.decode_block, int(rem.max())))
+        self._last_block_short = n < full
+        if self._last_block_short:
+            self.counters["short_blocks"] += 1
+        sample = bool(any(self._temp[s] > 0 for s in active))
+        carry = registry.DecodeCarry(
+            tok=jnp.array(tok), pos=jnp.array(self.pos),
+            rem=jnp.array(rem),
+            taken=jnp.zeros(self.b, jnp.int32),
+            stops=jnp.array(self._stops), temp=jnp.array(self._temp),
+            top_k=jnp.array(self._topk), top_p=jnp.array(self._topp),
+            keys=jnp.array(self._keys))
+        tokens, out, self.caches = self._block_decode(n, sample)(
+            self.params, carry, self.caches)
         tokens = np.asarray(tokens)          # ONE host sync per block
+        taken = np.asarray(out.taken)
+        rem_after = np.asarray(out.rem)
+        keys_after = np.asarray(out.keys)
         self.counters["decode_steps"] += n
         self.counters["host_syncs"] += 1
         now = self.clock()
         for s in active:
             req = self.slot_req[s]
-            steps = int(min(rem[s], n))      # this slot's active prefix
+            steps = int(taken[s])            # this slot's active prefix
             if req.first_token_time is None:
                 req.first_token_time = now
             req.tokens.extend(int(t) for t in tokens[:steps, s])
             req.next_input = int(tokens[steps - 1, s])
             self.pos[s] += steps
-            if req.new_tokens >= req.max_new_tokens:
-                self._finish_slot(s, now)
+            self._keys[s] = keys_after[s]
+            if int(rem_after[s]) == 0:
+                last = int(tokens[steps - 1, s])
+                reason = "stop" if (self.config.eos_stopping
+                                    and self._stop_hit(s, last)) \
+                    else "length"
+                self._finish_slot(s, now, reason)
         return True
 
     def run_until_drained(self, max_ticks: int = 10_000):

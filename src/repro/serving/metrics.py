@@ -15,6 +15,11 @@ Schema (``summarize_requests``)::
 
 Percentile blocks are ``{}`` when no request carries the timestamps
 (e.g. nothing completed yet).
+
+``slo_report`` layers the serving-quality view on top: SLO attainment
+(fraction of requests whose TTFT meets a deadline) and goodput (tokens
+per second counting only attaining requests) — the pair the bursty
+open-loop bench compares across engine configurations.
 """
 from __future__ import annotations
 
@@ -24,7 +29,7 @@ import numpy as np
 
 from repro.serving.engine import Request
 
-PERCENTILES = (50, 90, 99)
+PERCENTILES = (50, 90, 95, 99)
 
 
 def percentiles(values: Sequence[float],
@@ -68,4 +73,33 @@ def summarize_requests(reqs: Iterable[Request]) -> Dict:
         "e2e_s": percentiles([r["e2e_s"] for r in rows]),
         "tok_per_s_per_request": percentiles(
             [r["tok_per_s"] for r in rows]),
+    }
+
+
+def slo_report(reqs: Iterable[Request], ttft_slo_s: float) -> Dict:
+    """SLO attainment + goodput over a set of completed requests.
+
+    A request ATTAINS when its TTFT (submit -> first token) is at most
+    ``ttft_slo_s``; requests that never produced a token (zero-budget
+    completions) are excluded from the denominator. Goodput counts only
+    the generated tokens of attaining requests, over the span from the
+    earliest submit to the latest finish — so a config that burns the
+    batch on requests that miss their deadline scores low even at equal
+    raw throughput.
+    """
+    rows = [r for r in reqs if r.first_token_time is not None]
+    if not rows:
+        return {"n": 0, "ttft_slo_s": float(ttft_slo_s),
+                "attainment": None, "goodput_tok_per_s": None}
+    attain = [r for r in rows
+              if (r.first_token_time - r.submit_time) <= ttft_slo_s]
+    t0 = min(r.submit_time for r in rows)
+    t1 = max(r.finish_time for r in rows if r.finish_time is not None)
+    span = max(t1 - t0, 1e-9)
+    good = sum(len(r.tokens) - len(r.prompt) for r in attain)
+    return {
+        "n": len(rows),
+        "ttft_slo_s": float(ttft_slo_s),
+        "attainment": len(attain) / len(rows),
+        "goodput_tok_per_s": good / span,
     }

@@ -130,16 +130,24 @@ def _replica_name(policy_name: str) -> str:
 
 
 def build_replicas(cfg: ModelConfig, policy_names: Sequence[str],
-                   params=None, batch_slots: int = 4, cache_len: int = 128,
+                   params=None, config: Optional["EngineConfig"] = None,
                    **engine_kw) -> List[Replica]:
     """One replica per policy/plan ref, initialized from a single raw
     parameter set. Each engine *prepares* its own storage copy from its
     policy at construction (quant.prepare): the int4 replica holds
     packed nibbles + scales, the bf16 replica the raw tree — so the
-    per-replica ``cost['weight_bytes']`` genuinely differ."""
+    per-replica ``cost['weight_bytes']`` genuinely differ.
+
+    ``config`` is the shared :class:`~repro.serving.config.EngineConfig`
+    every replica runs under (default ``EngineConfig(cache_len=128)``);
+    legacy flat engine kwargs still pass through ``**engine_kw`` and
+    take the deprecation path in ``ServingEngine``."""
     import jax
 
     from repro.models import registry
+    from repro.serving.config import EngineConfig
+    if config is None and not engine_kw:
+        config = EngineConfig(cache_len=128)
     replicas: List[Replica] = []
     names: Dict[str, int] = {}
     for pname in policy_names:
@@ -147,8 +155,8 @@ def build_replicas(cfg: ModelConfig, policy_names: Sequence[str],
         api = registry.build(rcfg)
         if params is None:
             params = api.init(jax.random.PRNGKey(0))
-        engine = ServingEngine(rcfg, api, params, batch_slots=batch_slots,
-                               cache_len=cache_len, **engine_kw)
+        engine = ServingEngine(rcfg, api, params, config=config,
+                               **engine_kw)
         name = _replica_name(pname)
         if name in names:           # duplicate policies stay addressable
             names[name] += 1

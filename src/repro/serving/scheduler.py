@@ -18,6 +18,15 @@ Three policies compose in ``select``:
     a burst of long prompts cannot monopolize the engine while decode
     slots sit idle; the first pick is always admitted (progress
     guarantee) and promoted requests bypass the budget.
+
+With the chunked-prefill continuous engine the budget's role softens:
+an admitted long prompt no longer stalls decode (it streams through
+fixed-size prefill waves while other slots generate), so the budget now
+paces how much *prefill bandwidth per tick* admission can commit rather
+than protecting decode from a prefill monopoly. Queue depth also feeds
+back into the engine's block-length choice (mid-block admission): a
+non-empty waiting line shortens decode blocks so ``select`` runs again
+sooner.
 """
 from __future__ import annotations
 

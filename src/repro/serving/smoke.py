@@ -9,7 +9,7 @@ autotune-smoke cold/warm contract:
     exactly ``max_new_tokens``;
   * BOTH replicas receive traffic (plan-aware routing splits tagged
     traffic onto the accurate replica and the rest onto the cheap one);
-  * admission runs through the batched prefill path — zero
+  * admission runs through the chunked prefill path — zero
     teacher-forced prompt tokens, > 0 prefill calls;
   * per-request metrics (TTFT / queue delay) are populated;
   * the int4 replica serves PREPARED weights: its traced decode step
@@ -22,10 +22,21 @@ autotune-smoke cold/warm contract:
   * the decode FAST PATH holds its contracts on a blocked + calibrated
     replica (``--decode-block``, default 4): token-for-token identical
     output to the per-token engine on every request, the
-    decode_steps-vs-ticks counter relation (full blocks between
-    admission waves, one host sync per block), zero per-step weight
-    quants still, and zero per-token activation absmax reduces
-    (``mplinear.count_act_quant`` — static calibrated scales).
+    decode_steps-vs-ticks counter relation (one host sync per block),
+    zero per-step weight quants still, and zero per-token activation
+    absmax reduces (``mplinear.count_act_quant`` — static calibrated
+    scales);
+  * the CONTINUOUS-BATCHING loop holds its contracts on a bursty
+    tick-driven arrival trace (staggered submits landing mid-decode): a
+    long prompt streams through multiple prefill waves while decode
+    keeps running, queue pressure cuts blocks short and at least one
+    admission lands mid-block, at least one request EOS-stops mid-block
+    with its budget unspent, an oversized request (prompt + budget >
+    cache_len) admits with trailing-window context instead of being
+    rejected, greedy token streams stay identical to a
+    flags-off (PR-5-style between-block) engine on the same trace, and
+    the continuous fast path still performs zero dynamic weight/act
+    quants per step.
 """
 from __future__ import annotations
 
@@ -39,13 +50,15 @@ REPLICAS = ("int8_serving", "bf16", "int4_serving")
 
 def _run_workload(requests: int, slots: int, max_new: int, seed: int):
     from repro.configs import reduced
+    from repro.serving.config import EngineConfig
     from repro.serving.engine import Request
     from repro.serving.router import Router, build_replicas
 
     cfg = reduced("qwen2-0.5b")
     assert cfg.n_layers == 2, cfg.n_layers   # tiny model: CI-sized
-    replicas = build_replicas(cfg, REPLICAS, batch_slots=slots,
-                              cache_len=64)
+    replicas = build_replicas(cfg, REPLICAS,
+                              config=EngineConfig(batch_slots=slots,
+                                                  cache_len=64))
     router = Router(replicas, strategy="plan_aware")
 
     rng = np.random.default_rng(seed)
@@ -72,6 +85,7 @@ def _run_blocked_pair(decode_block: int, requests: int, slots: int,
 
     from repro.configs import reduced
     from repro.models import registry
+    from repro.serving.config import EngineConfig
     from repro.serving.engine import Request, ServingEngine
 
     import dataclasses
@@ -82,9 +96,9 @@ def _run_blocked_pair(decode_block: int, requests: int, slots: int,
     scales = None
     engines, tokens = {}, {}
     for blk in (1, decode_block):
-        eng = ServingEngine(cfg, api, params, batch_slots=slots,
-                            cache_len=64, decode_block=blk,
-                            act_calibration=scales or "auto")
+        eng = ServingEngine(cfg, api, params, config=EngineConfig(
+            batch_slots=slots, cache_len=64, decode_block=blk,
+            act_calibration=scales or "auto"))
         scales = eng.act_scales      # calibrate once, share the scales
         rng = np.random.default_rng(seed)
         reqs = [Request(rid=rid,
@@ -99,6 +113,87 @@ def _run_blocked_pair(decode_block: int, requests: int, slots: int,
         engines[blk] = eng
         tokens[blk] = {r.rid: list(r.tokens) for r in reqs}
     return engines, tokens
+
+
+# deterministic bursty trace for the continuous-batching contract:
+# rid -> (prompt_len, budget, submit_tick). rid 0 is the multi-wave long
+# prompt, rid 4 is oversized (9 + 60 > cache_len 64, truncated-admit),
+# rids 2/3/4 land mid-run while slots are busy (queue pressure)
+_CONTINUOUS_TRACE = {
+    0: (18, 7, 0),
+    1: (5, 10, 0),
+    2: (7, 11, 2),
+    3: (4, 6, 3),
+    4: (10, 60, 5),
+}
+
+
+def _drive_trace(cfg, api, params, config, stops):
+    """Run the bursty trace: submits land at their trace tick (possibly
+    mid-decode), the engine steps once per tick until drained."""
+    from repro.serving.config import SamplingParams
+    from repro.serving.engine import Request, ServingEngine
+
+    rng = np.random.default_rng(1)
+    prompts = {rid: rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for rid, (n, _, _) in sorted(_CONTINUOUS_TRACE.items())}
+    eng = ServingEngine(cfg, api, params, config=config)
+    pending = {rid: t for rid, (_, _, t) in _CONTINUOUS_TRACE.items()}
+    tick = 0
+    while pending or eng.has_pending():
+        for rid in [r for r, t in pending.items() if t <= tick]:
+            del pending[rid]
+            eng.submit(Request(
+                rid=rid, prompt=prompts[rid],
+                max_new_tokens=_CONTINUOUS_TRACE[rid][1],
+                sampling=SamplingParams(stop_ids=stops.get(rid, ()))))
+        eng.step()
+        tick += 1
+        if tick > 10_000:
+            raise RuntimeError("continuous trace did not drain")
+    return eng
+
+
+def _run_continuous(decode_block: int, seed: int):
+    """The continuous engine vs the flags-off (PR-5-style) baseline on
+    the same bursty arrival trace; stop ids for rids 1 and 3 are
+    harvested from the baseline's greedy streams so EOS events are
+    guaranteed. Returns (continuous engine, baseline engine, expected
+    per-rid streams)."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import reduced
+    from repro.models import registry
+    from repro.quant.calibrate import calibrate_act_scales
+    from repro.serving.config import EngineConfig
+
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy="int8_serving")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    scales = calibrate_act_scales(cfg, api, params)
+    base = EngineConfig(batch_slots=2, cache_len=64,
+                        decode_block=decode_block, prefill_chunk=4,
+                        act_calibration=scales)
+    off = dataclasses.replace(base, mid_block_admission=False,
+                              eos_stopping=False)
+    ref = _drive_trace(cfg, api, params, off, stops={})
+    streams = {r.rid: list(r.tokens) for r in ref.completed.values()}
+    # harvest a stop id per EOS request from its greedy stream; the
+    # expected continuous stream cuts at the FIRST occurrence
+    stops, expected = {}, {}
+    for rid, (n, budget, _) in _CONTINUOUS_TRACE.items():
+        gen = streams[rid][n:]
+        if rid in (1, 3):
+            tok = gen[min(2, budget - 1)]
+            stops[rid] = (int(tok),)
+            expected[rid] = streams[rid][:n + gen.index(tok) + 1]
+        else:
+            expected[rid] = streams[rid]
+    cont = _drive_trace(cfg, api, params, base, stops=stops)
+    return cont, ref, expected, stops
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -133,7 +228,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     for name, n in counters.items():
         assert n > 0, f"replica {name!r} received no traffic: {counters}"
 
-    # --- admission went through batched prefill, not teacher forcing
+    # --- admission went through chunked prefill, not teacher forcing
     for name, rep in report["replicas"].items():
         c = rep["metrics"]["counters"]
         assert c["teacher_forced_tokens"] == 0, (name, c)
@@ -153,10 +248,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     raw_proj = raw.engine.weight_bytes()["projections"]
     assert wb["projections"] * 6 <= raw_proj, (wb, raw_proj)
     # the counter hook is live: an unprepared engine shows > 0
+    from repro.serving.config import EngineConfig
     from repro.serving.engine import ServingEngine
     dyn = ServingEngine(int4.engine.cfg, int4.engine.api,
-                        raw.engine.params, batch_slots=args.slots,
-                        cache_len=64, prepare_weights=False)
+                        raw.engine.params,
+                        config=EngineConfig(batch_slots=args.slots,
+                                            cache_len=64,
+                                            prepare_weights=False))
     dyn_quants = dyn.weight_quant_trace_count()
     assert dyn_quants > 0, "dynamic control engine counted no quants"
 
@@ -188,6 +286,40 @@ def main(argv: Optional[List[str]] = None) -> int:
     assert dyn.act_quant_trace_count() > 0, \
         "dynamic control engine counted no activation quants"
 
+    # --- continuous batching: bursty arrivals, chunked prefill
+    # continuation, mid-block admission, EOS stopping — all against a
+    # flags-off baseline on the same trace
+    cont, ref, expected, stops = _run_continuous(blk, args.seed)
+    cc, rc = cont.counters, ref.counters
+    got = {r.rid: list(r.tokens) for r in cont.completed.values()}
+    assert got == expected, "continuous greedy streams diverged"
+    # long prompt (rid 0) streamed through > 1 prefill wave while the
+    # engine kept ticking: with chunk 4, 17 prefill tokens need 5 waves
+    assert cc["prefill_calls"] >= 5, cc
+    assert cc["teacher_forced_tokens"] == 0, cc
+    # queue pressure cut blocks short and at least one admission landed
+    # right after a shortened block
+    assert cc["short_blocks"] > 0, cc
+    assert cc["mid_block_admits"] > 0, cc
+    assert rc["short_blocks"] == 0 and rc["mid_block_admits"] == 0, rc
+    # EOS: the stop requests ended mid-budget, freeing slot + budget
+    assert cc["eos_stops"] == len(stops), (cc, stops)
+    for rid in stops:
+        req = cont.completed[rid]
+        assert req.finish_reason == "stop", (rid, req.finish_reason)
+        assert req.new_tokens < req.budget, (rid, req.new_tokens)
+    # the oversized request admitted (trailing-window) and ran its
+    # full budget instead of being rejected at submit
+    over = cont.completed[4]
+    assert over.truncated and over.new_tokens == 60, \
+        (over.truncated, over.new_tokens)
+    assert rc["eos_stops"] == 0 and ref.completed[1].new_tokens == 10, rc
+    # the continuous fast path stays on prepared weights + static scales
+    assert cont.weight_quant_trace_count() == 0, \
+        "continuous replica quantizes weights per decode step"
+    assert cont.act_quant_trace_count() == 0, \
+        "continuous replica still absmax-reduces activations"
+
     for name, rep in report["replicas"].items():
         m = rep["metrics"]
         print(f"replica {name}: routed={rep['routed']} "
@@ -203,5 +335,10 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"decode_block={blk} token-identical with "
           f"{fast['host_syncs']} syncs / {fast['decode_steps']} steps "
           f"(per-token: {per_tok['host_syncs']}), 0 act quants/step "
-          f"(dynamic control: {dyn.act_quant_trace_count()})")
+          f"(dynamic control: {dyn.act_quant_trace_count()}); "
+          f"continuous: {cc['prefill_calls']} prefill waves, "
+          f"{cc['short_blocks']} short blocks, "
+          f"{cc['mid_block_admits']} mid-block admits, "
+          f"{cc['eos_stops']} EOS stops, streams identical to the "
+          f"flags-off baseline")
     return 0

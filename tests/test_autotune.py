@@ -122,7 +122,8 @@ class TestServeRouting:
 
     def test_decode_routes_match_plan(self, tmp_path):
         import jax
-        from repro.launch.serve import Request, ServingEngine
+        from repro.launch.serve import (EngineConfig, Request,
+                                       ServingEngine)
         from repro.models import registry
 
         plan = _demo_plan()
@@ -132,8 +133,9 @@ class TestServeRouting:
                                   precision_policy=f"plan:{path}")
         api = registry.build(cfg)
         params = api.init(jax.random.PRNGKey(0))
-        engine = ServingEngine(cfg, api, params, batch_slots=2,
-                               cache_len=32)
+        engine = ServingEngine(cfg, api, params,
+                               config=EngineConfig(batch_slots=2,
+                                                   cache_len=32))
         routes = engine.routing_report()
         assert routes, "decode step routed no projections"
         policy = plan.to_policy()

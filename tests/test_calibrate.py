@@ -81,9 +81,10 @@ def test_static_scale_matches_dynamic_on_same_absmax():
 def test_calibrate_covers_every_routed_projection(int8_setup, scales):
     """Every path the decode step routes through the policy must have a
     calibrated scale (prefill exercises the same projections)."""
-    from repro.serving.engine import ServingEngine
+    from repro.serving import EngineConfig, ServingEngine
     cfg, api, params = int8_setup
-    eng = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16)
+    eng = ServingEngine(cfg, api, params,
+                        config=EngineConfig(batch_slots=2, cache_len=16))
     routed = set(eng.routing_report())
     assert routed <= set(scales), routed - set(scales)
     assert all(s > 0 for s in scales.values())
@@ -121,11 +122,13 @@ def test_prepare_attaches_and_threads_scales(int8_setup, scales):
 # --------------------------------------------------- engine integration
 
 def test_calibrated_engine_zero_act_quants(int8_setup, scales):
-    from repro.serving.engine import ServingEngine
+    from repro.serving import EngineConfig, ServingEngine
     cfg, api, params = int8_setup
-    cal = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16,
-                        act_calibration=scales)
-    dyn = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16)
+    cal = ServingEngine(cfg, api, params,
+                        config=EngineConfig(batch_slots=2, cache_len=16,
+                                            act_calibration=scales))
+    dyn = ServingEngine(cfg, api, params,
+                        config=EngineConfig(batch_slots=2, cache_len=16))
     assert cal.act_quant_trace_count() == 0
     assert cal.weight_quant_trace_count() == 0
     assert dyn.act_quant_trace_count() > 0
@@ -137,11 +140,13 @@ def test_calibration_requires_prepared_weights(int8_setup, scales):
     """Scales only take effect through prepared containers: asking for
     calibration with preparation off must fail, not silently measure
     the dynamic path."""
-    from repro.serving.engine import ServingEngine
+    from repro.serving import EngineConfig, ServingEngine
     cfg, api, params = int8_setup
     with pytest.raises(ValueError, match="prepared weights"):
-        ServingEngine(cfg, api, params, batch_slots=2, cache_len=16,
-                      prepare_weights=False, act_calibration=scales)
+        ServingEngine(cfg, api, params,
+                      config=EngineConfig(batch_slots=2, cache_len=16,
+                                          prepare_weights=False,
+                                          act_calibration=scales))
 
 
 def test_calibrated_prefill_matches_teacher_forced(int8_setup, scales):
@@ -153,21 +158,23 @@ def test_calibrated_prefill_matches_teacher_forced(int8_setup, scales):
     import jax
     import jax.numpy as jnp
 
-    from repro.serving.engine import Request, ServingEngine
+    from repro.serving import EngineConfig, Request, ServingEngine
     cfg, api, params = int8_setup
     lengths = [5, 1, 9]
     rng = np.random.default_rng(0)
     engines = {}
     for mode in ("batched", "teacher"):
-        eng = ServingEngine(cfg, api, params, batch_slots=3,
-                            cache_len=64, prefill=mode, prefill_chunk=4,
-                            act_calibration=scales)
+        eng = ServingEngine(cfg, api, params, config=EngineConfig(
+            batch_slots=3, cache_len=64, prefill=mode, prefill_chunk=4,
+            act_calibration=scales))
         r = np.random.default_rng(0)
         for i, n in enumerate(lengths):
             eng.submit(Request(
                 rid=i, prompt=r.integers(0, cfg.vocab, n, dtype=np.int32),
                 max_new_tokens=2))
         eng._admit()
+        while eng._prefill_tick():   # drain the chunked waves
+            pass
         engines[mode] = eng
     fast, slow = engines["batched"], engines["teacher"]
     assert np.array_equal(fast.pos, slow.pos)
@@ -215,11 +222,12 @@ def test_plan_carries_act_scales(int8_setup, scales, tmp_path):
     plan.save(path)
     assert load_act_scales(path) == pytest.approx(scales)
 
-    from repro.serving.engine import ServingEngine
+    from repro.serving import EngineConfig, ServingEngine
     pcfg = dataclasses.replace(cfg, precision_policy=f"plan:{path}")
     papi = registry.build(pcfg)
-    eng = ServingEngine(pcfg, papi, params, batch_slots=2, cache_len=16,
-                        act_calibration="auto")
+    eng = ServingEngine(pcfg, papi, params,
+                        config=EngineConfig(batch_slots=2, cache_len=16,
+                                            act_calibration="auto"))
     assert eng.act_scales == pytest.approx(scales)
     assert eng.act_quant_trace_count() == 0
 
@@ -238,10 +246,11 @@ def test_plan_without_scales_falls_back_to_calibration(int8_setup,
         default_mode="bf16")
     path = str(tmp_path / "nocal_plan.json")
     plan.save(path)
-    from repro.serving.engine import ServingEngine
+    from repro.serving import EngineConfig, ServingEngine
     pcfg = dataclasses.replace(cfg, precision_policy=f"plan:{path}")
     papi = registry.build(pcfg)
-    eng = ServingEngine(pcfg, papi, params, batch_slots=2, cache_len=16,
-                        act_calibration="auto")
+    eng = ServingEngine(pcfg, papi, params,
+                        config=EngineConfig(batch_slots=2, cache_len=16,
+                                            act_calibration="auto"))
     assert eng.act_scales          # ran its own calibration pass
     assert eng.act_quant_trace_count() == 0

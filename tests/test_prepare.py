@@ -204,16 +204,20 @@ class TestModelScale:
 
 class TestServingPrepared:
     def test_engine_prepares_and_counts_zero_weight_quants(self):
-        from repro.serving import ServingEngine
+        from repro.serving import EngineConfig, ServingEngine
         cfg = dataclasses.replace(reduced(ARCH),
                                   precision_policy="int8_serving")
         api = registry.build(cfg)
         params = api.init(jax.random.PRNGKey(0))
-        eng = ServingEngine(cfg, api, params, batch_slots=2, cache_len=32)
+        eng = ServingEngine(cfg, api, params,
+                            config=EngineConfig(batch_slots=2,
+                                                cache_len=32))
         assert eng.prepared
         assert eng.weight_quant_trace_count() == 0
-        dyn = ServingEngine(cfg, api, params, batch_slots=2, cache_len=32,
-                            prepare_weights=False)
+        dyn = ServingEngine(cfg, api, params,
+                            config=EngineConfig(batch_slots=2,
+                                                cache_len=32,
+                                                prepare_weights=False))
         assert not dyn.prepared
         assert dyn.weight_quant_trace_count() > 0
         # prepared engine serves end to end and reports weight memory
@@ -228,10 +232,11 @@ class TestServingPrepared:
             dyn.metrics()["weight_bytes"]["projections"]
 
     def test_replica_costs_carry_weight_bytes(self):
-        from repro.serving import Router, build_replicas
+        from repro.serving import EngineConfig, Router, build_replicas
         cfg = reduced(ARCH)
         reps = build_replicas(cfg, ("int4_serving", "bf16"),
-                              batch_slots=2, cache_len=32)
+                              config=EngineConfig(batch_slots=2,
+                                                  cache_len=32))
         by_name = {r.policy_name: r for r in reps}
         b_int4 = by_name["int4_serving"].cost["weight_bytes"]
         b_bf16 = by_name["bf16"].cost["weight_bytes"]

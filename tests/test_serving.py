@@ -14,9 +14,10 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced
-from repro.serving import (AdmissionScheduler, Request, Router,
-                           SchedulerFull, ServingEngine, build_replicas,
-                           percentiles, request_metrics)
+from repro.serving import (AdmissionScheduler, EngineConfig, Request,
+                           Router, SamplingParams, SchedulerFull,
+                           ServingEngine, build_replicas, percentiles,
+                           request_metrics, slo_report)
 
 ARCH = "qwen2-0.5b"
 
@@ -37,7 +38,7 @@ def _engine(lm_setup, **kw):
     cfg, api, params = lm_setup
     kw.setdefault("batch_slots", 3)
     kw.setdefault("cache_len", 64)
-    return ServingEngine(cfg, api, params, **kw)
+    return ServingEngine(cfg, api, params, config=EngineConfig(**kw))
 
 
 def _requests(cfg, lengths, max_new):
@@ -92,42 +93,45 @@ class TestEngineDrain:
         # a 1-token prompt needs no prefill call at all
         assert eng.counters["prefill_calls"] == 0
 
-    def test_oversized_requests_rejected_at_submit(self, lm_setup):
-        """Requests whose prompt + generation would wrap the KV ring
-        (silently truncating context) are rejected up front, and an
-        oversized request injected straight into the scheduler fails
-        terminally instead of killing the admission wave."""
+    def test_oversized_requests_truncate_instead_of_rejecting(
+            self, lm_setup):
+        """Chunked prefill lifted the old ``prompt + generation <=
+        cache_len`` admission bound: requests that would wrap the KV
+        ring are now admitted with ``truncated=True`` (trailing-window
+        ring semantics) and still serve their full budget, instead of
+        raising at submit."""
         eng = _engine(lm_setup, cache_len=8)
-        with pytest.raises(ValueError, match="cache positions"):
-            eng.submit(Request(rid=0, prompt=np.arange(12, dtype=np.int32),
-                               max_new_tokens=1))
+        long_prompt = Request(rid=0, prompt=np.arange(12, dtype=np.int32),
+                              max_new_tokens=1)
         # decode growth counts too: 5-1+5 > 8
-        with pytest.raises(ValueError, match="cache positions"):
-            eng.submit(Request(rid=1, prompt=np.arange(5, dtype=np.int32),
-                               max_new_tokens=5))
-        # exact fit (5-1+4 == 8) is admitted and completes
+        growth = Request(rid=1, prompt=np.arange(5, dtype=np.int32),
+                         max_new_tokens=5)
+        # exact fit (5-1+4 == 8) stays untruncated
         ok = Request(rid=2, prompt=np.arange(5, dtype=np.int32),
                      max_new_tokens=4)
-        eng.submit(ok)
-        # bypassing submit() must not break the wave for other requests
-        bad = Request(rid=3, prompt=np.arange(12, dtype=np.int32),
-                      max_new_tokens=4)
-        eng.scheduler.submit(bad, now=0.0)
+        for r in (long_prompt, growth, ok):
+            eng.submit(r)
         eng.run_until_drained()
-        assert ok.done and ok.new_tokens == 4 and ok.error is None
-        assert bad.done and bad.new_tokens == 0 and bad.error
-        assert set(eng.completed) == {2, 3}
+        assert set(eng.completed) == {0, 1, 2}
+        for r in (long_prompt, growth, ok):
+            assert r.done and r.error is None
+            assert r.new_tokens == r.max_new_tokens
+            assert r.finish_reason == "length"
+        assert long_prompt.truncated and growth.truncated
+        assert not ok.truncated
 
 
 class TestBatchedPrefill:
     def test_no_decode_per_prompt_token(self, lm_setup):
-        """A prompt of length S admits in one prefill call and decode
-        runs exactly max_new steps — never S teacher-forced decodes."""
+        """A prompt of length S streams through ceil((S-1)/chunk)
+        prefill waves and decode runs exactly max_new steps — never S
+        teacher-forced decodes."""
         cfg = lm_setup[0]
         eng = _engine(lm_setup, prefill="batched", prefill_chunk=8)
         eng.submit(_requests(cfg, [23], [4])[0])
         eng.run_until_drained()
-        assert eng.counters["prefill_calls"] == 1
+        # 22 prompt tokens at chunk 8 -> waves of 8/8/6
+        assert eng.counters["prefill_calls"] == 3
         assert eng.counters["prefill_tokens"] == 22
         assert eng.counters["decode_steps"] == 4
         assert eng.counters["teacher_forced_tokens"] == 0
@@ -152,16 +156,21 @@ class TestBatchedPrefill:
         lengths = [5, 1, 9]          # mixed: one slot needs no prefill
         engines = {}
         for mode in ("batched", "teacher"):
-            eng = ServingEngine(cfg, api, params, batch_slots=3,
-                                cache_len=64, prefill=mode,
-                                prefill_chunk=4)
+            eng = ServingEngine(cfg, api, params,
+                                config=EngineConfig(batch_slots=3,
+                                                    cache_len=64,
+                                                    prefill=mode,
+                                                    prefill_chunk=4))
             for r in _requests(cfg, lengths, [2] * len(lengths)):
                 eng.submit(r)
             eng._admit()
+            while eng._prefill_tick():   # drain the chunked waves
+                pass
             engines[mode] = eng
         fast, slow = engines["batched"], engines["teacher"]
         assert np.array_equal(fast.pos, slow.pos)
-        assert fast.counters["prefill_calls"] == 1
+        # 4 + 8 prompt tokens at chunk 4: two packed waves
+        assert fast.counters["prefill_calls"] == 2
         assert slow.counters["teacher_forced_tokens"] == sum(
             n - 1 for n in lengths)
 
@@ -200,10 +209,13 @@ class TestBatchedPrefill:
         api = registry.build(cfg)
         params = api.init(jax.random.PRNGKey(0))
         with pytest.raises(ValueError, match="not eligible"):
-            ServingEngine(cfg, api, params, batch_slots=2, cache_len=16,
-                          prefill="batched")
+            ServingEngine(cfg, api, params,
+                          config=EngineConfig(batch_slots=2, cache_len=16,
+                                              prefill="batched"))
         # auto mode falls back to teacher forcing and still serves
-        eng = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16)
+        eng = ServingEngine(cfg, api, params,
+                            config=EngineConfig(batch_slots=2,
+                                                cache_len=16))
         assert not eng._fast_prefill
         eng.submit(Request(rid=0, prompt=np.asarray([3, 1, 4], np.int32),
                            max_new_tokens=2))
@@ -218,7 +230,8 @@ class TestBlockedDecode:
     token streams are identical to per-token decode at every block
     size, because batch rows are independent and masked (budget-
     exhausted) slots feed exactly what the per-token engine feeds freed
-    slots (pad token at position 0)."""
+    slots (a pad write at the slot's current frontier position, which
+    the next real write overwrites before any query attends it)."""
 
     LENGTHS = [5, 7, 3, 9, 4, 6]
     BUDGETS = [6, 3, 8, 2, 5, 4]      # mixed: slots mask mid-block
@@ -229,8 +242,9 @@ class TestBlockedDecode:
                                       precision_policy="bf16")
         from repro.models import registry
         api = registry.build(cfg)
-        eng = ServingEngine(cfg, api, lm_setup[2], batch_slots=3,
-                            cache_len=64, **kw)
+        eng = ServingEngine(cfg, api, lm_setup[2],
+                            config=EngineConfig(batch_slots=3,
+                                                cache_len=64, **kw))
         reqs = _requests(cfg, self.LENGTHS, self.BUDGETS)
         for r in reqs:
             eng.submit(r)
@@ -295,9 +309,11 @@ class TestBlockedDecode:
         params = api.init(jax.random.PRNGKey(0))
         scales = calibrate_act_scales(cfg, api, params)
         assert "block/moe/experts" not in scales
-        eng = ServingEngine(cfg, api, params, batch_slots=2,
-                            cache_len=32, decode_block=4,
-                            act_calibration=scales)
+        eng = ServingEngine(cfg, api, params,
+                            config=EngineConfig(batch_slots=2,
+                                                cache_len=32,
+                                                decode_block=4,
+                                                act_calibration=scales))
         assert eng.act_quant_trace_count() == 0
         assert eng.weight_quant_trace_count() == 0
 
@@ -308,20 +324,14 @@ class TestBlockedDecode:
         at block 4 under queue pressure) — rejected at construction."""
         cfg, api, params = lm_setup          # int8_serving, uncalibrated
         with pytest.raises(ValueError, match="per-slot-independent"):
-            ServingEngine(cfg, api, params, batch_slots=2, cache_len=32,
-                          decode_block=4)
+            ServingEngine(cfg, api, params,
+                          config=EngineConfig(batch_slots=2, cache_len=32,
+                                              decode_block=4))
         # calibrated scales decouple the rows: construction succeeds
         from repro.quant.calibrate import calibrate_act_scales
-        ServingEngine(cfg, api, params, batch_slots=2, cache_len=32,
-                      decode_block=4,
-                      act_calibration=calibrate_act_scales(cfg, api,
-                                                           params))
-
-    def test_blocked_requires_greedy(self, lm_setup):
-        cfg, api, params = lm_setup
-        with pytest.raises(ValueError, match="greedy"):
-            ServingEngine(cfg, api, params, batch_slots=2, cache_len=32,
-                          greedy=False, decode_block=4)
+        ServingEngine(cfg, api, params, config=EngineConfig(
+            batch_slots=2, cache_len=32, decode_block=4,
+            act_calibration=calibrate_act_scales(cfg, api, params)))
 
     def test_blocked_equals_per_token_vlm(self):
         """The other eligible family: vlm's position-tagged caches make
@@ -335,8 +345,10 @@ class TestBlockedDecode:
         params = api.init(jax.random.PRNGKey(0))
 
         def run(blk):
-            eng = ServingEngine(cfg, api, params, batch_slots=2,
-                                cache_len=32, decode_block=blk)
+            eng = ServingEngine(cfg, api, params,
+                                config=EngineConfig(batch_slots=2,
+                                                    cache_len=32,
+                                                    decode_block=blk))
             reqs = _requests(cfg, [5, 7, 3, 4], [4, 2, 5, 3])
             for r in reqs:
                 eng.submit(r)
@@ -357,10 +369,228 @@ class TestBlockedDecode:
         api = registry.build(cfg)
         params = api.init(jax.random.PRNGKey(0))
         with pytest.raises(ValueError, match="not eligible"):
-            ServingEngine(cfg, api, params, batch_slots=2, cache_len=16,
-                          decode_block=4)
+            ServingEngine(cfg, api, params,
+                          config=EngineConfig(batch_slots=2, cache_len=16,
+                                              decode_block=4))
         with pytest.raises(ValueError, match="not eligible"):
             registry.make_block_decode(api, 4)
+
+
+# ------------------------------------------------- serving API surfaces
+
+class TestServingAPI:
+    """EngineConfig / SamplingParams redesign: validation at
+    construction, the legacy-kwarg deprecation shim, and per-request
+    sampling plumbed through ``submit()``."""
+
+    def test_engine_config_validation(self):
+        with pytest.raises(ValueError, match="batch_slots"):
+            EngineConfig(batch_slots=0)
+        with pytest.raises(ValueError, match="cache_len"):
+            EngineConfig(cache_len=0)
+        with pytest.raises(ValueError, match="prefill mode"):
+            EngineConfig(prefill="bogus")
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            EngineConfig(prefill_chunk=0)
+        with pytest.raises(ValueError, match="decode_block"):
+            EngineConfig(decode_block=0)
+        with pytest.raises(ValueError, match="eos_id"):
+            EngineConfig(eos_id=-2)
+
+    def test_sampling_params_validation(self):
+        with pytest.raises(ValueError, match="temperature"):
+            SamplingParams(temperature=-0.1)
+        with pytest.raises(ValueError, match="top_k"):
+            SamplingParams(top_k=-1)
+        with pytest.raises(ValueError, match="top_p"):
+            SamplingParams(top_p=0.0)
+        with pytest.raises(ValueError, match="stop_ids"):
+            SamplingParams(stop_ids=(-3,))
+        with pytest.raises(ValueError, match="stop_ids"):
+            SamplingParams(stop_ids=tuple(range(9)))
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            SamplingParams(max_new_tokens=-1)
+        assert SamplingParams().greedy
+        assert not SamplingParams(temperature=0.7).greedy
+        assert SamplingParams(stop_ids=[3, 1]).stop_ids == (3, 1)
+
+    def test_from_legacy_kwargs(self):
+        legacy = EngineConfig.from_legacy_kwargs(
+            {"batch_slots": 2, "decode_block": 4, "greedy": True})
+        assert legacy == EngineConfig(batch_slots=2, decode_block=4)
+        with pytest.raises(TypeError, match="unknown"):
+            EngineConfig.from_legacy_kwargs({"slots": 2})
+
+    def test_legacy_kwargs_deprecation_shim(self, lm_setup):
+        cfg, api, params = lm_setup
+        with pytest.warns(DeprecationWarning, match="EngineConfig"):
+            eng = ServingEngine(cfg, api, params, batch_slots=2,
+                                cache_len=32, greedy=True)
+        assert eng.config == EngineConfig(batch_slots=2, cache_len=32)
+        # a legacy-constructed engine still serves
+        eng.submit(Request(rid=0, prompt=np.asarray([3, 1, 4], np.int32),
+                           max_new_tokens=2))
+        eng.run_until_drained()
+        assert eng.completed[0].new_tokens == 2
+        with pytest.raises(TypeError, match="not both"):
+            ServingEngine(cfg, api, params, config=EngineConfig(),
+                          batch_slots=2)
+
+    def test_submit_validates_sampling(self, lm_setup):
+        eng = _engine(lm_setup)
+        bad = Request(rid=0, prompt=np.zeros(3, np.int32))
+        bad.sampling = {"temperature": 1.0}
+        with pytest.raises(TypeError, match="SamplingParams"):
+            eng.submit(bad)
+        # engine-wide eos_id counts against the per-slot stop slots
+        eng2 = _engine(lm_setup, eos_id=5)
+        full = Request(rid=1, prompt=np.zeros(3, np.int32),
+                       sampling=SamplingParams(stop_ids=(1, 2, 3, 4)))
+        with pytest.raises(ValueError, match="stop slots"):
+            eng2.submit(full)
+
+    def test_sampling_budget_overrides_request(self, lm_setup):
+        cfg = lm_setup[0]
+        eng = _engine(lm_setup)
+        req = _requests(cfg, [5], [8])[0]
+        req.sampling = SamplingParams(max_new_tokens=3)
+        eng.submit(req)
+        eng.run_until_drained()
+        assert req.new_tokens == 3 and req.finish_reason == "length"
+
+
+class TestSampledDecode:
+    """On-device sampling: per-request seeded PRNG keys ride the decode
+    carry, so sampled streams are reproducible and invariant to
+    decode_block — and greedy rows in a mixed batch stay bit-identical
+    to the all-greedy program (argmax on raw logits)."""
+
+    def _run(self, lm_setup, sampling_by_rid, blk=1, engine_seed=0):
+        cfg = dataclasses.replace(lm_setup[0], precision_policy="bf16")
+        from repro.models import registry
+        api = registry.build(cfg)
+        eng = ServingEngine(cfg, api, lm_setup[2],
+                            config=EngineConfig(batch_slots=2,
+                                                cache_len=64,
+                                                decode_block=blk,
+                                                seed=engine_seed))
+        reqs = _requests(cfg, [5, 7, 3], [8, 6, 7])
+        for r in reqs:
+            r.sampling = sampling_by_rid.get(r.rid, SamplingParams())
+            eng.submit(r)
+        eng.run_until_drained()
+        return {r.rid: list(r.tokens) for r in reqs}
+
+    def test_seeded_sampling_deterministic_and_block_invariant(
+            self, lm_setup):
+        sp = {0: SamplingParams(temperature=0.8, seed=7),
+              1: SamplingParams(temperature=1.0, top_k=8, seed=7),
+              2: SamplingParams(temperature=0.9, top_p=0.8, seed=7)}
+        a = self._run(lm_setup, sp, blk=1)
+        b = self._run(lm_setup, sp, blk=1)
+        assert a == b, "same seeds must reproduce the streams"
+        for blk in (2, 4):
+            assert self._run(lm_setup, sp, blk=blk) == a, \
+                f"decode_block={blk} changed a sampled stream"
+
+    def test_engine_seed_fold_in_reproducible_and_distinct(
+            self, lm_setup):
+        hot = {i: SamplingParams(temperature=1.0) for i in range(3)}
+        a = self._run(lm_setup, hot, engine_seed=0)
+        b = self._run(lm_setup, hot, engine_seed=0)
+        c = self._run(lm_setup, hot, engine_seed=123)
+        assert a == b, "engine-seed fold_in must be reproducible"
+        assert a != c, "different engine seeds should move the streams"
+
+    def test_greedy_rows_unchanged_by_sampled_neighbors(self, lm_setup):
+        base = self._run(lm_setup, {})          # all greedy
+        mixed = self._run(lm_setup, {1: SamplingParams(temperature=1.0,
+                                                       seed=3)})
+        assert mixed[0] == base[0] and mixed[2] == base[2]
+        assert mixed[1] != base[1]
+
+
+class TestContinuousServing:
+    """The continuous-batching loop (chunked prefill continuation +
+    mid-block admission + EOS stopping) must not change greedy token
+    streams — it only changes WHEN work is dispatched. Compared against
+    the flags-off engine (the PR-5 between-block baseline) on the same
+    staggered arrival trace."""
+
+    LENGTHS = [6, 18, 4, 9, 5, 23]
+    BUDGETS = [2, 12, 3, 12, 4, 12]   # heterogeneous: blocks cut short
+    SUBMIT_TICKS = [0, 0, 1, 2, 4, 6]
+
+    def _drive(self, eng, reqs, ticks):
+        """Tick-driven open loop: submit each request at its trace tick
+        while the engine keeps stepping."""
+        order = sorted(range(len(reqs)), key=lambda i: ticks[i])
+        i, tick = 0, 0
+        while i < len(order) or eng.has_pending():
+            while i < len(order) and ticks[order[i]] <= tick:
+                eng.submit(reqs[order[i]])
+                i += 1
+            if eng.has_pending():
+                eng.step()
+            tick += 1
+        return {r.rid: list(r.tokens) for r in reqs}
+
+    def _run(self, lm_setup, flags_on, blk=4, stops=None):
+        cfg = dataclasses.replace(lm_setup[0], precision_policy="bf16")
+        from repro.models import registry
+        api = registry.build(cfg)
+        eng = ServingEngine(cfg, api, lm_setup[2], config=EngineConfig(
+            batch_slots=2, cache_len=64, decode_block=blk,
+            prefill_chunk=4, mid_block_admission=flags_on,
+            eos_stopping=flags_on))
+        reqs = _requests(cfg, self.LENGTHS, self.BUDGETS)
+        for r in reqs:
+            if stops and r.rid in stops:
+                r.sampling = SamplingParams(stop_ids=(stops[r.rid],))
+        toks = self._drive(eng, reqs, self.SUBMIT_TICKS)
+        return toks, reqs, eng
+
+    def test_continuous_equals_flags_off_engine(self, lm_setup):
+        base, _, ref = self._run(lm_setup, flags_on=False)
+        toks, _, eng = self._run(lm_setup, flags_on=True)
+        assert toks == base, "continuous flags changed a greedy stream"
+        for rid in range(len(self.LENGTHS)):
+            assert len(base[rid]) == self.LENGTHS[rid] + self.BUDGETS[rid]
+        assert ref.counters["short_blocks"] == 0
+        assert ref.counters["mid_block_admits"] == 0
+        assert eng.counters["short_blocks"] > 0
+        assert eng.counters["mid_block_admits"] > 0
+        # both stream long prompts through chunked waves, never teacher
+        for e in (ref, eng):
+            assert e.counters["prefill_calls"] >= 5
+            assert e.counters["teacher_forced_tokens"] == 0
+        # trimming blocks to admissions never costs decode work
+        assert eng.counters["decode_steps"] <= ref.counters["decode_steps"]
+
+    def test_eos_stops_blocked_equals_per_token(self, lm_setup):
+        base, _, _ = self._run(lm_setup, flags_on=False)
+        # harvest stop tokens from the greedy streams so they fire
+        stops = {1: base[1][self.LENGTHS[1] + 3],
+                 3: base[3][self.LENGTHS[3] + 2]}
+        blocked, breqs, beng = self._run(lm_setup, flags_on=True,
+                                         stops=stops)
+        tick, treqs, teng = self._run(lm_setup, flags_on=True, blk=1,
+                                      stops=stops)
+        assert blocked == tick, "EOS stopping diverged blocked vs tick"
+        assert beng.counters["eos_stops"] == len(stops)
+        assert teng.counters["eos_stops"] == len(stops)
+        for rid, stop_tok in stops.items():
+            r = breqs[rid]
+            assert r.finish_reason == "stop"
+            assert r.tokens[-1] == stop_tok
+            assert r.new_tokens < self.BUDGETS[rid]
+            # cut at the FIRST occurrence, as a prefix of the free run
+            gen = r.tokens[self.LENGTHS[rid]:]
+            assert stop_tok not in gen[:-1]
+            assert base[rid][:len(r.tokens)] == r.tokens
+        for r in breqs:
+            if r.rid not in stops:
+                assert r.finish_reason == "length"
 
 
 class TestRoutingReport:
@@ -386,7 +616,9 @@ class TestRoutingReport:
                                   precision_policy=f"plan:{path}")
         api = registry.build(cfg)
         params = api.init(jax.random.PRNGKey(0))
-        eng = ServingEngine(cfg, api, params, batch_slots=2, cache_len=16)
+        eng = ServingEngine(cfg, api, params,
+                            config=EngineConfig(batch_slots=2,
+                                                cache_len=16))
         routes = eng.routing_report()
         assert routes, "decode step routed no projections"
         policy = plan.to_policy()
@@ -399,10 +631,13 @@ class TestRoutingReport:
 
 def test_launch_serve_shim():
     from repro.launch import serve as shim
+    from repro.serving import config as cfg_mod
     from repro.serving import engine as eng_mod
     assert shim.ServingEngine is eng_mod.ServingEngine
     assert shim.Request is eng_mod.Request
     assert shim.make_serve_fns is eng_mod.make_serve_fns
+    assert shim.EngineConfig is cfg_mod.EngineConfig
+    assert shim.SamplingParams is cfg_mod.SamplingParams
 
 
 # ------------------------------------------------------------ scheduler
@@ -463,7 +698,8 @@ def two_replicas(lm_setup):
     cfg, _, params = lm_setup
     base = dataclasses.replace(cfg, precision_policy="bf16")
     return build_replicas(base, ("int8_serving", "bf16"), params=params,
-                          batch_slots=2, cache_len=32)
+                          config=EngineConfig(batch_slots=2,
+                                              cache_len=32))
 
 
 class TestRouter:
@@ -564,3 +800,25 @@ class TestMetrics:
             assert m[key] and m[key]["p50"] >= 0.0
         assert m["counters"]["prefill_calls"] >= 1
         assert m["queue"] == 0 and m["active_slots"] == 0
+        for key in ("short_blocks", "mid_block_admits", "eos_stops"):
+            assert key in m["counters"]
+
+    def test_slo_report(self):
+        def req(rid, submit, first, finish, n_new):
+            r = Request(rid=rid, prompt=np.zeros(2, np.int32))
+            r.tokens = [0, 0] + [1] * n_new
+            r.submit_time = submit
+            r.first_token_time, r.finish_time = first, finish
+            return r
+
+        reqs = [req(0, 0.0, 0.5, 2.0, 10),    # TTFT 0.5 <= 1.0: attains
+                req(1, 0.0, 2.0, 4.0, 6),     # TTFT 2.0 > 1.0: misses
+                Request(rid=2, prompt=np.zeros(2, np.int32))]  # no token
+        rep = slo_report(reqs, ttft_slo_s=1.0)
+        assert rep["n"] == 2                  # tokenless one excluded
+        assert rep["attainment"] == pytest.approx(0.5)
+        # goodput counts attaining tokens only, over the 0.0->4.0 span
+        assert rep["goodput_tok_per_s"] == pytest.approx(10 / 4.0)
+        empty = slo_report([], ttft_slo_s=1.0)
+        assert empty["attainment"] is None
+        assert empty["goodput_tok_per_s"] is None and empty["n"] == 0
