@@ -35,11 +35,17 @@ events are guaranteed; the baseline cannot honour them and burns the
 full budget. Reported: TTFT p50/p95, SLO attainment (deadline = the
 baseline's own p50 TTFT) and goodput (``metrics.slo_report``).
 
-Emits two artifacts:
+The TRACE OVERHEAD section measures the observability tax: the same
+prepared int8 engine with ``EngineConfig(trace=True)`` against trace
+off, interleaved best-of-N passes. Span recording must observe, not
+perturb — the ``trace_overhead`` block guards the traced throughput
+within 5% of untraced.
 
-* ``serve_bench.json`` — full per-policy detail (back-compat name);
-* ``BENCH_serving.json`` — the compact trajectory row ``benchmarks/run.py``
-  tracks across PRs, like ``BENCH_autotune``.
+Emits ONE artifact, ``BENCH_serving.json``: the compact trajectory row
+``benchmarks/run.py`` tracks across PRs (like ``BENCH_autotune``), with
+the full per-policy/router/bursty breakdown under its ``detail`` key.
+(The old duplicate ``serve_bench.json`` is retired — one file, one
+schema.)
 """
 import dataclasses
 import time
@@ -334,6 +340,39 @@ def _bench_bursty():
     return out
 
 
+def _bench_trace_overhead(repeats: int = 3):
+    """Tracing must observe, not perturb: the same prepared int8
+    engine with spans on vs off, interleaved best-of-``repeats`` timed
+    passes. Returns the ``trace_overhead`` summary block whose
+    ``within_5pct`` flag guards the observability tax."""
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy="int8_serving")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engines = {}
+    calibration, p = "auto", params
+    for name, trace in (("off", False), ("on", True)):
+        eng = ServingEngine(cfg, api, p, config=EngineConfig(
+            batch_slots=4, cache_len=128, decode_block=8,
+            act_calibration=calibration, trace=trace))
+        calibration, p = eng.act_scales, eng.params
+        _warmup(eng)
+        engines[name] = eng
+    best = {k: 0.0 for k in engines}
+    for _ in range(repeats):
+        for name, eng in engines.items():
+            tok_s, _, _ = _timed_pass(eng, cfg)
+            best[name] = max(best[name], tok_s)
+    overhead = 1.0 - best["on"] / max(best["off"], 1e-9)
+    return {
+        "tok_per_s_trace_off": best["off"],
+        "tok_per_s_trace_on": best["on"],
+        "overhead_frac": overhead,
+        "trace_events": len(engines["on"].tracer.events),
+        "within_5pct": overhead <= 0.05,
+    }
+
+
 def run(verbose: bool = True, repeats: int = 3):
     # build + warm every engine of every policy FIRST, then interleave
     # the timed repeat sweeps across policies: each engine's
@@ -381,8 +420,16 @@ def run(verbose: bool = True, repeats: int = 3):
                 f"goodput={b['goodput_tok_per_s']:.1f} tok/s "
                 f"(eos_stops={b['counters']['eos_stops']}, "
                 f"mid_block={b['counters']['mid_block_admits']})")
-    emit("serve_bench", {**results, "router": router_r,
-                         "bursty": bursty})
+    trace_ov = _bench_trace_overhead(repeats)
+    if verbose:
+        row("serve/trace-overhead",
+            trace_ov["overhead_frac"] * 1e6,
+            f"{trace_ov['tok_per_s_trace_on']:.1f} tok/s traced vs "
+            f"{trace_ov['tok_per_s_trace_off']:.1f} untraced "
+            f"({trace_ov['overhead_frac'] * 100:+.1f}%, "
+            f"{trace_ov['trace_events']} events)")
+        if not trace_ov["within_5pct"]:
+            print("WARNING: tracing overhead exceeds the 5% budget")
 
     base = results["bf16"]["tok_per_s"]
     summary = {
@@ -439,6 +486,10 @@ def run(verbose: bool = True, repeats: int = 3):
             "ttft_p95_speedup": bursty["ttft_p95_speedup"],
             "goodput_speedup": bursty["goodput_speedup"],
         },
+        "trace_overhead": trace_ov,
+        # full per-policy/router/bursty breakdown (formerly the
+        # separate serve_bench.json artifact)
+        "detail": {**results, "router": router_r, "bursty": bursty},
     }
     emit("BENCH_serving", summary)
     if verbose:

@@ -278,7 +278,7 @@ class DecodeCarry(NamedTuple):
 
 
 def make_block_decode(api: "ModelAPI", n: int, policy=None,
-                      sample: bool = False) -> Callable:
+                      sample: bool = False, tracer=None) -> Callable:
     """Generic multi-token decode block: a ``lax.scan`` of ``n``
     ``api.decode_step`` calls with on-device token selection.
 
@@ -314,7 +314,13 @@ def make_block_decode(api: "ModelAPI", n: int, policy=None,
     routes specs from; engines pass their eagerly-resolved policy so a
     ``plan:`` file that disappears after construction (or a transient
     registered policy) cannot fail the first blocked dispatch. Resolved
-    here — never at trace time — when omitted."""
+    here — never at trace time — when omitted.
+
+    ``tracer`` (an :class:`repro.obs.Tracer`) marks each jax trace of
+    the program with an instant event: the body below runs exactly once
+    per compile (jit caches the traced program afterwards), so the
+    marker pairs with the wall-clock ``compile:*`` span the engine's
+    ``traced_jit`` wrapper records around the same dispatch."""
     if not block_decode_eligible(api.cfg):
         raise ValueError(
             f"family {api.cfg.family!r} is not eligible for blocked "
@@ -326,6 +332,12 @@ def make_block_decode(api: "ModelAPI", n: int, policy=None,
     def run(params, carry, state):
         from repro.models.sampling import sample_tokens
         from repro.quant.prepare import stage_params
+        if tracer is not None:
+            # this function body executes only while jax traces the
+            # program (once per compile): an instant here timestamps
+            # the trace phase of each block-decode compilation
+            tracer.instant(f"jax_trace:block_decode[n={n}]",
+                           cat="compile")
         params = stage_params(params, policy, projection_paths(api.cfg))
         c = carry
 

@@ -1,0 +1,101 @@
+"""Per-replica measured serving statistics for online cost correction.
+
+:class:`ReplicaStats` is the bridge between an engine's tick loop and
+the router's cost model: every tick the engine feeds ``on_tick(now,
+new_tokens, queue_depth)`` and every first token feeds
+``observe_ttft``; the router reads the EWMA throughput, current queue
+depth and sliding-window p95 TTFT through ``snapshot()`` and blends
+them into ``replica_cost``'s static simulator estimate
+(``cost_correction="online"``).
+
+EWMA over per-tick instantaneous rates (``new_tokens / dt``) rather
+than a cumulative average: the router must react to a replica that
+*became* slow (noisy neighbor, thermal, bigger requests), and a
+cumulative mean would take the whole history to move. All timestamps
+come from the caller's clock (the engine's injected one), so tests
+drive the statistics with synthetic time.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+
+class ReplicaStats:
+    """EWMA tok/s + queue depth + sliding-window TTFT percentiles.
+
+    ``alpha`` is the EWMA weight of the newest per-tick rate sample;
+    ``window`` bounds the TTFT reservoir (p95 over the last ``window``
+    first tokens). Idle ticks (zero active slots and zero new tokens)
+    are excluded from the throughput EWMA — an engine waiting for
+    traffic is not a slow engine.
+    """
+
+    __slots__ = ("alpha", "window", "tok_per_s", "queue_depth",
+                 "active_slots", "ticks", "_last_time", "_ttfts")
+
+    def __init__(self, alpha: float = 0.2, window: int = 64):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self.window = window
+        self.tok_per_s: Optional[float] = None    # None until measured
+        self.queue_depth: int = 0
+        self.active_slots: int = 0
+        self.ticks: int = 0
+        self._last_time: Optional[float] = None
+        self._ttfts: Deque[float] = collections.deque(maxlen=window)
+
+    def on_tick(self, now: float, new_tokens: int, queue_depth: int,
+                active_slots: int = 0):
+        """One engine tick: ``new_tokens`` generated since the last
+        call, current queue depth and busy slots."""
+        self.ticks += 1
+        self.queue_depth = int(queue_depth)
+        self.active_slots = int(active_slots)
+        last, self._last_time = self._last_time, now
+        if last is None:
+            return
+        dt = now - last
+        if dt <= 0:
+            return                      # synthetic clocks may not advance
+        if new_tokens == 0 and active_slots == 0:
+            return                      # idle tick: no throughput signal
+        rate = new_tokens / dt
+        if self.tok_per_s is None:
+            self.tok_per_s = rate
+        else:
+            self.tok_per_s = (self.alpha * rate
+                              + (1.0 - self.alpha) * self.tok_per_s)
+
+    def observe_ttft(self, ttft_s: float):
+        self._ttfts.append(float(ttft_s))
+
+    @property
+    def p95_ttft_s(self) -> Optional[float]:
+        if not self._ttfts:
+            return None
+        return float(np.percentile(np.asarray(self._ttfts), 95))
+
+    @property
+    def measured(self) -> bool:
+        """Has at least one throughput sample landed?"""
+        return self.tok_per_s is not None
+
+    def snapshot(self) -> Dict:
+        return {
+            "tok_per_s": self.tok_per_s,
+            "queue_depth": self.queue_depth,
+            "active_slots": self.active_slots,
+            "p95_ttft_s": self.p95_ttft_s,
+            "ttft_samples": len(self._ttfts),
+            "ticks": self.ticks,
+        }
+
+    def __repr__(self):
+        tps = "unmeasured" if self.tok_per_s is None \
+            else f"{self.tok_per_s:.1f} tok/s"
+        return (f"ReplicaStats({tps}, queue={self.queue_depth}, "
+                f"ticks={self.ticks})")

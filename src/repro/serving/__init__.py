@@ -9,6 +9,14 @@ precision policy or searched ``PrecisionPlan`` (``router``), with
 per-request latency + SLO metrics (``metrics``). ``repro.launch.serve``
 remains a thin compat shim.
 
+Observability lives in ``repro.obs``: engines run typed metrics
+(``MetricsRegistry`` behind the dict-compatible ``counters`` view),
+record request-lifecycle / tick-phase / compile spans when
+``EngineConfig(trace=True)`` (``engine.dump_trace(path)`` exports
+Chrome trace-event JSON; ``tools/trace_report.py`` summarizes it), and
+publish measured ``ReplicaStats`` that ``Router``'s
+``cost_correction="online"`` blends into the static replica cost.
+
 Public configuration surfaces (``config``):
 
 * :class:`EngineConfig` — one frozen dataclass of engine-level tuning

@@ -42,6 +42,16 @@ class EngineConfig:
     ``eos_id``) inside the blocked scan, freeing slots and budget
     mid-block. Turning both off reproduces the PR-5 between-block
     engine — the ablation baseline.
+
+    Observability (``repro.obs``): ``trace=True`` records request
+    lifecycle + tick-phase + compile spans on the engine's
+    :class:`~repro.obs.Tracer` (``engine.dump_trace(path)`` exports
+    Chrome trace-event JSON; tracing off costs nothing).
+    ``cost_correction`` declares how a router should cost this replica:
+    ``"static"`` keeps the simulator estimate, ``"online"`` blends in
+    the measured :class:`~repro.obs.ReplicaStats` (EWMA tok/s over
+    per-tick samples with weight ``stats_alpha``; TTFT p95 and rolling
+    gauges over the last ``stats_window`` samples).
     """
 
     batch_slots: int = 4
@@ -55,6 +65,10 @@ class EngineConfig:
     eos_stopping: bool = True
     eos_id: Optional[int] = None       # engine-wide stop id (e.g. <eos>)
     seed: int = 0                      # base PRNG seed for sampling
+    trace: bool = False                # record spans (obs.Tracer)
+    cost_correction: str = "static"    # static | online (router costing)
+    stats_window: int = 64             # rolling gauge / TTFT window
+    stats_alpha: float = 0.2           # EWMA weight of newest rate sample
 
     def __post_init__(self):
         if self.batch_slots < 1:
@@ -75,6 +89,16 @@ class EngineConfig:
         if self.eos_id is not None and self.eos_id < 0:
             raise ValueError(f"eos_id must be a token id, got "
                              f"{self.eos_id}")
+        if self.cost_correction not in ("static", "online"):
+            raise ValueError(
+                f"cost_correction must be 'static' or 'online', got "
+                f"{self.cost_correction!r}")
+        if self.stats_window < 1:
+            raise ValueError(f"stats_window must be >= 1, got "
+                             f"{self.stats_window}")
+        if not 0.0 < self.stats_alpha <= 1.0:
+            raise ValueError(f"stats_alpha must be in (0, 1], got "
+                             f"{self.stats_alpha}")
 
     # legacy kwargs of the pre-EngineConfig ServingEngine signature that
     # map 1:1 onto config fields ('greedy' is accepted and ignored —

@@ -69,6 +69,7 @@ from jax.sharding import Mesh
 from repro.configs.base import ModelConfig
 from repro.core import policy as policy_mod
 from repro.models import registry
+from repro.obs import MetricsRegistry, ReplicaStats, Tracer, traced_jit
 from repro.parallel import sharding as shd
 from repro.serving.config import (MAX_STOP_IDS, EngineConfig,
                                   SamplingParams)
@@ -227,15 +228,29 @@ class ServingEngine:
                     f"({sorted(uncovered)[:3]}...); calibrate static "
                     "activation scales (act_calibration='auto' or a "
                     "quant.calibrate dict) or serve exact int kernels")
-        self.counters = {"ticks": 0, "decode_steps": 0, "host_syncs": 0,
-                         "prefill_calls": 0, "prefill_tokens": 0,
-                         "teacher_forced_tokens": 0,
-                         "admitted": 0, "submitted": 0,
-                         "short_blocks": 0, "mid_block_admits": 0,
-                         "eos_stops": 0}
-        self._decode = jax.jit(
-            lambda p, tok, pos, c: api.decode_step(
-                p, {"token": tok, "pos": pos}, c))
+        # observability: typed metrics behind a dict-compatible view
+        # (metrics()["counters"] schema unchanged), a span tracer on the
+        # engine clock (free when config.trace is off) and the measured
+        # per-replica stats the router's online cost correction reads
+        self.registry = MetricsRegistry()
+        for k in ("ticks", "decode_steps", "host_syncs",
+                  "prefill_calls", "prefill_tokens",
+                  "teacher_forced_tokens", "admitted", "submitted",
+                  "short_blocks", "mid_block_admits", "eos_stops"):
+            self.registry.counter(k)
+        self.counters = self.registry.counters_view()
+        self.tracer = Tracer(clock=self.clock, enabled=self.config.trace)
+        self.stats = ReplicaStats(alpha=self.config.stats_alpha,
+                                  window=self.config.stats_window)
+        w = self.config.stats_window
+        self._g_tok = self.registry.rolling("tok_per_tick", w)
+        self._g_queue = self.registry.rolling("queue_depth", w)
+        self._g_occ = self.registry.rolling("batch_occupancy", w)
+        self._g_short = self.registry.rolling("short_block", w)
+        self._decode = traced_jit(
+            jax.jit(lambda p, tok, pos, c: api.decode_step(
+                p, {"token": tok, "pos": pos}, c)),
+            "decode_step", self.tracer)
         # per-slot sampling state mirrored on host, scattered into the
         # decode programs per dispatch (rows reset when slots free)
         self._temp = np.zeros(self.b, np.float32)
@@ -245,7 +260,8 @@ class ServingEngine:
         self._keys = np.zeros((self.b, 2), np.uint32)
         self._stop_sets: List[frozenset] = [frozenset()] * self.b
         from repro.models.sampling import sample_tokens
-        self._select = jax.jit(sample_tokens)
+        self._select = traced_jit(jax.jit(sample_tokens), "select",
+                                  self.tracer)
         # effective prefill chunk: bounded by the smallest cache ring so
         # a chunk's positions occupy distinct slots within each row
         # (SWA groups cap at their window)
@@ -256,10 +272,11 @@ class ServingEngine:
                         self.caches, is_leaf=lambda x: hasattr(x, "pos"))]
             self.prefill_chunk = max(
                 min(self.prefill_chunk, min(caps), self.cache_len), 1)
-            self._prefill_chunk_fn = jax.jit(
-                lambda p, tokens, offs, lens, c: api.prefill_chunk(
+            self._prefill_chunk_fn = traced_jit(
+                jax.jit(lambda p, tokens, offs, lens, c: api.prefill_chunk(
                     p, {"tokens": tokens, "offsets": offs,
-                        "lengths": lens}, c))
+                        "lengths": lens}, c)),
+                "prefill_chunk", self.tracer)
         # blocked-decode programs, one jit cache entry per (block
         # length, sample?) pair — at most 2 * decode_block compiles
         self._block_fns: Dict[Tuple[int, bool], Callable] = {}
@@ -403,11 +420,15 @@ class ServingEngine:
         return self._trace_decode(mplinear.count_act_quant)[0]
 
     def metrics(self) -> Dict:
-        """Aggregate request latency metrics + engine counters."""
+        """Aggregate request latency metrics + engine counters (the
+        ``counters`` block keeps the pre-registry plain-dict schema),
+        plus the rolling tick gauges and the measured replica stats the
+        router's online cost correction reads."""
         from repro.serving.metrics import summarize_requests
         m = summarize_requests(self.completed.values())
         m["counters"] = dict(self.counters)
         m["queue"] = len(self.scheduler)
+        m["queue_highwater"] = self.scheduler.depth_highwater
         m["active_slots"] = sum(r is not None for r in self.slot_req)
         m["prepared_weights"] = self.prepared
         m["act_calibrated"] = self.act_scales is not None
@@ -415,7 +436,22 @@ class ServingEngine:
         m["mid_block_admission"] = self.config.mid_block_admission
         m["eos_stopping"] = self.config.eos_stopping
         m["weight_bytes"] = self.weight_bytes()
+        m["gauges"] = self.registry.snapshot()["rolling"]
+        m["replica_stats"] = self.stats.snapshot()
+        m["trace"] = {"enabled": self.tracer.enabled,
+                      "events": len(self.tracer.events),
+                      "dropped": self.tracer.dropped}
         return m
+
+    def dump_trace(self, path: str) -> str:
+        """Export the recorded spans as Chrome trace-event JSON (load
+        at https://ui.perfetto.dev or ``chrome://tracing``); requires
+        ``EngineConfig(trace=True)``."""
+        if not self.tracer.enabled:
+            raise RuntimeError(
+                "tracing is off — construct the engine with "
+                "EngineConfig(trace=True)")
+        return self.tracer.dump(path)
 
     def has_pending(self) -> bool:
         return (len(self.scheduler) > 0
@@ -444,6 +480,9 @@ class ServingEngine:
                 f"{MAX_STOP_IDS} per-slot stop slots")
         self.scheduler.submit(req, now=self.clock())
         self.counters["submitted"] += 1
+        self.tracer.req_begin(req.rid, "queued",
+                              args={"prompt_len": len(req.prompt),
+                                    "budget": req.budget})
 
     def _merged_stops(self, req: Request) -> Tuple[int, ...]:
         stops = list(req.sampling.stop_ids)
@@ -490,12 +529,15 @@ class ServingEngine:
             req.admit_time = now
             req.tokens = [int(t) for t in req.prompt]
             self.counters["admitted"] += 1
+            self.tracer.req_end(req.rid, "queued")
             if req.budget <= 0 or len(req.prompt) == 0:
                 # nothing to generate: complete without holding a slot
                 req.done = True
                 req.finish_reason = "length"
                 req.finish_time = now
                 self.completed[req.rid] = req
+                self.tracer.req_instant(req.rid, "finished",
+                                        args={"reason": "length"})
                 continue
             if self._capacity_needed(req) > self.cache_len:
                 # chunked prefill lifted the old admission bound: the
@@ -507,9 +549,12 @@ class ServingEngine:
             if self._last_block_short:
                 self.counters["mid_block_admits"] += 1
             req.prefill_pos = 0
+            self.tracer.req_begin(req.rid, "prefill",
+                                  args={"slot": slot})
             if len(req.prompt) == 1:
                 self.pos[slot] = 0
                 req.next_input = int(req.prompt[0])
+                self._req_decode_start(req)
             elif self._fast_prefill:
                 # chunked continuation: the slot enters the prefilling
                 # state (next_input None) and advances one wave per
@@ -528,6 +573,14 @@ class ServingEngine:
                 self._step_slot_token(slot, int(t))
             req.prefill_pos = len(req.prompt) - 1
             self.counters["teacher_forced_tokens"] += len(req.prompt) - 1
+            self._req_decode_start(req)
+
+    def _req_decode_start(self, req: Request):
+        """Request lifecycle transition: prompt fully consumed, the slot
+        is decodable from the next tick on."""
+        if self.tracer.enabled:
+            self.tracer.req_end(req.rid, "prefill")
+            self.tracer.req_begin(req.rid, "decode")
 
     def _prefill_tick(self) -> bool:
         """Advance every prefilling slot by one chunk in ONE fixed-shape
@@ -551,9 +604,12 @@ class ServingEngine:
             offs[s] = req.prefill_pos
             lens[s] = take
             total += take
-        self.caches = self._prefill_chunk_fn(
-            self.params, jnp.array(tokens), jnp.array(offs),
-            jnp.array(lens), self.caches)
+        with self.tracer.span("prefill_dispatch",
+                              args={"tokens": total,
+                                    "slots": len(pref)}):
+            self.caches = self._prefill_chunk_fn(
+                self.params, jnp.array(tokens), jnp.array(offs),
+                jnp.array(lens), self.caches)
         self.counters["prefill_calls"] += 1
         self.counters["prefill_tokens"] += total
         for s, req in pref:
@@ -561,6 +617,7 @@ class ServingEngine:
             if req.prefill_pos >= len(req.prompt) - 1:
                 self.pos[s] = len(req.prompt) - 1
                 req.next_input = int(req.prompt[-1])
+                self._req_decode_start(req)
             else:
                 self.pos[s] = req.prefill_pos
         return True
@@ -586,8 +643,12 @@ class ServingEngine:
         if fn is None:
             # pass the eagerly-resolved policy: a plan: file deleted
             # after construction must not fail the first dispatch
-            fn = jax.jit(registry.make_block_decode(
-                self.api, n, policy=self.policy, sample=sample))
+            kind = "sample" if sample else "greedy"
+            fn = traced_jit(
+                jax.jit(registry.make_block_decode(
+                    self.api, n, policy=self.policy, sample=sample,
+                    tracer=self.tracer)),
+                f"block_decode[n={n},{kind}]", self.tracer)
             self._block_fns[(n, sample)] = fn
         return fn
 
@@ -598,6 +659,11 @@ class ServingEngine:
         req.finish_reason = reason
         if reason == "stop":
             self.counters["eos_stops"] += 1
+        if self.tracer.enabled:
+            self.tracer.req_end(req.rid, "decode")
+            self.tracer.req_instant(
+                req.rid, "finished",
+                args={"reason": reason, "new_tokens": req.new_tokens})
         self.completed[req.rid] = req
         self.slot_req[s] = None
         self.pos[s] = 0
@@ -626,15 +692,39 @@ class ServingEngine:
             return max(1, min(full, max(cut, self.decode_block // 2)))
         return max(full, 1)
 
+    def _first_token(self, req: Request, now: float):
+        req.first_token_time = now
+        if req.submit_time is not None:
+            self.stats.observe_ttft(now - req.submit_time)
+        self.tracer.req_instant(req.rid, "first_token")
+
+    def _sample_tick(self, new_tokens: int):
+        """Per-tick measured stats: the ReplicaStats EWMA the router's
+        online cost correction reads, plus the rolling gauges
+        ``metrics()['gauges']`` reports."""
+        now = self.clock()
+        occupied = sum(r is not None for r in self.slot_req)
+        depth = len(self.scheduler)
+        self.stats.on_tick(now, new_tokens, depth,
+                           active_slots=occupied)
+        self._g_tok.observe(now, new_tokens)
+        self._g_queue.observe(now, depth)
+        self._g_occ.observe(now, occupied / self.b)
+        if self.decode_block > 1:
+            self._g_short.observe(
+                now, 1.0 if self._last_block_short else 0.0)
+
     def step(self):
         """One engine tick: admit, advance prefilling slots one chunk,
         run one decode block (one host sync) for the decodable slots."""
-        self._admit()
+        with self.tracer.span("admission"):
+            self._admit()
         self.counters["ticks"] += 1
         prefilled = self._fast_prefill and self._prefill_tick()
         active = [s for s, r in enumerate(self.slot_req)
                   if r is not None and r.next_input is not None]
         if not active:
+            self._sample_tick(0)
             return prefilled
         if self.decode_block > 1:
             return self._step_block(active)
@@ -644,34 +734,38 @@ class ServingEngine:
             tok[s, 0] = self.slot_req[s].next_input
         # copying jnp.array: self.pos mutates below while the dispatch
         # may still be reading it (see _step_slot_token)
-        logits, self.caches = self._decode(
-            self.params, jnp.array(tok), jnp.array(self.pos),
-            self.caches)
+        with self.tracer.span("block_dispatch", args={"n": 1}):
+            logits, self.caches = self._decode(
+                self.params, jnp.array(tok), jnp.array(self.pos),
+                self.caches)
         self.counters["decode_steps"] += 1
         self.counters["host_syncs"] += 1
-        if any(self._temp[s] > 0 for s in active):
-            keys2, nxt = self._select(
-                jnp.array(self._keys), logits, jnp.array(self._temp),
-                jnp.array(self._topk), jnp.array(self._topp))
-            nxt = np.asarray(nxt)
-            keys2 = np.asarray(keys2)
-            for s in active:
-                self._keys[s] = keys2[s]
-        else:
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        with self.tracer.span("host_sync"):
+            if any(self._temp[s] > 0 for s in active):
+                keys2, nxt = self._select(
+                    jnp.array(self._keys), logits, jnp.array(self._temp),
+                    jnp.array(self._topk), jnp.array(self._topp))
+                nxt = np.asarray(nxt)
+                keys2 = np.asarray(keys2)
+                for s in active:
+                    self._keys[s] = keys2[s]
+            else:
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
         now = self.clock()
-        for s in active:
-            req = self.slot_req[s]
-            self.pos[s] += 1
-            if req.first_token_time is None:
-                req.first_token_time = now
-            t = int(nxt[s])
-            req.tokens.append(t)
-            req.next_input = t
-            if self.config.eos_stopping and self._stop_hit(s, t):
-                self._finish_slot(s, now, "stop")
-            elif req.new_tokens >= req.budget:
-                self._finish_slot(s, now, "length")
+        with self.tracer.span("harvest"):
+            for s in active:
+                req = self.slot_req[s]
+                self.pos[s] += 1
+                if req.first_token_time is None:
+                    self._first_token(req, now)
+                t = int(nxt[s])
+                req.tokens.append(t)
+                req.next_input = t
+                if self.config.eos_stopping and self._stop_hit(s, t):
+                    self._finish_slot(s, now, "stop")
+                elif req.new_tokens >= req.budget:
+                    self._finish_slot(s, now, "length")
+        self._sample_tick(len(active))
         return True
 
     def _step_block(self, active: List[int]) -> bool:
@@ -699,30 +793,36 @@ class ServingEngine:
             stops=jnp.array(self._stops), temp=jnp.array(self._temp),
             top_k=jnp.array(self._topk), top_p=jnp.array(self._topp),
             keys=jnp.array(self._keys))
-        tokens, out, self.caches = self._block_decode(n, sample)(
-            self.params, carry, self.caches)
-        tokens = np.asarray(tokens)          # ONE host sync per block
-        taken = np.asarray(out.taken)
-        rem_after = np.asarray(out.rem)
-        keys_after = np.asarray(out.keys)
+        with self.tracer.span("block_dispatch", args={"n": n}):
+            tokens, out, self.caches = self._block_decode(n, sample)(
+                self.params, carry, self.caches)
+        with self.tracer.span("host_sync"):
+            tokens = np.asarray(tokens)      # ONE host sync per block
+            taken = np.asarray(out.taken)
+            rem_after = np.asarray(out.rem)
+            keys_after = np.asarray(out.keys)
         self.counters["decode_steps"] += n
         self.counters["host_syncs"] += 1
         now = self.clock()
-        for s in active:
-            req = self.slot_req[s]
-            steps = int(taken[s])            # this slot's active prefix
-            if req.first_token_time is None:
-                req.first_token_time = now
-            req.tokens.extend(int(t) for t in tokens[:steps, s])
-            req.next_input = int(tokens[steps - 1, s])
-            self.pos[s] += steps
-            self._keys[s] = keys_after[s]
-            if int(rem_after[s]) == 0:
-                last = int(tokens[steps - 1, s])
-                reason = "stop" if (self.config.eos_stopping
-                                    and self._stop_hit(s, last)) \
-                    else "length"
-                self._finish_slot(s, now, reason)
+        harvested = 0
+        with self.tracer.span("harvest"):
+            for s in active:
+                req = self.slot_req[s]
+                steps = int(taken[s])        # this slot's active prefix
+                harvested += steps
+                if req.first_token_time is None:
+                    self._first_token(req, now)
+                req.tokens.extend(int(t) for t in tokens[:steps, s])
+                req.next_input = int(tokens[steps - 1, s])
+                self.pos[s] += steps
+                self._keys[s] = keys_after[s]
+                if int(rem_after[s]) == 0:
+                    last = int(tokens[steps - 1, s])
+                    reason = "stop" if (self.config.eos_stopping
+                                        and self._stop_hit(s, last)) \
+                        else "length"
+                    self._finish_slot(s, now, reason)
+        self._sample_tick(harvested)
         return True
 
     def run_until_drained(self, max_ticks: int = 10_000):

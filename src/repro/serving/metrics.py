@@ -8,13 +8,16 @@ tests assert on.
 Schema (``summarize_requests``)::
 
     {"n": int, "new_tokens": int,
-     "ttft_s":        {"p50": .., "p90": .., "p99": .., "mean": .., "max": ..},
-     "queue_delay_s": {...same...},
-     "e2e_s":         {...same...},
-     "tok_per_s_per_request": {...same...}}
+     "ttft_s":        <percentile block>,
+     "queue_delay_s": <percentile block>,
+     "e2e_s":         <percentile block>,
+     "tok_per_s_per_request": <percentile block>}
 
-Percentile blocks are ``{}`` when no request carries the timestamps
-(e.g. nothing completed yet).
+where ``<percentile block>`` is the canonical summary defined once in
+``repro.obs.registry`` (one ``p<N>`` key per entry of ``PERCENTILES``
+plus ``mean``/``max``; ``{}`` when no request carries the timestamps —
+e.g. nothing completed yet). ``PERCENTILES`` and the block builder are
+re-exported here for backward compatibility.
 
 ``slo_report`` layers the serving-quality view on top: SLO attainment
 (fraction of requests whose TTFT meets a deadline) and goodput (tokens
@@ -25,23 +28,18 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, Optional, Sequence
 
-import numpy as np
-
+from repro.obs.registry import PERCENTILES, percentile_block
 from repro.serving.engine import Request
 
-PERCENTILES = (50, 90, 95, 99)
+__all__ = ["PERCENTILES", "percentiles", "request_metrics",
+           "summarize_requests", "slo_report"]
 
 
 def percentiles(values: Sequence[float],
                 ps: Sequence[int] = PERCENTILES) -> Dict[str, float]:
-    """Summary block of a sample; ``{}`` for an empty sample."""
-    xs = np.asarray([v for v in values if v is not None], float)
-    if xs.size == 0:
-        return {}
-    out = {f"p{p}": float(np.percentile(xs, p)) for p in ps}
-    out["mean"] = float(xs.mean())
-    out["max"] = float(xs.max())
-    return out
+    """Summary block of a sample; ``{}`` for an empty sample. Alias of
+    :func:`repro.obs.registry.percentile_block` (the canonical home)."""
+    return percentile_block(values, ps)
 
 
 def request_metrics(req: Request) -> Dict[str, Optional[float]]:
@@ -86,19 +84,30 @@ def slo_report(reqs: Iterable[Request], ttft_slo_s: float) -> Dict:
     earliest submit to the latest finish — so a config that burns the
     batch on requests that miss their deadline scores low even at equal
     raw throughput.
+
+    Mid-run snapshots are fine: when every request is still in flight
+    (first token seen, nothing finished yet) the span falls back to the
+    latest first-token time and goodput is the PARTIAL rate over the
+    tokens generated so far — it used to raise on the empty ``max()``.
+    ``completed`` counts the requests that actually finished.
     """
     rows = [r for r in reqs if r.first_token_time is not None]
     if not rows:
-        return {"n": 0, "ttft_slo_s": float(ttft_slo_s),
+        return {"n": 0, "completed": 0, "ttft_slo_s": float(ttft_slo_s),
                 "attainment": None, "goodput_tok_per_s": None}
     attain = [r for r in rows
               if (r.first_token_time - r.submit_time) <= ttft_slo_s]
+    finished = [r.finish_time for r in rows if r.finish_time is not None]
     t0 = min(r.submit_time for r in rows)
-    t1 = max(r.finish_time for r in rows if r.finish_time is not None)
+    # all-in-flight snapshot: no finish yet, measure up to the latest
+    # first token instead of raising on an empty max()
+    t1 = max(finished) if finished \
+        else max(r.first_token_time for r in rows)
     span = max(t1 - t0, 1e-9)
     good = sum(len(r.tokens) - len(r.prompt) for r in attain)
     return {
         "n": len(rows),
+        "completed": len(finished),
         "ttft_slo_s": float(ttft_slo_s),
         "attainment": len(attain) / len(rows),
         "goodput_tok_per_s": good / span,

@@ -15,6 +15,18 @@ replicas under one of three strategies:
     cheapest load-discounted cycles/token (e.g. the int8 replica).
   * ``least_loaded`` — min (active slots + waiting) / slots.
   * ``round_robin`` — the baseline.
+
+**Measured-cost feedback** (``cost_correction="online"``): the static
+simulator estimate cannot see a replica that *became* slow — a noisy
+neighbor, thermal throttling, a bigger co-resident batch. Every engine
+publishes measured :class:`repro.obs.ReplicaStats` (EWMA tok/s, queue
+depth, p95 TTFT), and the online mode blends the measured
+seconds-per-token into the static cycles score: both are normalized by
+their fleet mean (unit-free), then mixed with weight ``online_blend``
+on the measured term. Replicas without a throughput sample yet fall
+back to their static score, so cold fleets route exactly like
+``"static"``. ``routing_report()`` shows static, measured and
+effective side by side.
 """
 from __future__ import annotations
 
@@ -176,15 +188,62 @@ class Router:
     STRATEGIES = ("plan_aware", "least_loaded", "round_robin")
 
     def __init__(self, replicas: Sequence[Replica],
-                 strategy: str = "plan_aware"):
+                 strategy: str = "plan_aware",
+                 cost_correction: Optional[str] = None,
+                 online_blend: float = 0.75):
         if not replicas:
             raise ValueError("router needs at least one replica")
         if strategy not in self.STRATEGIES:
             raise ValueError(f"unknown strategy {strategy!r} "
                              f"(want one of {self.STRATEGIES})")
+        if cost_correction is None:
+            # inherit the fleet's declaration: one replica asking for
+            # online correction turns it on for the whole cost ranking
+            # (a partially-measured fleet degrades gracefully — see
+            # _effective_costs)
+            cost_correction = "online" if any(
+                r.engine.config.cost_correction == "online"
+                for r in replicas) else "static"
+        if cost_correction not in ("static", "online"):
+            raise ValueError(f"cost_correction must be 'static' or "
+                             f"'online', got {cost_correction!r}")
+        if not 0.0 <= online_blend <= 1.0:
+            raise ValueError(f"online_blend must be in [0, 1], got "
+                             f"{online_blend}")
         self.replicas = list(replicas)
         self.strategy = strategy
+        self.cost_correction = cost_correction
+        self.online_blend = online_blend
         self._rr = 0
+
+    def _effective_costs(self) -> List[float]:
+        """Unit-free cost score per replica, lower is better.
+
+        Static cycles/token and measured seconds/token (1 / EWMA tok/s)
+        live in different units, so each is normalized by its mean over
+        the replicas it exists for; ``online`` blends the two with
+        weight ``online_blend`` on the measured term. Unmeasured
+        replicas (no throughput sample yet) keep their static score —
+        a cold fleet routes exactly like ``cost_correction="static"``.
+        """
+        static = [r.cost.get("cycles_per_token", 0.0)
+                  for r in self.replicas]
+        s_mean = sum(static) / len(static)
+        s_norm = [s / s_mean if s_mean > 0 else 1.0 for s in static]
+        if self.cost_correction != "online":
+            return s_norm
+        spt = [1.0 / r.engine.stats.tok_per_s
+               if r.engine.stats.measured and r.engine.stats.tok_per_s > 0
+               else None
+               for r in self.replicas]
+        measured = [v for v in spt if v is not None]
+        if not measured:
+            return s_norm
+        m_mean = sum(measured) / len(measured)
+        w = self.online_blend
+        return [(1.0 - w) * sn + w * (v / m_mean) if v is not None
+                else sn
+                for sn, v in zip(s_norm, spt)]
 
     def route(self, req: Request) -> Replica:
         if self.strategy == "round_robin":
@@ -195,17 +254,18 @@ class Router:
             return min(enumerate(self.replicas),
                        key=lambda ir: (ir[1].load, ir[0]))[1]
         # plan_aware: accuracy-tagged traffic takes the most accurate
-        # datapath; the rest takes the cheapest cycles/token, discounted
-        # by load so a hot replica spills onto the others
+        # datapath; the rest takes the cheapest (possibly
+        # measurement-corrected) cost score, discounted by load so a
+        # hot replica spills onto the others
         idx = range(len(self.replicas))
         if "accuracy" in req.tags:
             return min(zip(idx, self.replicas),
                        key=lambda ir: (ir[1].cost.get("acc_proxy", 0.0),
                                        ir[1].load, ir[0]))[1]
+        costs = self._effective_costs()
         return min(zip(idx, self.replicas),
-                   key=lambda ir: (
-                       ir[1].cost.get("cycles_per_token", 0.0)
-                       * (1.0 + ir[1].load), ir[0]))[1]
+                   key=lambda ir: (costs[ir[0]] * (1.0 + ir[1].load),
+                                   ir[0]))[1]
 
     def submit(self, req: Request) -> Replica:
         rep = self.route(req)
@@ -247,10 +307,33 @@ class Router:
     def routing_counters(self) -> Dict[str, int]:
         return {rep.name: rep.routed for rep in self.replicas}
 
+    def routing_report(self) -> Dict:
+        """The cost ranking as the router sees it right now: static
+        simulator estimate, measured replica stats, and the effective
+        (possibly blended) score ``route()`` ranks non-accuracy traffic
+        by — the ablation surface for online vs static correction."""
+        costs = self._effective_costs()
+        return {
+            "cost_correction": self.cost_correction,
+            "online_blend": self.online_blend,
+            "replicas": {
+                rep.name: {
+                    "static_cycles_per_token":
+                        rep.cost.get("cycles_per_token", 0.0),
+                    "measured": rep.engine.stats.snapshot(),
+                    "effective_cost": costs[i],
+                    "load": rep.load,
+                    "routed": rep.routed,
+                } for i, rep in enumerate(self.replicas)
+            },
+        }
+
     def report(self) -> Dict:
         """Per-replica routing counters, cost model, and engine metrics."""
         return {
             "strategy": self.strategy,
+            "cost_correction": self.cost_correction,
+            "routing": self.routing_report()["replicas"],
             "replicas": {
                 rep.name: {
                     "policy": rep.policy_name,

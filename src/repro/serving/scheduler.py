@@ -49,6 +49,7 @@ class AdmissionScheduler:
     def __post_init__(self):
         self._waiting: List[Tuple[int, Request]] = []
         self._seq = 0              # FIFO tiebreaker within a class
+        self.depth_highwater = 0   # deepest the queue has ever been
 
     def __len__(self) -> int:
         return len(self._waiting)
@@ -65,6 +66,8 @@ class AdmissionScheduler:
             req.submit_time = now
         self._waiting.append((self._seq, req))
         self._seq += 1
+        if len(self._waiting) > self.depth_highwater:
+            self.depth_highwater = len(self._waiting)
 
     def _promoted(self, req: Request, now: float) -> bool:
         return (req.submit_time is not None

@@ -36,7 +36,19 @@ autotune-smoke cold/warm contract:
     rejected, greedy token streams stay identical to a
     flags-off (PR-5-style between-block) engine on the same trace, and
     the continuous fast path still performs zero dynamic weight/act
-    quants per step.
+    quants per step;
+  * ONLINE COST CORRECTION moves traffic: two same-policy replicas
+    (identical static cost), one slowed through a dilated clock, serve
+    a sequential trickle — static costing tie-breaks every request onto
+    the slow replica, online costing reads the measured throughput gap
+    (``repro.obs.ReplicaStats``) and shifts every request to the fast
+    one;
+  * with ``--trace PATH`` the OBSERVABILITY contract also runs: a
+    traced engine serves the workload and must export a schema-valid,
+    non-empty Chrome trace containing every tick-phase span, every
+    request-lifecycle stage, and at least one ``compile:*`` span (cold
+    engine), with counters identical to an untraced engine on the same
+    workload (tracing observes, never perturbs).
 """
 from __future__ import annotations
 
@@ -196,6 +208,121 @@ def _run_continuous(decode_block: int, seed: int):
     return cont, ref, expected, stops
 
 
+def _run_cost_correction(slots: int, requests: int, seed: int):
+    """Two same-policy replicas, one slowed by a dilated clock, under
+    static vs online costing. Requests drain one at a time so load is
+    zero at every routing decision: the static ranking ties (identical
+    policies) and tie-breaks onto replica 0 — the slow one — while the
+    online ranking reads the measured tok/s gap and picks the fast one.
+    Returns {mode: routing counters}."""
+    import dataclasses
+    import time
+
+    import jax
+
+    from repro.configs import reduced
+    from repro.models import registry
+    from repro.serving.config import EngineConfig
+    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.router import Replica, Router, replica_cost
+
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy="bf16")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    shares = {}
+    for mode in ("static", "online"):
+        replicas = []
+        for name, clock in (("slow", lambda: time.monotonic() * 8.0),
+                            ("fast", time.monotonic)):
+            eng = ServingEngine(cfg, api, params, clock=clock,
+                                config=EngineConfig(batch_slots=slots,
+                                                    cache_len=64))
+            replicas.append(Replica(
+                name=name, policy_name="bf16", engine=eng,
+                cost=replica_cost(cfg, eng.policy)))
+        router = Router(replicas, strategy="plan_aware",
+                        cost_correction=mode)
+        # warm-up: one request per replica seeds the measured stats
+        # (the slow replica's dilated clock stretches its per-tick dt,
+        # so its EWMA tok/s lands ~8x lower)
+        for wid, rep in enumerate(replicas):
+            rep.engine.submit(Request(
+                rid=-(wid + 1),
+                prompt=np.arange(1, 7, dtype=np.int32),
+                max_new_tokens=4))
+            rep.engine.run_until_drained()
+        rng = np.random.default_rng(seed)
+        for rid in range(requests):
+            router.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, 6, dtype=np.int32),
+                max_new_tokens=4))
+            router.run_until_drained()
+        shares[mode] = router.routing_counters()
+    return shares
+
+
+def _run_trace_contract(path: str, requests: int, slots: int,
+                        max_new: int, seed: int):
+    """Traced engine run: a schema-valid non-empty Chrome trace with
+    every tick-phase span, every request-lifecycle stage, and >= 1
+    compile span — and counters identical to an untraced engine on the
+    same workload (tracing observes, never perturbs)."""
+    import dataclasses
+    import json
+
+    import jax
+
+    from repro.configs import reduced
+    from repro.models import registry
+    from repro.obs import validate_chrome_trace
+    from repro.serving.config import EngineConfig
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy="int8_serving")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    scales = None
+    engines = {}
+    for trace in (True, False):
+        eng = ServingEngine(cfg, api, params, config=EngineConfig(
+            batch_slots=slots, cache_len=64, decode_block=4,
+            act_calibration=scales or "auto", trace=trace))
+        scales = eng.act_scales
+        rng = np.random.default_rng(seed)
+        for rid in range(requests):
+            eng.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab,
+                                    int(rng.integers(3, 12)),
+                                    dtype=np.int32),
+                max_new_tokens=max_new))
+        eng.run_until_drained()
+        engines[trace] = eng
+    traced = engines[True]
+    traced.dump_trace(path)
+    with open(path) as f:
+        data = json.load(f)
+    errs = validate_chrome_trace(data)
+    assert not errs, errs[:5]
+    events = data["traceEvents"]
+    assert events, "trace is empty"
+    names = [e["name"] for e in events]
+    for phase in ("admission", "prefill_dispatch", "block_dispatch",
+                  "host_sync", "harvest"):
+        assert phase in names, f"missing tick-phase span {phase!r}"
+    for stage in ("queued", "prefill", "decode", "first_token",
+                  "finished"):
+        assert stage in names, f"missing request span {stage!r}"
+    assert any(str(n).startswith("compile:") for n in names), \
+        "cold traced engine recorded no compile spans"
+    assert dict(traced.counters) == dict(engines[False].counters), \
+        (dict(traced.counters), dict(engines[False].counters))
+    return len(events)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.serving smoke", description=__doc__)
@@ -206,6 +333,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="block size of the fast-path replica (>= 2: "
                          "the contract compares it against per-token)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="also run the observability contract and "
+                         "write the traced engine's Chrome trace here")
     args = ap.parse_args(argv)
     if args.decode_block < 2:
         ap.error("--decode-block must be >= 2 (the blocked replica is "
@@ -320,6 +450,24 @@ def main(argv: Optional[List[str]] = None) -> int:
     assert cont.act_quant_trace_count() == 0, \
         "continuous replica still absmax-reduces activations"
 
+    # --- online cost correction: measured throughput moves traffic off
+    # an artificially slowed replica that static costing cannot see
+    shares = _run_cost_correction(args.slots, requests=6,
+                                  seed=args.seed)
+    assert shares["static"]["slow"] == 6 and \
+        shares["static"]["fast"] == 0, shares["static"]
+    assert shares["online"]["fast"] == 6 and \
+        shares["online"]["slow"] == 0, shares["online"]
+
+    # --- observability: traced run exports a valid Chrome trace and
+    # perturbs nothing (only with --trace: the extra engine pair costs
+    # compiles the default CI smoke doesn't need)
+    trace_events = None
+    if args.trace:
+        trace_events = _run_trace_contract(args.trace, args.requests,
+                                           args.slots, args.max_new,
+                                           args.seed)
+
     for name, rep in report["replicas"].items():
         m = rep["metrics"]
         print(f"replica {name}: routed={rep['routed']} "
@@ -340,5 +488,8 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"{cc['short_blocks']} short blocks, "
           f"{cc['mid_block_admits']} mid-block admits, "
           f"{cc['eos_stops']} EOS stops, streams identical to the "
-          f"flags-off baseline")
+          f"flags-off baseline; cost correction static={shares['static']} "
+          f"online={shares['online']}"
+          + (f"; trace: {trace_events} events -> {args.trace}"
+             if args.trace else ""))
     return 0

@@ -396,6 +396,12 @@ class TestServingAPI:
             EngineConfig(decode_block=0)
         with pytest.raises(ValueError, match="eos_id"):
             EngineConfig(eos_id=-2)
+        with pytest.raises(ValueError, match="cost_correction"):
+            EngineConfig(cost_correction="sometimes")
+        with pytest.raises(ValueError, match="stats_window"):
+            EngineConfig(stats_window=0)
+        with pytest.raises(ValueError, match="stats_alpha"):
+            EngineConfig(stats_alpha=0.0)
 
     def test_sampling_params_validation(self):
         with pytest.raises(ValueError, match="temperature"):
@@ -750,6 +756,45 @@ class TestRouter:
             Router(two_replicas, strategy="nope")
         with pytest.raises(ValueError):
             Router([])
+        with pytest.raises(ValueError, match="cost_correction"):
+            Router(two_replicas, cost_correction="maybe")
+        with pytest.raises(ValueError, match="online_blend"):
+            Router(two_replicas, online_blend=1.5)
+
+    def test_online_cost_correction_shifts_routing(self, two_replicas):
+        """A statically-cheap replica that MEASURES slow loses traffic
+        under online correction; static costing can't see it. Stats are
+        injected directly — the engine-driven path is covered by the
+        serving smoke's dilated-clock contract."""
+        int8, bf16 = two_replicas
+        static = Router(two_replicas, strategy="plan_aware",
+                        cost_correction="static")
+        online = Router(two_replicas, strategy="plan_aware",
+                        cost_correction="online")
+        req = Request(rid=0, prompt=np.zeros(4, np.int32))
+        # the module-scoped fixture's engines may carry measurements
+        # from earlier routing tests — force a cold fleet first
+        saved = (int8.engine.stats.tok_per_s, bf16.engine.stats.tok_per_s)
+        try:
+            int8.engine.stats.tok_per_s = None
+            bf16.engine.stats.tok_per_s = None
+            # cold fleet: no measurements, online ranks like static
+            assert static.route(req).name == "int8_serving"
+            assert online.route(req).name == "int8_serving"
+            int8.engine.stats.tok_per_s = 1.0     # became 100x slower
+            bf16.engine.stats.tok_per_s = 100.0
+            assert static.route(req).name == "int8_serving"
+            assert online.route(req).name == "bf16"
+            rep = online.routing_report()
+            assert rep["cost_correction"] == "online"
+            r8, rb = (rep["replicas"]["int8_serving"],
+                      rep["replicas"]["bf16"])
+            assert r8["static_cycles_per_token"] \
+                < rb["static_cycles_per_token"]
+            assert rb["effective_cost"] < r8["effective_cost"]
+            assert r8["measured"]["tok_per_s"] == 1.0
+        finally:
+            int8.engine.stats.tok_per_s, bf16.engine.stats.tok_per_s = saved
 
     def test_replica_cost_covers_every_group(self, lm_setup):
         """Every projection group must resolve to a policy mode — a
@@ -816,9 +861,110 @@ class TestMetrics:
                 Request(rid=2, prompt=np.zeros(2, np.int32))]  # no token
         rep = slo_report(reqs, ttft_slo_s=1.0)
         assert rep["n"] == 2                  # tokenless one excluded
+        assert rep["completed"] == 2
         assert rep["attainment"] == pytest.approx(0.5)
         # goodput counts attaining tokens only, over the 0.0->4.0 span
         assert rep["goodput_tok_per_s"] == pytest.approx(10 / 4.0)
         empty = slo_report([], ttft_slo_s=1.0)
         assert empty["attainment"] is None
         assert empty["goodput_tok_per_s"] is None and empty["n"] == 0
+
+    def test_slo_report_all_in_flight(self):
+        """Mid-run snapshot with nothing finished: used to raise on the
+        empty ``max()``; now reports partial goodput up to the latest
+        first token."""
+        r = Request(rid=0, prompt=np.zeros(2, np.int32))
+        r.tokens = [0, 0, 1, 1, 1]            # 3 generated so far
+        r.submit_time, r.first_token_time = 0.0, 0.5
+        assert r.finish_time is None
+        rep = slo_report([r], ttft_slo_s=1.0)
+        assert rep["n"] == 1 and rep["completed"] == 0
+        assert rep["attainment"] == pytest.approx(1.0)
+        assert rep["goodput_tok_per_s"] == pytest.approx(3 / 0.5)
+
+
+# -------------------------------------------------------- observability
+
+class _FakeClock:
+    """Deterministic engine clock: +0.25s per read."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 0.25
+        return self.t
+
+
+class TestServingObservability:
+    """The obs subsystem threaded through the engine: Chrome-trace
+    export, zero-perturbation tracing, deterministic spans under an
+    injected clock, and the metrics() observability blocks."""
+
+    def _run(self, lm_setup, trace, clock=None):
+        cfg, api, params = lm_setup
+        kw = {"clock": clock} if clock is not None else {}
+        eng = ServingEngine(cfg, api, params,
+                            config=EngineConfig(batch_slots=2,
+                                                cache_len=64,
+                                                trace=trace), **kw)
+        for r in _requests(cfg, [5, 1, 7], [2, 3, 2]):
+            eng.submit(r)
+        eng.run_until_drained()
+        return eng
+
+    def test_traced_engine_exports_valid_chrome_trace(self, lm_setup,
+                                                      tmp_path):
+        import json
+
+        from repro.obs import validate_chrome_trace
+        eng = self._run(lm_setup, trace=True)
+        path = eng.dump_trace(str(tmp_path / "trace.json"))
+        with open(path) as f:
+            data = json.load(f)
+        assert validate_chrome_trace(data) == []
+        names = [e["name"] for e in data["traceEvents"]]
+        for phase in ("admission", "prefill_dispatch",
+                      "block_dispatch", "host_sync", "harvest"):
+            assert phase in names, f"missing phase span {phase!r}"
+        for stage in ("queued", "prefill", "decode", "first_token",
+                      "finished"):
+            assert stage in names, f"missing request span {stage!r}"
+        assert any(str(n).startswith("compile:") for n in names), \
+            "cold engine recorded no compile spans"
+
+    def test_tracing_does_not_perturb(self, lm_setup):
+        on = self._run(lm_setup, trace=True)
+        off = self._run(lm_setup, trace=False)
+        assert on.counters == off.counters            # CountersView ==
+        assert dict(on.counters) == dict(off.counters)
+        assert {r.rid: r.tokens for r in on.completed.values()} == \
+            {r.rid: r.tokens for r in off.completed.values()}
+        assert off.tracer.events == []
+        with pytest.raises(RuntimeError, match="trace"):
+            off.dump_trace("/dev/null")
+
+    def test_trace_deterministic_under_injected_clock(self, lm_setup):
+        import json
+        traces = []
+        for _ in range(2):
+            eng = self._run(lm_setup, trace=True, clock=_FakeClock())
+            traces.append(json.dumps(eng.tracer.to_chrome(),
+                                     sort_keys=True))
+        assert traces[0] == traces[1]
+
+    def test_metrics_observability_schema(self, lm_setup):
+        eng = self._run(lm_setup, trace=False)
+        m = eng.metrics()
+        # bit-compat: the counters block is the plain pre-refactor dict
+        assert m["counters"] == dict(eng.counters)
+        assert isinstance(m["counters"], dict)
+        assert set(m["gauges"]) >= {"tok_per_tick", "queue_depth",
+                                    "batch_occupancy"}
+        assert m["gauges"]["tok_per_tick"]["n"] > 0
+        assert m["replica_stats"]["ticks"] == m["counters"]["ticks"]
+        assert m["replica_stats"]["ttft_samples"] == 3
+        assert m["replica_stats"]["tok_per_s"] > 0
+        assert m["queue_highwater"] == 3
+        assert m["trace"] == {"enabled": False, "events": 0,
+                              "dropped": 0}
