@@ -1,6 +1,10 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointError,
     CheckpointManager,
-    save_checkpoint,
-    restore_checkpoint,
+    CheckpointNotFound,
+    ChecksumError,
     latest_step,
+    list_steps,
+    restore_checkpoint,
+    save_checkpoint,
 )

@@ -3,9 +3,37 @@ keep-last-k GC, restore-latest, and cross-topology resharding.
 
 Layout:
     <dir>/step_000123/
-        manifest.msgpack   (treedef, shapes, dtypes, metadata, checksums)
+        manifest.msgpack   (tree spec, shapes, dtypes, metadata, checksums)
         arrays.npz         (leaf i -> 'a<i>')
     <dir>/step_000123.tmp...   (staging; atomic rename on completion)
+
+Two restore paths share one on-disk format:
+
+  * **template-based** (``like=`` a pytree): leaves restore into the
+    structure of ``like`` and are cast to each reference leaf's dtype —
+    the training path, where the optimizer state the caller rebuilt is
+    the source of truth for dtypes.
+  * **self-describing** (``like=None``): the tree structure, container
+    kinds and EXACT leaf dtypes come from the manifest's tree spec
+    (``quant.prepare.tree_manifest``). This is the serving/fabric path:
+    a :class:`~repro.quant.prepare.PreparedWeight` tree (nibble-packed
+    int4 bytes, int8 rows, per-channel scales, act scales) round-trips
+    bit-exactly with no template — an ``astype(ref.dtype)`` cast would
+    destroy packed storage, and a restarted worker has no prepared
+    template to offer without redoing the quantize/pack work the
+    checkpoint exists to skip.
+
+Integrity: the manifest carries a full sha256 per leaf and restore
+verifies every one before rebuilding the tree — a corrupted checkpoint
+raises :class:`ChecksumError` naming the damaged leaf path instead of
+restoring silently.
+
+Miss behavior (unified): a missing step/directory raises
+:class:`CheckpointNotFound` everywhere — ``restore_checkpoint`` on an
+absent step and ``CheckpointManager.restore_latest`` on an empty
+directory alike. Callers that treat "no checkpoint yet" as a normal
+state (e.g. ``runtime.fault_tolerance.FaultTolerantLoop`` on its first
+run) pass ``missing_ok=True`` to get the ``(None, None, {})`` sentinel.
 
 Resharding: leaves are restored host-side (numpy) and device_put with
 whatever shardings the *current* mesh prescribes — a checkpoint written
@@ -24,6 +52,20 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+MANIFEST_VERSION = 2
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint failures."""
+
+
+class ChecksumError(CheckpointError):
+    """A restored leaf's bytes do not match its recorded sha256."""
+
+
+class CheckpointNotFound(CheckpointError, FileNotFoundError):
+    """The requested step (or any step at all) does not exist."""
+
 
 def _tree_paths(tree) -> List[str]:
     paths = []
@@ -32,9 +74,20 @@ def _tree_paths(tree) -> List[str]:
     return paths
 
 
+def _leaf_bytes(arr: np.ndarray) -> bytes:
+    return np.ascontiguousarray(arr).tobytes()
+
+
 def save_checkpoint(directory: str, step: int, tree: Any,
                     metadata: Optional[Dict] = None) -> str:
-    """Atomic: stage into .tmp, fsync, rename."""
+    """Atomic: stage into .tmp, write arrays + manifest, rename.
+
+    The manifest records the tree's structure spec
+    (``quant.prepare.tree_manifest`` — container kinds, PreparedWeight
+    storage kinds, exact dtypes) and a full per-leaf sha256, so the
+    checkpoint restores either against a template or self-describing.
+    """
+    from repro.quant.prepare import tree_manifest
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:09d}")
     tmp = final + ".tmp"
@@ -42,29 +95,34 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    host_leaves = [np.asarray(l) for l in leaves]
+    spec, leaves = tree_manifest(tree)
+    host_leaves = [np.asarray(lf) for lf in leaves]
     # numpy's npz cannot hold bfloat16: store a uint16 view; the true
-    # dtype lives in the manifest and restore_checkpoint casts back.
-    storable = [l.view(np.uint16) if l.dtype == jnp.bfloat16 else l
-                for l in host_leaves]
-    arrays = {f"a{i}": l for i, l in enumerate(storable)}
+    # dtype lives in the manifest and restore casts the view back.
+    storable = [lf.view(np.uint16) if lf.dtype == jnp.bfloat16 else lf
+                for lf in host_leaves]
+    arrays = {f"a{i}": lf for i, lf in enumerate(storable)}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
 
-    checksum = hashlib.sha256()
-    for l in host_leaves:
-        checksum.update(np.ascontiguousarray(l).tobytes()[:4096])
     manifest = {
+        "version": MANIFEST_VERSION,
         "step": step,
         "n_leaves": len(host_leaves),
         "paths": _tree_paths(tree),
-        "shapes": [list(l.shape) for l in host_leaves],
-        "dtypes": [str(l.dtype) for l in host_leaves],
-        "checksum": checksum.hexdigest(),
+        "shapes": [list(lf.shape) for lf in host_leaves],
+        "dtypes": [str(lf.dtype) for lf in host_leaves],
+        "checksums": [hashlib.sha256(_leaf_bytes(lf)).hexdigest()
+                      for lf in host_leaves],
+        "tree_spec": spec,
         "metadata": metadata or {},
     }
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
+    if os.path.isdir(final):
+        # re-saving an existing step: directory-rename cannot overwrite
+        # a non-empty target, so drop the old step first (the staged
+        # copy is complete, so a crash here loses only the stale copy)
+        shutil.rmtree(final)
     os.replace(tmp, final)  # atomic on POSIX
     return final
 
@@ -86,28 +144,88 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore_checkpoint(directory: str, step: int, like: Any,
-                       shardings: Any = None) -> Tuple[Any, Dict]:
-    """Restore into the structure of ``like``; optionally device_put each
-    leaf with the matching sharding from ``shardings`` (same treedef)."""
+def _leaf_path(manifest: Dict, i: int) -> str:
+    paths = manifest.get("paths") or []
+    return paths[i] if i < len(paths) else f"leaf[{i}]"
+
+
+def _load_step(directory: str, step: int):
     path = os.path.join(directory, f"step_{step:09d}")
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+    man = os.path.join(path, "manifest.msgpack")
+    if not os.path.exists(man):
+        raise CheckpointNotFound(
+            f"no checkpoint for step {step} under {directory!r} "
+            f"(have steps {list_steps(directory)})")
+    with open(man, "rb") as f:
         manifest = msgpack.unpackb(f.read())
     data = np.load(os.path.join(path, "arrays.npz"))
+    return manifest, data
+
+
+def _verify_leaf(manifest: Dict, i: int, arr: np.ndarray):
+    """Check leaf ``i``'s full sha256 against the manifest (computed on
+    the true-dtype view, matching save). Pre-v2 manifests carried only a
+    truncated combined digest — nothing per-leaf to verify."""
+    sums = manifest.get("checksums")
+    if not sums:
+        return
+    got = hashlib.sha256(_leaf_bytes(arr)).hexdigest()
+    if got != sums[i]:
+        raise ChecksumError(
+            f"checkpoint leaf {_leaf_path(manifest, i)!r} (index {i}) is "
+            f"corrupted: sha256 {got[:12]}... != recorded "
+            f"{sums[i][:12]}...")
+
+
+def _restored_leaf(manifest: Dict, data, i: int, verify: bool):
+    arr = data[f"a{i}"]
+    if manifest["dtypes"][i] == "bfloat16":
+        arr = arr.view(jnp.bfloat16)
+    if verify:
+        _verify_leaf(manifest, i, arr)
+    return arr
+
+
+def restore_checkpoint(directory: str, step: int, like: Any = None,
+                       shardings: Any = None,
+                       verify: bool = True) -> Tuple[Any, Dict]:
+    """Restore step ``step``; raises :class:`CheckpointNotFound` if it
+    does not exist and :class:`ChecksumError` on corrupted leaves.
+
+    With ``like`` (a pytree template): leaves restore into its structure
+    and cast to each reference leaf's dtype. With ``like=None``: the
+    tree rebuilds self-describing from the manifest's structure spec
+    with EXACT stored dtypes (PreparedWeight containers included) —
+    required for prepared-weight trees, whose packed storage no cast
+    can reproduce.
+    """
+    from repro.quant.prepare import tree_from_manifest
+    manifest, data = _load_step(directory, step)
+    if like is None:
+        spec = manifest.get("tree_spec")
+        if spec is None:
+            raise CheckpointError(
+                f"checkpoint step {step} under {directory!r} predates "
+                "the self-describing manifest (v2); pass a 'like' "
+                "template to restore it")
+        leaves = [jnp.asarray(_restored_leaf(manifest, data, i, verify))
+                  for i in range(manifest["n_leaves"])]
+        return tree_from_manifest(spec, leaves), manifest["metadata"]
+
     leaves, treedef = jax.tree_util.tree_flatten(like)
     if manifest["n_leaves"] != len(leaves):
-        raise ValueError(
+        raise CheckpointError(
             f"checkpoint has {manifest['n_leaves']} leaves, "
             f"expected {len(leaves)}")
     restored = []
     shard_leaves = (treedef.flatten_up_to(shardings)
                     if shardings is not None else [None] * len(leaves))
     for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
-        arr = data[f"a{i}"]
+        arr = _restored_leaf(manifest, data, i, verify)
         if list(arr.shape) != list(ref.shape):
-            raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
-        if manifest["dtypes"][i] == "bfloat16":
-            arr = arr.view(jnp.bfloat16)
+            raise CheckpointError(
+                f"leaf {_leaf_path(manifest, i)!r}: shape {arr.shape} "
+                f"!= {ref.shape}")
         arr = arr.astype(ref.dtype)
         restored.append(jax.device_put(arr, shd) if shd is not None
                         else jnp.asarray(arr))
@@ -131,11 +249,30 @@ class CheckpointManager:
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
                           ignore_errors=True)
+        # stale staging dirs: a writer that crashed mid-save leaves
+        # step_*.tmp behind; list_steps already ignores them, and GC
+        # removes them so a crash can't leak disk forever
+        for name in os.listdir(self.directory):
+            if re.fullmatch(r"step_\d+\.tmp", name):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
 
-    def restore_latest(self, like: Any, shardings: Any = None):
+    def restore_latest(self, like: Any = None, shardings: Any = None,
+                       missing_ok: bool = False):
+        """Restore the newest step as ``(step, tree, metadata)``.
+
+        Raises :class:`CheckpointNotFound` when the directory holds no
+        checkpoint — the same miss behavior as ``restore_checkpoint``
+        on an absent step. ``missing_ok=True`` opts into the
+        ``(None, None, {})`` sentinel for callers (first-run resume
+        loops) that treat an empty directory as a normal state.
+        """
         step = latest_step(self.directory)
         if step is None:
-            return None, None, {}
+            if missing_ok:
+                return None, None, {}
+            raise CheckpointNotFound(
+                f"no checkpoint under {self.directory!r}")
         tree, meta = restore_checkpoint(self.directory, step, like,
                                         shardings)
         return step, tree, meta

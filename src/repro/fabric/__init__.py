@@ -1,0 +1,47 @@
+"""Multi-host serving fabric: checkpoint-restored workers behind a
+router-driven controller.
+
+The serving stack so far lived in one process: ``Router`` held its
+``ServingEngine`` replicas as Python objects. The fabric promotes
+replicas to *addressable workers*:
+
+  * ``fabric.checkpoint`` — serve-ready checkpoints: prepared
+    (quantized/packed/calibrated) engine state that restores bit-exactly
+    with zero re-quantization work;
+  * ``fabric.transport`` — typed messages over framed msgpack
+    endpoints (deterministic in-memory pair / TCP sockets);
+  * ``fabric.worker`` — the engine tick loop behind an endpoint;
+  * ``fabric.controller`` — fleet admission + routing + failure
+    recovery (heartbeat timeouts, requeue, re-admission).
+
+``python -m repro.fabric smoke`` runs the kill-a-worker-mid-flight CI
+contract; ``python -m repro.fabric worker`` is the subprocess entry.
+"""
+from repro.fabric.checkpoint import (build_engine, load_engine_checkpoint,
+                                     save_engine_checkpoint)
+from repro.fabric.controller import (Controller, FabricError,
+                                     LocalWorkerDriver, ManualClock,
+                                     RemoteReplica, WorkerHandle,
+                                     spawn_local_worker,
+                                     spawn_subprocess_worker)
+from repro.fabric.transport import (Drain, Drained, Endpoint,
+                                    FrameDecoder, Heartbeat, Hello,
+                                    Listener, LocalEndpoint, Shutdown,
+                                    SocketEndpoint, StatsSnapshot,
+                                    SubmitRequest, TokenChunk,
+                                    TransportClosed, connect,
+                                    decode_message, encode_message,
+                                    local_pair, pack_frame)
+from repro.fabric.worker import FabricWorker, worker_main
+
+__all__ = [
+    "Controller", "Drain", "Drained", "Endpoint", "FabricError",
+    "FabricWorker", "FrameDecoder", "Heartbeat", "Hello", "Listener",
+    "LocalEndpoint", "LocalWorkerDriver", "ManualClock",
+    "RemoteReplica", "Shutdown", "SocketEndpoint", "StatsSnapshot",
+    "SubmitRequest", "TokenChunk", "TransportClosed", "WorkerHandle",
+    "build_engine", "connect", "decode_message", "encode_message",
+    "load_engine_checkpoint", "local_pair", "pack_frame",
+    "save_engine_checkpoint", "spawn_local_worker",
+    "spawn_subprocess_worker", "worker_main",
+]

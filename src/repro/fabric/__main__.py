@@ -1,0 +1,24 @@
+"""``python -m repro.fabric {worker,smoke}``."""
+from __future__ import annotations
+
+import sys
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print("usage: python -m repro.fabric {worker,smoke} [options]")
+        return 0 if argv else 2
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "worker":
+        from repro.fabric.worker import worker_main
+        return worker_main(rest)
+    if cmd == "smoke":
+        from repro.fabric.smoke import main as smoke_main
+        return smoke_main(rest)
+    print(f"unknown repro.fabric command {cmd!r} (want worker|smoke)")
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,166 @@
+"""Prepared-engine checkpointing: serve-ready state on disk.
+
+``save_engine_checkpoint`` persists everything a fabric worker needs to
+come back as the SAME replica: the engine's prepared param tree (packed
+int8/int4 storage, per-channel scales, calibrated activation scales —
+the :class:`repro.quant.prepare.PreparedWeight` containers, bit-exact
+via ``repro.checkpoint``'s self-describing manifest) plus the resolved
+``ModelConfig`` and ``EngineConfig`` in the checkpoint metadata.
+
+``build_engine`` is the restore path: it reconstructs a
+``ServingEngine`` from the checkpoint alone — no raw fp32 weights, no
+re-quantization, no calibration pass. Two properties make that cheap:
+
+  * ``prepare_params`` is idempotent — prepared containers pass
+    through untouched, so the restored engine's construction-time
+    prepare is a pure tree walk (``weight_quant_trace_count() == 0``
+    exactly as for the original engine);
+  * the saved activation scales feed back through
+    ``EngineConfig(act_calibration=<dict>)``, whose dict path skips the
+    calibration forwards entirely.
+
+This is the cold-start story the benchmark's ``cold_start`` section
+measures: engine-from-checkpoint skips init + quantize/pack +
+calibrate, and the checkpoint itself is the *quantized* footprint
+(int4 ≈ 1/8 of fp32 projection bytes on disk, not just in memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.configs.base import ModelConfig, MoESpec
+from repro.serving.config import EngineConfig
+
+FABRIC_KEY = "fabric"
+FORMAT_VERSION = 1
+
+
+# ------------------------------------------------------- config round trip
+#
+# msgpack has no tuples — everything tuple-typed (rec_pattern, stop-id
+# lists) comes back as a list, so the rebuild coerces per-field against
+# the dataclass schema instead of trusting the wire types.
+
+def model_config_to_dict(cfg: ModelConfig) -> Dict:
+    return dataclasses.asdict(cfg)
+
+
+def model_config_from_dict(d: Dict) -> ModelConfig:
+    d = dict(d)
+    if d.get("moe") is not None:
+        d["moe"] = MoESpec(**d["moe"])
+    if d.get("rec_pattern") is not None:
+        d["rec_pattern"] = tuple(d["rec_pattern"])
+    known = {f.name for f in dataclasses.fields(ModelConfig)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(
+            f"checkpoint model config carries unknown fields "
+            f"{sorted(unknown)} (schema drift — re-save the checkpoint)")
+    return ModelConfig(**d)
+
+
+def engine_config_to_dict(config: EngineConfig) -> Dict:
+    d = dataclasses.asdict(config)
+    # the calibration INPUT is not serve-ready state: a dict is saved
+    # separately as act_scales, and 'auto' must not re-trigger a
+    # calibration pass on restore — the restore path reinjects the
+    # resolved scales
+    d.pop("act_calibration", None)
+    return d
+
+
+def engine_config_from_dict(d: Dict,
+                            act_scales: Optional[Dict]) -> EngineConfig:
+    d = dict(d)
+    d.pop("act_calibration", None)
+    known = {f.name for f in dataclasses.fields(EngineConfig)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(
+            f"checkpoint engine config carries unknown fields "
+            f"{sorted(unknown)} (schema drift — re-save the checkpoint)")
+    return EngineConfig(act_calibration=act_scales, **d)
+
+
+# ------------------------------------------------------------ save/restore
+
+def save_engine_checkpoint(engine, directory: str, step: int = 0) -> str:
+    """Persist a constructed ``ServingEngine`` as a serve-ready
+    checkpoint: prepared params as the array payload, resolved configs
+    and activation scales in the manifest metadata."""
+    scales = None
+    if engine.act_scales is not None:
+        scales = {k: float(v) for k, v in engine.act_scales.items()}
+    meta = {
+        FABRIC_KEY: {
+            "version": FORMAT_VERSION,
+            "model_config": model_config_to_dict(engine.cfg),
+            "engine_config": engine_config_to_dict(engine.config),
+            "act_scales": scales,
+            "policy": engine.cfg.precision_policy,
+            "prepared": bool(engine.prepared),
+        }
+    }
+    return save_checkpoint(directory, step, engine.params, metadata=meta)
+
+
+def load_engine_checkpoint(directory: str, step: Optional[int] = None,
+                           ) -> Tuple[ModelConfig, EngineConfig, Any,
+                                      Optional[Dict], Dict]:
+    """Restore ``(model_cfg, engine_cfg, params, act_scales, meta)``
+    from a serve-ready checkpoint.
+
+    The param tree comes back self-describing (no ``like`` template —
+    the only restore mode that round-trips packed int4 storage
+    bit-exactly) with per-leaf checksums verified."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            from repro.checkpoint import CheckpointNotFound
+            raise CheckpointNotFound(
+                f"no checkpoints under {directory!r}")
+    params, meta = restore_checkpoint(directory, step)
+    fab = meta.get(FABRIC_KEY)
+    if fab is None:
+        raise ValueError(
+            f"checkpoint at {directory!r} step {step} is not a fabric "
+            f"engine checkpoint (no {FABRIC_KEY!r} metadata) — it "
+            f"cannot rebuild a ServingEngine; restore it with "
+            f"repro.checkpoint.restore_checkpoint instead")
+    cfg = model_config_from_dict(fab["model_config"])
+    act_scales = fab.get("act_scales")
+    config = engine_config_from_dict(fab["engine_config"], act_scales)
+    return cfg, config, params, act_scales, fab
+
+
+def build_engine(directory: str, step: Optional[int] = None, *,
+                 api=None, scheduler=None, clock=None,
+                 config_overrides: Optional[Dict] = None):
+    """Reconstruct a serve-ready ``ServingEngine`` from a checkpoint.
+
+    The prepared tree passes straight through the engine's
+    construction-time prepare (idempotent), and the saved activation
+    scales ride in as the dict ``act_calibration`` — so the rebuilt
+    engine performs zero weight quantizations and zero calibration
+    forwards, and serves token streams identical to the engine that was
+    saved. ``config_overrides`` patches EngineConfig fields that are
+    deployment-local rather than replica identity (e.g. ``trace``,
+    ``cost_correction``)."""
+    import time
+
+    from repro.models import registry
+    from repro.serving.engine import ServingEngine
+
+    cfg, config, params, _, _ = load_engine_checkpoint(directory, step)
+    if config_overrides:
+        config = dataclasses.replace(config, **config_overrides)
+    if api is None:
+        api = registry.build(cfg)
+    return ServingEngine(cfg, api, params, config=config,
+                         scheduler=scheduler,
+                         clock=clock if clock is not None
+                         else time.monotonic)

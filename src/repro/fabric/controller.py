@@ -1,0 +1,504 @@
+"""Fabric controller: the router promoted to a control plane.
+
+The controller owns the fleet-level waiting line (an
+:class:`~repro.serving.scheduler.AdmissionScheduler`), a
+:class:`~repro.serving.router.Router` whose replicas are
+:class:`RemoteReplica` views over transports, and the failure policy:
+
+  * **placement** — the unchanged Router strategies (plan-aware static
+    cost, online measured correction) rank RemoteReplicas exactly like
+    in-process ones, because the Replica protocol surface is identical;
+    the measured :class:`~repro.obs.ReplicaStats` are *ingested from
+    transported StatsSnapshot messages* instead of read off an engine;
+  * **streaming** — workers send per-request ``TokenChunk`` deltas; the
+    controller accumulates them onto its canonical ``Request`` objects
+    (the ones callers submitted), so callers observe finished requests
+    exactly as with a local engine;
+  * **failure** — a worker is dead when its endpoint closes (process
+    exit) or its heartbeats stop for ``heartbeat_timeout`` seconds of
+    controller-clock time (silent hang/partition). Death requeues every
+    in-flight request of the dead worker at the FRONT of the fleet
+    scheduler (``AdmissionScheduler.requeue``) and rebuilds the router
+    over the survivors — no request is lost, and because greedy decode
+    streams are placement-independent the re-served tokens are
+    identical to the no-failure run.
+
+``spawn_local_worker`` runs the worker in-process behind the same wire
+codec (a :class:`LocalWorkerDriver` the controller ticks; an injected
+:class:`~repro.runtime.fault_tolerance.WorkerFailure` makes it
+*silently* dead, exercising the heartbeat-timeout path
+deterministically under a :class:`ManualClock`). ``spawn_subprocess_
+worker`` is the real multi-process path over TCP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.fabric import transport as tp
+from repro.obs import ReplicaStats
+from repro.runtime.fault_tolerance import WorkerFailure
+from repro.serving.engine import Request
+from repro.serving.scheduler import AdmissionScheduler
+
+
+class FabricError(RuntimeError):
+    """Fleet-level failure the controller cannot route around (e.g. no
+    alive workers left with work still queued)."""
+
+
+class ManualClock:
+    """Injectable monotonic clock for deterministic fabric tests: time
+    advances only when the test says so."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+
+class RemoteReplica:
+    """The Router's Replica protocol implemented over a transport.
+
+    ``stats`` is a local :class:`ReplicaStats` mirror fed by
+    ``ingest()`` from transported snapshots — the router's online cost
+    correction blends transported measurements without knowing the
+    engine lives elsewhere. ``in_flight`` is the controller's ledger of
+    requests placed on this worker that have not finished; it is what
+    failure recovery requeues.
+    """
+
+    def __init__(self, name: str, policy_name: str,
+                 endpoint: tp.Endpoint, *, slots: int,
+                 cost: Optional[Dict] = None,
+                 cost_correction: str = "static"):
+        self.name = name
+        self.policy_name = policy_name
+        self.endpoint = endpoint
+        self.slots = max(int(slots), 1)
+        self.cost = dict(cost) if cost else {}
+        self.routed = 0
+        self.stats = ReplicaStats()
+        self.in_flight: Dict[int, Request] = {}
+        self.completed: Dict[int, Request] = {}
+        self._cost_correction = cost_correction
+
+    @property
+    def cost_correction(self) -> str:
+        return self._cost_correction
+
+    @property
+    def load(self) -> float:
+        """Controller-truth occupancy: requests placed but unfinished
+        over slots (the transported queue depth lags one tick)."""
+        return len(self.in_flight) / self.slots
+
+    def submit(self, req: Request) -> None:
+        sp = req.sampling
+        self.endpoint.send(tp.SubmitRequest(
+            rid=req.rid,
+            prompt=[int(t) for t in req.prompt],
+            # the effective budget: sampling.max_new_tokens already
+            # folded in (the wire carries one budget field)
+            max_new_tokens=req.budget,
+            priority=req.priority,
+            tags=list(req.tags),
+            temperature=sp.temperature, top_k=sp.top_k, top_p=sp.top_p,
+            stop_ids=list(sp.stop_ids), seed=sp.seed))
+        self.in_flight[req.rid] = req
+
+    def has_pending(self) -> bool:
+        return bool(self.in_flight)
+
+    def step(self) -> None:
+        """Workers drive their own engines; the controller's tick pump
+        moves the tokens. Nothing to do here."""
+
+    def metrics(self) -> Dict:
+        return {
+            "completed": len(self.completed),
+            "in_flight": len(self.in_flight),
+            "routed": self.routed,
+            "replica_stats": self.stats.snapshot(),
+        }
+
+
+class LocalWorkerDriver:
+    """Ticks a FabricWorker in-process. A raised
+    :class:`WorkerFailure` kills it SILENTLY: the worker stops
+    heartbeating but its endpoint stays open — the shape of a hung or
+    partitioned node, which only the controller's heartbeat timeout can
+    detect (process death closes the socket and is detected
+    immediately)."""
+
+    def __init__(self, worker):
+        self.worker = worker
+        self.dead = False
+        self.failure: Optional[WorkerFailure] = None
+
+    def tick(self) -> None:
+        if self.dead:
+            return
+        try:
+            self.worker.tick()
+        except WorkerFailure as e:
+            self.dead = True
+            self.failure = e
+        except tp.TransportClosed:
+            # the controller-side endpoint is gone: the in-process
+            # analogue of a worker whose process lost its socket
+            self.dead = True
+
+
+@dataclasses.dataclass
+class WorkerHandle:
+    name: str
+    endpoint: tp.Endpoint
+    replica: RemoteReplica
+    driver: Optional[LocalWorkerDriver] = None
+    process: Optional[object] = None       # subprocess.Popen, if spawned
+    last_heartbeat: Optional[float] = None
+    alive: bool = True
+
+
+class Controller:
+    """Places requests across fabric workers and survives their death."""
+
+    def __init__(self, *, strategy: str = "plan_aware",
+                 cost_correction: Optional[str] = None,
+                 online_blend: float = 0.75,
+                 heartbeat_timeout: float = 5.0,
+                 max_queue: int = 1024,
+                 clock: Callable[[], float] = time.monotonic):
+        self.strategy = strategy
+        self._cost_correction = cost_correction
+        self.online_blend = online_blend
+        self.heartbeat_timeout = heartbeat_timeout
+        self.clock = clock
+        self.scheduler = AdmissionScheduler(max_queue=max_queue)
+        self.workers: Dict[str, WorkerHandle] = {}
+        self.router = None
+        self.completed: Dict[int, Request] = {}
+        self.requests: Dict[int, Request] = {}
+        self.ticks = 0
+        self.failures: List[str] = []     # names of workers declared dead
+
+    # ------------------------------------------------------------- fleet
+
+    def _rebuild_router(self) -> None:
+        from repro.serving.router import Router
+        alive = [h.replica for h in self.workers.values() if h.alive]
+        self.router = Router(alive, strategy=self.strategy,
+                             cost_correction=self._cost_correction,
+                             online_blend=self.online_blend) \
+            if alive else None
+
+    def add_worker(self, endpoint: tp.Endpoint, *,
+                   driver: Optional[LocalWorkerDriver] = None,
+                   process=None, name: Optional[str] = None,
+                   hello_timeout: float = 30.0) -> WorkerHandle:
+        """Register a worker from its announced identity: wait for its
+        ``Hello``, derive the static routing cost from the transported
+        model config + policy, add it to the router's fleet."""
+        hello, backlog = self._await_hello(endpoint, driver,
+                                           hello_timeout)
+        wname = name if name is not None else hello.name
+        if wname in self.workers:
+            n = sum(1 for k in self.workers if k == wname
+                    or k.startswith(f"{wname}#"))
+            wname = f"{wname}#{n}"
+        cost = self._static_cost(hello)
+        replica = RemoteReplica(
+            wname, hello.policy, endpoint, slots=hello.slots, cost=cost,
+            cost_correction=getattr(hello, "cost_correction", "static"))
+        handle = WorkerHandle(name=wname, endpoint=endpoint,
+                              replica=replica, driver=driver,
+                              process=process,
+                              last_heartbeat=self.clock())
+        self.workers[wname] = handle
+        for msg in backlog:               # stats/heartbeats behind Hello
+            self._handle_message(handle, msg)
+        self._rebuild_router()
+        return handle
+
+    def _await_hello(self, endpoint, driver, timeout):
+        deadline = time.monotonic() + timeout
+        backlog: List = []
+        while True:
+            if driver is not None:
+                driver.tick()             # let an in-process worker talk
+            for msg in endpoint.poll():
+                if isinstance(msg, tp.Hello):
+                    return msg, backlog
+                backlog.append(msg)
+            if time.monotonic() > deadline:
+                raise FabricError("worker never announced (no Hello "
+                                  f"within {timeout}s)")
+            if driver is None:
+                time.sleep(0.01)
+
+    def _static_cost(self, hello: tp.Hello) -> Dict:
+        if not hello.model_config:
+            return {}
+        from repro.core import policy as policy_mod
+        from repro.fabric.checkpoint import model_config_from_dict
+        from repro.serving.router import replica_cost
+        cfg = model_config_from_dict(hello.model_config)
+        cfg = dataclasses.replace(cfg, precision_policy=hello.policy)
+        return replica_cost(cfg, policy_mod.get_policy(hello.policy))
+
+    # --------------------------------------------------------- submission
+
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req, now=self.clock())
+        self.requests[req.rid] = req
+
+    # --------------------------------------------------------------- tick
+
+    def tick(self) -> int:
+        """One control-plane quantum: drive in-process workers, pump
+        their messages, detect deaths (requeueing their in-flight
+        work), dispatch from the fleet queue. Returns the number of
+        inbound messages handled — 0 means the fleet gave us nothing
+        this quantum (``run_until_drained`` uses it to pace polling
+        of subprocess workers)."""
+        for h in self.workers.values():
+            if h.alive and h.driver is not None:
+                h.driver.tick()
+        handled = 0
+        for h in self.workers.values():
+            if h.alive:
+                for msg in h.endpoint.poll():
+                    self._handle_message(h, msg)
+                    handled += 1
+        self._detect_failures()
+        self._dispatch()
+        self.ticks += 1
+        return handled
+
+    def _handle_message(self, h: WorkerHandle, msg) -> None:
+        if isinstance(msg, tp.TokenChunk):
+            self._on_tokens(h, msg)
+        elif isinstance(msg, tp.StatsSnapshot):
+            h.replica.stats.ingest(msg.stats)
+        elif isinstance(msg, tp.Heartbeat):
+            h.last_heartbeat = self.clock()
+        # Hello / Drained are lifecycle acks; nothing to update
+
+    def _on_tokens(self, h: WorkerHandle, msg: tp.TokenChunk) -> None:
+        req = h.replica.in_flight.get(msg.rid)
+        if req is None:
+            return                        # stale chunk from a past life
+        if req.tokens is None:
+            req.tokens = [int(t) for t in req.prompt]
+            req.admit_time = self.clock()
+        if msg.tokens:
+            if req.first_token_time is None:
+                req.first_token_time = self.clock()
+            req.tokens.extend(int(t) for t in msg.tokens)
+        if msg.done:
+            req.done = True
+            req.finish_reason = msg.finish_reason
+            req.truncated = bool(msg.truncated)
+            req.finish_time = self.clock()
+            del h.replica.in_flight[msg.rid]
+            h.replica.completed[msg.rid] = req
+            self.completed[msg.rid] = req
+
+    def _detect_failures(self) -> None:
+        now = self.clock()
+        for h in self.workers.values():
+            if not h.alive:
+                continue
+            silent = (h.last_heartbeat is not None
+                      and now - h.last_heartbeat > self.heartbeat_timeout)
+            if h.endpoint.closed or silent:
+                self._on_worker_death(h)
+
+    def _on_worker_death(self, h: WorkerHandle) -> None:
+        """Requeue everything the dead worker owed us, then route around
+        it. The requeued requests are RESET to their pre-admission state
+        (any partially streamed tokens are discarded) — re-serving from
+        scratch on a survivor reproduces the same stream because greedy
+        decode is placement-independent."""
+        h.alive = False
+        self.failures.append(h.name)
+        h.endpoint.close()
+        for rid in sorted(h.replica.in_flight):
+            req = h.replica.in_flight[rid]
+            _reset_request(req)
+            self.scheduler.requeue(req)
+        h.replica.in_flight.clear()
+        self._rebuild_router()
+
+    def _dispatch(self) -> None:
+        alive = [h.replica for h in self.workers.values() if h.alive]
+        if not alive:
+            if len(self.scheduler) > 0:
+                raise FabricError(
+                    f"no alive workers and {len(self.scheduler)} "
+                    f"requests queued — the fleet cannot make progress")
+            return
+        free = sum(max(0, r.slots - len(r.in_flight)) for r in alive)
+        if free <= 0 or len(self.scheduler) == 0:
+            return
+        for req in self.scheduler.select(free, self.clock()):
+            rep = self.router.route(req)
+            if len(rep.in_flight) >= rep.slots:
+                rep = min(alive,
+                          key=lambda r: (len(r.in_flight) / r.slots,
+                                         r.name))
+            rep.routed += 1
+            rep.submit(req)
+
+    # ---------------------------------------------------------- execution
+
+    def has_pending(self) -> bool:
+        return (len(self.scheduler) > 0
+                or any(h.replica.in_flight
+                       for h in self.workers.values() if h.alive))
+
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          advance: Optional[Callable[[], None]] = None,
+                          idle_sleep: float = 0.002) -> int:
+        """Drive the fleet until every submitted request completed.
+        ``advance`` runs once per tick — under a :class:`ManualClock`
+        pass ``lambda: clock.advance(dt)`` so heartbeat windows and
+        throughput EWMAs see time moving.
+
+        A tick that handled zero messages while a subprocess worker
+        (no local driver) is in the fleet sleeps ``idle_sleep``
+        seconds: remote workers make progress on wall clock, not on
+        our tick count, and spinning would burn ``max_ticks`` before
+        a freshly-restored engine finishes compiling its first step.
+        Purely local fleets never sleep — their ticks ARE the work."""
+        ticks = 0
+        remote = any(h.driver is None for h in self.workers.values())
+        while self.has_pending():
+            if advance is not None:
+                advance()
+            handled = self.tick()
+            ticks += 1
+            if ticks > max_ticks:
+                raise FabricError("fleet did not drain "
+                                  f"({max_ticks} ticks)")
+            if handled == 0 and remote and idle_sleep:
+                time.sleep(idle_sleep)
+        return ticks
+
+    def shutdown(self) -> None:
+        for h in self.workers.values():
+            if h.alive and not h.endpoint.closed:
+                try:
+                    h.endpoint.send(tp.Shutdown())
+                except tp.TransportClosed:
+                    pass
+            if h.driver is not None:
+                h.driver.tick()           # let it see the Shutdown
+            h.endpoint.close()
+            if h.process is not None:
+                h.process.wait(timeout=30)
+
+    # ------------------------------------------------------ observability
+
+    def routing_report(self) -> Dict:
+        if self.router is None:
+            raise FabricError("no alive workers to report on")
+        return self.router.routing_report()
+
+    def routing_counters(self) -> Dict[str, int]:
+        return {h.name: h.replica.routed for h in self.workers.values()}
+
+    def report(self) -> Dict:
+        return {
+            "strategy": self.strategy,
+            "ticks": self.ticks,
+            "failures": list(self.failures),
+            "requeued": self.scheduler.requeued,
+            "completed": len(self.completed),
+            "workers": {
+                h.name: {
+                    "alive": h.alive,
+                    "policy": h.replica.policy_name,
+                    **h.replica.metrics(),
+                } for h in self.workers.values()
+            },
+        }
+
+
+def _reset_request(req: Request) -> None:
+    """Back to the pre-admission state ``AdmissionScheduler.requeue``
+    expects: only identity (rid/prompt/budget/sampling/priority/tags)
+    and ``submit_time`` survive — promotion counts from the original
+    submission."""
+    req.tokens = None
+    req.done = False
+    req.error = None
+    req.next_input = None
+    req.admit_time = None
+    req.first_token_time = None
+    req.finish_time = None
+    req.finish_reason = None
+    req.truncated = False
+    req.prefill_pos = 0
+
+
+# ------------------------------------------------------------------ spawn
+
+def spawn_local_worker(controller: Controller, ckpt_dir: str, *,
+                       name: str, step: Optional[int] = None,
+                       failure_hook: Optional[Callable[[int], None]]
+                       = None,
+                       config_overrides: Optional[Dict] = None,
+                       ) -> WorkerHandle:
+    """Restore a worker from a serve-ready checkpoint and attach it
+    in-process: same wire codec as a subprocess worker, but ticked by
+    the controller and killable via an injected WorkerFailure."""
+    from repro.fabric.checkpoint import build_engine
+    from repro.fabric.worker import FabricWorker
+
+    ctrl_ep, worker_ep = tp.local_pair()
+    engine = build_engine(ckpt_dir, step, clock=controller.clock,
+                          config_overrides=config_overrides)
+    worker = FabricWorker(name, engine, worker_ep,
+                          clock=controller.clock,
+                          failure_hook=failure_hook)
+    worker.announce()
+    driver = LocalWorkerDriver(worker)
+    return controller.add_worker(ctrl_ep, driver=driver, name=name)
+
+
+def spawn_subprocess_worker(controller: Controller, ckpt_dir: str, *,
+                            name: str, step: Optional[int] = None,
+                            listener: Optional[tp.Listener] = None,
+                            timeout: float = 120.0) -> WorkerHandle:
+    """The real multi-process path: fork ``python -m repro.fabric
+    worker`` against the checkpoint, accept its TCP connection, wait
+    for its Hello."""
+    import subprocess
+    import sys
+
+    own_listener = listener is None
+    if own_listener:
+        listener = tp.Listener()
+    cmd = [sys.executable, "-m", "repro.fabric", "worker",
+           "--ckpt", ckpt_dir, "--name", name,
+           "--connect", f"{listener.host}:{listener.port}"]
+    if step is not None:
+        cmd += ["--step", str(step)]
+    proc = subprocess.Popen(cmd)
+    try:
+        endpoint = listener.accept(timeout=timeout)
+    finally:
+        if own_listener:
+            listener.close()
+    return controller.add_worker(endpoint, process=proc, name=name,
+                                 hello_timeout=timeout)

@@ -1,0 +1,319 @@
+"""Fabric wire protocol: typed messages + framed transports.
+
+The controller and its workers speak a small, explicit protocol:
+
+  * ``Hello``          worker -> controller, once after restore: replica
+                       identity (name, policy, slots, model config);
+  * ``SubmitRequest``  controller -> worker: one request placement;
+  * ``TokenChunk``     worker -> controller: newly generated tokens of
+                       one request (``done`` carries the finish);
+  * ``StatsSnapshot``  worker -> controller: the engine's measured
+                       :class:`repro.obs.ReplicaStats` feed — what the
+                       router's online cost correction blends instead of
+                       reading engine objects directly;
+  * ``Heartbeat``      worker -> controller: liveness (a missed-
+                       heartbeat window is the failure signal);
+  * ``Drain``/``Drained``, ``Shutdown`` — lifecycle control.
+
+Every message crosses an :class:`Endpoint` as a length-prefixed msgpack
+frame — including the in-memory pair used by tests and the single-host
+controller, so the wire codec is exercised on every path, not just the
+multi-process one. ``local_pair()`` gives two connected in-memory
+endpoints (deterministic, single-threaded); :class:`SocketEndpoint`
+wraps a non-blocking TCP socket for real multi-process runs
+(``python -m repro.fabric worker`` connects one back to the
+controller's listener).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import socket
+import struct
+from typing import Any, Deque, Dict, List, Optional, Type
+
+import msgpack
+
+# --------------------------------------------------------------- messages
+
+_MESSAGE_TYPES: Dict[str, Type] = {}
+
+
+def message(cls):
+    """Register a dataclass as a wire message (its class name is the
+    type tag)."""
+    _MESSAGE_TYPES[cls.__name__] = cls
+    return cls
+
+
+@message
+@dataclasses.dataclass(frozen=True)
+class Hello:
+    name: str
+    policy: str
+    slots: int
+    model_config: Optional[Dict] = None
+    cost_correction: str = "static"
+
+
+@message
+@dataclasses.dataclass(frozen=True)
+class SubmitRequest:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    priority: int = 0
+    tags: List[str] = dataclasses.field(default_factory=list)
+    # SamplingParams fields (flat: the wire format has no nested types)
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    stop_ids: List[int] = dataclasses.field(default_factory=list)
+    seed: Optional[int] = None
+
+
+@message
+@dataclasses.dataclass(frozen=True)
+class TokenChunk:
+    rid: int
+    tokens: List[int]                  # delta since the last chunk
+    done: bool = False
+    finish_reason: Optional[str] = None
+    truncated: bool = False
+
+
+@message
+@dataclasses.dataclass(frozen=True)
+class StatsSnapshot:
+    name: str
+    stats: Dict                        # ReplicaStats.snapshot()
+    slots: int = 0
+    completed: int = 0
+
+
+@message
+@dataclasses.dataclass(frozen=True)
+class Heartbeat:
+    tick: int
+    time: float
+
+
+@message
+@dataclasses.dataclass(frozen=True)
+class Drain:
+    """Finish everything in flight, answer ``Drained``, keep serving."""
+
+
+@message
+@dataclasses.dataclass(frozen=True)
+class Drained:
+    completed: int = 0
+
+
+@message
+@dataclasses.dataclass(frozen=True)
+class Shutdown:
+    """Stop the worker loop after the current tick."""
+
+
+def encode_message(msg: Any) -> bytes:
+    name = type(msg).__name__
+    if name not in _MESSAGE_TYPES:
+        raise TypeError(f"{name} is not a registered fabric message")
+    return msgpack.packb({"t": name, "f": dataclasses.asdict(msg)})
+
+
+def decode_message(data: bytes) -> Any:
+    obj = msgpack.unpackb(data)
+    cls = _MESSAGE_TYPES.get(obj.get("t"))
+    if cls is None:
+        raise ValueError(f"unknown fabric message type {obj.get('t')!r}")
+    return cls(**obj["f"])
+
+
+# ---------------------------------------------------------------- framing
+
+_LEN = struct.Struct(">I")
+MAX_FRAME = 64 * 1024 * 1024
+
+
+def pack_frame(payload: bytes) -> bytes:
+    if len(payload) > MAX_FRAME:
+        raise ValueError(f"frame of {len(payload)} bytes exceeds "
+                         f"MAX_FRAME ({MAX_FRAME})")
+    return _LEN.pack(len(payload)) + payload
+
+
+class FrameDecoder:
+    """Incremental length-prefixed frame reassembly (feed arbitrary
+    byte chunks, iterate complete frames)."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> List[bytes]:
+        self._buf.extend(data)
+        frames = []
+        while len(self._buf) >= _LEN.size:
+            (n,) = _LEN.unpack_from(self._buf)
+            if n > MAX_FRAME:
+                raise ValueError(f"incoming frame of {n} bytes exceeds "
+                                 f"MAX_FRAME ({MAX_FRAME})")
+            if len(self._buf) < _LEN.size + n:
+                break
+            frames.append(bytes(self._buf[_LEN.size:_LEN.size + n]))
+            del self._buf[:_LEN.size + n]
+        return frames
+
+
+# ------------------------------------------------------------- endpoints
+
+class TransportClosed(RuntimeError):
+    """Send on a closed endpoint (the peer is gone)."""
+
+
+class Endpoint:
+    """One side of a bidirectional message channel."""
+
+    def send(self, msg: Any) -> None:
+        raise NotImplementedError
+
+    def poll(self) -> List[Any]:
+        """Drain every message currently available (non-blocking)."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    @property
+    def closed(self) -> bool:
+        raise NotImplementedError
+
+
+class LocalEndpoint(Endpoint):
+    """In-memory endpoint: deterministic, single-threaded, but every
+    message still round-trips through the framed wire encoding so the
+    in-process fabric exercises the same codec as the socket one."""
+
+    def __init__(self, inbox: Deque[bytes], outbox: Deque[bytes],
+                 state: Dict):
+        self._in = inbox
+        self._out = outbox
+        self._state = state           # shared {'closed': bool}
+        self._decoder = FrameDecoder()
+
+    def send(self, msg: Any) -> None:
+        if self._state["closed"]:
+            raise TransportClosed("endpoint is closed")
+        self._out.append(pack_frame(encode_message(msg)))
+
+    def poll(self) -> List[Any]:
+        out: List[Any] = []
+        while self._in:
+            for frame in self._decoder.feed(self._in.popleft()):
+                out.append(decode_message(frame))
+        return out
+
+    def close(self) -> None:
+        self._state["closed"] = True
+
+    @property
+    def closed(self) -> bool:
+        return self._state["closed"]
+
+
+def local_pair() -> tuple:
+    """Two connected in-memory endpoints (controller side, worker side).
+    Closing either side closes both — the fabric's stand-in for a dead
+    TCP connection."""
+    a_to_b: Deque[bytes] = collections.deque()
+    b_to_a: Deque[bytes] = collections.deque()
+    state = {"closed": False}
+    return (LocalEndpoint(b_to_a, a_to_b, state),
+            LocalEndpoint(a_to_b, b_to_a, state))
+
+
+class SocketEndpoint(Endpoint):
+    """Framed messages over a non-blocking TCP socket (the real
+    multi-process transport)."""
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self._sock.setblocking(False)
+        self._decoder = FrameDecoder()
+        self._closed = False
+
+    def send(self, msg: Any) -> None:
+        if self._closed:
+            raise TransportClosed("socket endpoint is closed")
+        data = pack_frame(encode_message(msg))
+        try:
+            self._sock.setblocking(True)
+            self._sock.sendall(data)
+        except OSError as e:
+            self.close()
+            raise TransportClosed(f"peer went away during send: {e}")
+        finally:
+            if not self._closed:
+                self._sock.setblocking(False)
+
+    def poll(self) -> List[Any]:
+        out: List[Any] = []
+        if self._closed:
+            return out
+        while True:
+            try:
+                chunk = self._sock.recv(1 << 16)
+            except BlockingIOError:
+                break
+            except OSError:
+                self.close()
+                break
+            if not chunk:              # orderly EOF: peer closed
+                self.close()
+                break
+            for frame in self._decoder.feed(chunk):
+                out.append(decode_message(frame))
+        return out
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+
+def connect(host: str, port: int, timeout: float = 30.0) -> SocketEndpoint:
+    """Dial the controller's listener (worker side)."""
+    sock = socket.create_connection((host, port), timeout=timeout)
+    sock.settimeout(None)
+    return SocketEndpoint(sock)
+
+
+class Listener:
+    """Controller-side accept socket: bind an ephemeral port, hand out
+    one :class:`SocketEndpoint` per connecting worker."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen()
+        self.host, self.port = self._sock.getsockname()[:2]
+
+    def accept(self, timeout: float = 30.0) -> SocketEndpoint:
+        self._sock.settimeout(timeout)
+        conn, _ = self._sock.accept()
+        return SocketEndpoint(conn)
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass

@@ -1,0 +1,172 @@
+"""Fabric worker: a checkpoint-restored ServingEngine behind a transport.
+
+``FabricWorker`` owns one :class:`~repro.serving.engine.ServingEngine`
+and one :class:`~repro.fabric.transport.Endpoint` back to the
+controller. Its ``tick()`` is the unit the whole fabric schedules in:
+
+  1. fire the injectable ``failure_hook`` (raises
+     :class:`repro.runtime.fault_tolerance.WorkerFailure` to simulate a
+     died node — the same signal the training runtime injects);
+  2. drain the endpoint: ``SubmitRequest`` becomes an engine submit,
+     ``Drain``/``Shutdown`` flip lifecycle state;
+  3. advance the engine one step when it has pending work;
+  4. stream back what changed: per-request ``TokenChunk`` deltas (only
+     newly generated tokens cross the wire), one ``StatsSnapshot`` (the
+     engine's measured ReplicaStats feed for the router's online cost
+     correction), one ``Heartbeat``.
+
+The worker never blocks on the transport; a controller that stops
+submitting simply sees heartbeats. A worker that dies raises out of
+``tick()`` — in-process drivers catch it and go silent, subprocess
+workers exit and the closed socket is the controller's failure signal.
+Either way the controller's view is the same: heartbeats stop.
+
+``worker_main`` is the subprocess entry (``python -m repro.fabric
+worker --ckpt DIR --connect HOST:PORT``): restore from the serve-ready
+checkpoint (zero quantize/calibrate work, see fabric/checkpoint.py),
+dial the controller, announce, loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.fabric import transport as tp
+
+
+class FabricWorker:
+    def __init__(self, name: str, engine, endpoint: tp.Endpoint, *,
+                 clock: Optional[Callable[[], float]] = None,
+                 failure_hook: Optional[Callable[[int], None]] = None):
+        self.name = name
+        self.engine = engine
+        self.endpoint = endpoint
+        self.clock = clock if clock is not None else engine.clock
+        self.failure_hook = failure_hook
+        self.tick_count = 0
+        self.draining = False
+        self._shutdown = False
+        # requests this worker received over the fabric that still owe
+        # the controller tokens: rid -> (engine Request, tokens sent)
+        self._live: Dict[int, tuple] = {}
+
+    # ------------------------------------------------------------ protocol
+
+    def announce(self) -> None:
+        from repro.fabric.checkpoint import model_config_to_dict
+        self.endpoint.send(tp.Hello(
+            name=self.name,
+            policy=self.engine.cfg.precision_policy,
+            slots=self.engine.b,
+            model_config=model_config_to_dict(self.engine.cfg),
+            cost_correction=self.engine.config.cost_correction))
+
+    def _handle(self, msg) -> None:
+        from repro.serving.config import SamplingParams
+        from repro.serving.engine import Request
+
+        if isinstance(msg, tp.SubmitRequest):
+            req = Request(
+                rid=msg.rid,
+                prompt=np.asarray(msg.prompt, np.int32),
+                max_new_tokens=msg.max_new_tokens,
+                priority=msg.priority,
+                tags=tuple(msg.tags),
+                sampling=SamplingParams(
+                    temperature=msg.temperature, top_k=msg.top_k,
+                    top_p=msg.top_p, stop_ids=tuple(msg.stop_ids),
+                    seed=msg.seed))
+            self.engine.submit(req)
+            self._live[msg.rid] = (req, 0)
+        elif isinstance(msg, tp.Drain):
+            self.draining = True
+        elif isinstance(msg, tp.Shutdown):
+            self._shutdown = True
+
+    def _stream(self) -> None:
+        """Send every request's newly generated tokens as one delta
+        chunk; a finishing request's chunk carries ``done`` and the
+        finish metadata, then leaves the live set."""
+        finished = []
+        for rid, (req, sent) in self._live.items():
+            if req.tokens is None:       # still queued / prefilling
+                continue
+            gen = req.tokens[len(req.prompt) + sent:]
+            if gen or req.done:
+                self.endpoint.send(tp.TokenChunk(
+                    rid=rid, tokens=[int(t) for t in gen],
+                    done=req.done, finish_reason=req.finish_reason,
+                    truncated=req.truncated))
+                self._live[rid] = (req, sent + len(gen))
+            if req.done:
+                finished.append(rid)
+        for rid in finished:
+            del self._live[rid]
+
+    # ---------------------------------------------------------------- loop
+
+    def tick(self) -> bool:
+        """One worker scheduling quantum; returns False after Shutdown.
+        Raises WorkerFailure out of an armed ``failure_hook`` — the
+        caller decides whether that is a silent death (in-process
+        driver) or a process exit (subprocess main)."""
+        if self.failure_hook is not None:
+            self.failure_hook(self.tick_count)
+        self.tick_count += 1
+        for msg in self.endpoint.poll():
+            self._handle(msg)
+        if self._shutdown:
+            return False
+        if self.engine.has_pending():
+            self.engine.step()
+        self._stream()
+        self.endpoint.send(tp.StatsSnapshot(
+            name=self.name, stats=self.engine.stats.snapshot(),
+            slots=self.engine.b, completed=len(self.engine.completed)))
+        self.endpoint.send(tp.Heartbeat(tick=self.tick_count,
+                                        time=float(self.clock())))
+        if self.draining and not self.engine.has_pending() \
+                and not self._live:
+            self.endpoint.send(tp.Drained(
+                completed=len(self.engine.completed)))
+            self.draining = False
+        return True
+
+    def run(self, idle_sleep: float = 0.002) -> None:
+        while True:
+            busy = self.engine.has_pending()
+            if not self.tick():
+                return
+            if not busy and not self.engine.has_pending():
+                time.sleep(idle_sleep)      # don't spin an idle worker
+
+
+def worker_main(argv=None) -> int:
+    """Subprocess entry: restore a serve-ready engine from a checkpoint
+    and serve it over a socket back to the controller."""
+    import argparse
+
+    from repro.fabric.checkpoint import build_engine
+
+    ap = argparse.ArgumentParser(prog="repro.fabric worker")
+    ap.add_argument("--ckpt", required=True,
+                    help="serve-ready checkpoint directory")
+    ap.add_argument("--name", default="worker")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT")
+    ap.add_argument("--step", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    host, port = args.connect.rsplit(":", 1)
+    endpoint = tp.connect(host, int(port))
+    engine = build_engine(args.ckpt, args.step)
+    worker = FabricWorker(args.name, engine, endpoint)
+    worker.announce()
+    try:
+        worker.run()
+    except tp.TransportClosed:
+        pass                # controller went away: orderly exit
+    finally:
+        endpoint.close()
+    return 0

@@ -34,7 +34,8 @@ class ReplicaStats:
     """
 
     __slots__ = ("alpha", "window", "tok_per_s", "queue_depth",
-                 "active_slots", "ticks", "_last_time", "_ttfts")
+                 "active_slots", "ticks", "transported", "_last_time",
+                 "_ttfts", "_p95_override", "_ttft_count_override")
 
     def __init__(self, alpha: float = 0.2, window: int = 64):
         if not 0.0 < alpha <= 1.0:
@@ -45,8 +46,14 @@ class ReplicaStats:
         self.queue_depth: int = 0
         self.active_slots: int = 0
         self.ticks: int = 0
+        # True once ingest() ran: this instance mirrors a REMOTE
+        # engine's stats transported over the fabric rather than
+        # observing a local tick loop
+        self.transported: bool = False
         self._last_time: Optional[float] = None
         self._ttfts: Deque[float] = collections.deque(maxlen=window)
+        self._p95_override: Optional[float] = None
+        self._ttft_count_override: int = 0
 
     def on_tick(self, now: float, new_tokens: int, queue_depth: int,
                 active_slots: int = 0):
@@ -73,8 +80,29 @@ class ReplicaStats:
     def observe_ttft(self, ttft_s: float):
         self._ttfts.append(float(ttft_s))
 
+    def ingest(self, snapshot: Dict):
+        """Overwrite the measured state from a transported ``snapshot()``
+        dict — the fabric controller's view of a remote engine's stats.
+
+        The remote reservoir of raw TTFT samples never crosses the wire,
+        only its p95; ``p95_ttft_s`` reports the transported value until
+        a fresher snapshot lands. The blend inputs the router reads
+        (``tok_per_s``, ``measured``, queue depth, active slots) carry
+        over directly, so a Router over transported stats ranks exactly
+        like one holding the engines in-process.
+        """
+        self.tok_per_s = snapshot.get("tok_per_s")
+        self.queue_depth = int(snapshot.get("queue_depth") or 0)
+        self.active_slots = int(snapshot.get("active_slots") or 0)
+        self.ticks = int(snapshot.get("ticks") or 0)
+        self._p95_override = snapshot.get("p95_ttft_s")
+        self._ttft_count_override = int(snapshot.get("ttft_samples") or 0)
+        self.transported = True
+
     @property
     def p95_ttft_s(self) -> Optional[float]:
+        if self.transported:
+            return self._p95_override
         if not self._ttfts:
             return None
         return float(np.percentile(np.asarray(self._ttfts), 95))
@@ -90,8 +118,10 @@ class ReplicaStats:
             "queue_depth": self.queue_depth,
             "active_slots": self.active_slots,
             "p95_ttft_s": self.p95_ttft_s,
-            "ttft_samples": len(self._ttfts),
+            "ttft_samples": (self._ttft_count_override if self.transported
+                            else len(self._ttfts)),
             "ticks": self.ticks,
+            "transported": self.transported,
         }
 
     def __repr__(self):

@@ -27,7 +27,8 @@ makes prepared and dynamic serving equivalent (tests/test_prepare.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Mapping, Optional, Union
+from typing import (Any, Callable, Dict, Mapping, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -228,6 +229,85 @@ def stage_params(params, policy: PrecisionPolicy, paths: PathResolver,
         return w
 
     return _map_projections(params, resolve, stage)
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> manifest: the self-describing checkpoint codec
+#
+# ``repro.checkpoint`` persists param trees as (structure spec, flat leaf
+# list). A PreparedWeight-bearing tree cannot round-trip through the
+# template-based restore path (``astype(ref.dtype)`` would destroy packed
+# int4 nibbles, and a restarted worker has no template to offer without
+# re-running quantize/pack — the work checkpointing exists to skip), so
+# the spec below records containers, PreparedWeight kinds and exact leaf
+# dtypes explicitly. Leaf ORDER is jax-canonical (sorted dict keys,
+# sequence order, dataclass field order with None fields skipped), so the
+# same ``arrays.npz`` serves both the spec-based and the ``like``-based
+# restore.
+
+def tree_manifest(tree) -> Tuple[Any, list]:
+    """Encode ``tree`` into a msgpack-able structure spec + flat leaves.
+
+    Handles dicts, lists, tuples, ``None`` and :class:`PreparedWeight`
+    containers; everything else is a leaf. The inverse is
+    :func:`tree_from_manifest`.
+    """
+    leaves: list = []
+
+    def ref(x) -> int:
+        leaves.append(x)
+        return len(leaves) - 1
+
+    def enc(node):
+        if node is None:
+            return {"t": "none"}
+        if isinstance(node, PreparedWeight):
+            return {"t": "prepared", "kind": node.kind,
+                    "data": ref(node.data),
+                    "scale": None if node.scale is None
+                    else ref(node.scale),
+                    "act_scale": None if node.act_scale is None
+                    else ref(node.act_scale)}
+        if isinstance(node, dict):
+            # sorted keys: jax.tree_util's dict flattening order, so the
+            # leaf list lines up with a tree_flatten of the same tree
+            return {"t": "dict",
+                    "keys": sorted(node),
+                    "items": [enc(node[k]) for k in sorted(node)]}
+        if isinstance(node, (list, tuple)):
+            return {"t": "list" if isinstance(node, list) else "tuple",
+                    "items": [enc(v) for v in node]}
+        return {"t": "leaf", "i": ref(node)}
+
+    return enc(tree), leaves
+
+
+def tree_from_manifest(spec, leaves: Sequence[Any]):
+    """Rebuild the tree :func:`tree_manifest` encoded, consuming restored
+    leaves (exact dtypes — no template, no cast)."""
+
+    def dec(s):
+        t = s["t"]
+        if t == "none":
+            return None
+        if t == "prepared":
+            return PreparedWeight(
+                leaves[s["data"]],
+                None if s["scale"] is None else leaves[s["scale"]],
+                s["kind"],
+                None if s["act_scale"] is None
+                else leaves[s["act_scale"]])
+        if t == "dict":
+            return {k: dec(v) for k, v in zip(s["keys"], s["items"])}
+        if t == "list":
+            return [dec(v) for v in s["items"]]
+        if t == "tuple":
+            return tuple(dec(v) for v in s["items"])
+        if t == "leaf":
+            return leaves[s["i"]]
+        raise ValueError(f"unknown tree-spec node type {t!r}")
+
+    return dec(spec)
 
 
 def iter_projection_weights(params, paths: PathResolver):

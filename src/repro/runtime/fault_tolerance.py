@@ -87,8 +87,10 @@ class FaultTolerantLoop:
     def run(self, state: Any, start_step: int, num_steps: int,
             shardings: Any = None) -> Any:
         step = start_step
+        init_state = state      # step_fn is pure: safe to re-enter from
         # resume if checkpoints exist
-        ck_step, ck_state, _ = self.manager.restore_latest(state, shardings)
+        ck_step, ck_state, _ = self.manager.restore_latest(
+            state, shardings, missing_ok=True)
         if ck_step is not None and ck_step >= step:
             state, step = ck_state, ck_step
         end = start_step + num_steps
@@ -113,9 +115,12 @@ class FaultTolerantLoop:
                 if self.restarts > self.cfg.max_restarts:
                     raise
                 ck_step, ck_state, _ = self.manager.restore_latest(
-                    state, shardings)
+                    state, shardings, missing_ok=True)
                 if ck_step is None:
-                    step = start_step  # no checkpoint yet: replay from 0
+                    # no checkpoint yet: replay from the start — with
+                    # the INITIAL state, or the replayed steps would
+                    # apply on top of the partial progress
+                    state, step = init_state, start_step
                 else:
                     state, step = ck_state, ck_step
         return state, step

@@ -118,7 +118,17 @@ def replica_cost(cfg: ModelConfig, policy: PrecisionPolicy,
 
 @dataclasses.dataclass
 class Replica:
-    """One serving engine + its precision policy and routing counters."""
+    """One serving engine + its precision policy and routing counters.
+
+    The attribute surface the :class:`Router` reads is deliberately
+    narrow — ``name``/``cost``/``routed``/``load``/``stats``/
+    ``cost_correction`` plus ``submit``/``has_pending``/``step``/
+    ``completed``/``metrics`` — so a replica does NOT have to hold its
+    engine in-process: ``repro.fabric.controller.RemoteReplica``
+    implements the same protocol over a transport (stats ingested from
+    ``StatsSnapshot`` messages instead of read off the engine object),
+    and the Router ranks both kinds identically.
+    """
 
     name: str
     policy_name: str
@@ -132,6 +142,33 @@ class Replica:
         eng = self.engine
         active = sum(r is not None for r in eng.slot_req)
         return (active + len(eng.scheduler)) / max(eng.b, 1)
+
+    @property
+    def stats(self):
+        """Measured :class:`repro.obs.ReplicaStats` the online cost
+        correction blends in."""
+        return self.engine.stats
+
+    @property
+    def cost_correction(self) -> str:
+        """How this replica asks to be costed ('static' | 'online')."""
+        return self.engine.config.cost_correction
+
+    def submit(self, req: Request) -> None:
+        self.engine.submit(req)
+
+    def has_pending(self) -> bool:
+        return self.engine.has_pending()
+
+    def step(self) -> None:
+        self.engine.step()
+
+    @property
+    def completed(self) -> Dict[int, Request]:
+        return self.engine.completed
+
+    def metrics(self) -> Dict:
+        return self.engine.metrics()
 
 
 def _replica_name(policy_name: str) -> str:
@@ -202,7 +239,7 @@ class Router:
             # (a partially-measured fleet degrades gracefully — see
             # _effective_costs)
             cost_correction = "online" if any(
-                r.engine.config.cost_correction == "online"
+                r.cost_correction == "online"
                 for r in replicas) else "static"
         if cost_correction not in ("static", "online"):
             raise ValueError(f"cost_correction must be 'static' or "
@@ -232,8 +269,8 @@ class Router:
         s_norm = [s / s_mean if s_mean > 0 else 1.0 for s in static]
         if self.cost_correction != "online":
             return s_norm
-        spt = [1.0 / r.engine.stats.tok_per_s
-               if r.engine.stats.measured and r.engine.stats.tok_per_s > 0
+        spt = [1.0 / r.stats.tok_per_s
+               if r.stats.measured and r.stats.tok_per_s > 0
                else None
                for r in self.replicas]
         measured = [v for v in spt if v is not None]
@@ -270,19 +307,19 @@ class Router:
     def submit(self, req: Request) -> Replica:
         rep = self.route(req)
         rep.routed += 1
-        rep.engine.submit(req)
+        rep.submit(req)
         return rep
 
     # ---------------------------------------------------------- execution
 
     def has_pending(self) -> bool:
-        return any(r.engine.has_pending() for r in self.replicas)
+        return any(r.has_pending() for r in self.replicas)
 
     def step(self) -> bool:
         stepped = False
         for rep in self.replicas:
-            if rep.engine.has_pending():
-                rep.engine.step()
+            if rep.has_pending():
+                rep.step()
                 stepped = True
         return stepped
 
@@ -301,7 +338,7 @@ class Router:
     def completed(self) -> Dict[int, Request]:
         out: Dict[int, Request] = {}
         for rep in self.replicas:
-            out.update(rep.engine.completed)
+            out.update(rep.completed)
         return out
 
     def routing_counters(self) -> Dict[str, int]:
@@ -320,7 +357,7 @@ class Router:
                 rep.name: {
                     "static_cycles_per_token":
                         rep.cost.get("cycles_per_token", 0.0),
-                    "measured": rep.engine.stats.snapshot(),
+                    "measured": rep.stats.snapshot(),
                     "effective_cost": costs[i],
                     "load": rep.load,
                     "routed": rep.routed,
@@ -339,7 +376,7 @@ class Router:
                     "policy": rep.policy_name,
                     "routed": rep.routed,
                     "cost": dict(rep.cost),
-                    "metrics": rep.engine.metrics(),
+                    "metrics": rep.metrics(),
                 } for rep in self.replicas
             },
         }

@@ -49,7 +49,11 @@ class AdmissionScheduler:
     def __post_init__(self):
         self._waiting: List[Tuple[int, Request]] = []
         self._seq = 0              # FIFO tiebreaker within a class
+        # requeued entries draw seqs from a far-negative counter: all
+        # outrank normal submits, FIFO among themselves
+        self._front = -(1 << 31)
         self.depth_highwater = 0   # deepest the queue has ever been
+        self.requeued = 0          # failure-recovery re-entries
 
     def __len__(self) -> int:
         return len(self._waiting)
@@ -66,6 +70,25 @@ class AdmissionScheduler:
             req.submit_time = now
         self._waiting.append((self._seq, req))
         self._seq += 1
+        if len(self._waiting) > self.depth_highwater:
+            self.depth_highwater = len(self._waiting)
+
+    def requeue(self, req: Request) -> None:
+        """Failure-recovery re-entry: put back a request that was
+        already admitted somewhere that died.
+
+        Differs from ``submit`` in exactly the ways recovery demands:
+        the bounded-queue check is bypassed (recovery must never drop
+        admitted work — the queue bound protects against NEW load, and
+        a requeue adds back work the fleet already accepted), the entry
+        goes to the FRONT of its priority class (decreasing negative
+        seq: FIFO among requeued, ahead of every normal submit), and
+        ``submit_time`` is preserved so max-wait promotion counts from
+        the original submission.
+        """
+        self._waiting.append((self._front, req))
+        self._front += 1
+        self.requeued += 1
         if len(self._waiting) > self.depth_highwater:
             self.depth_highwater = len(self._waiting)
 

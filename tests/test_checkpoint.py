@@ -1,0 +1,177 @@
+"""Dedicated ``repro.checkpoint`` coverage: the self-describing restore
+path prepared-weight (fabric) checkpoints depend on, per-leaf checksum
+verification, the unified miss behavior, and crash-safety/GC.
+
+Complements the pipeline-level tests in test_substrates.py (plain
+roundtrip through a ``like`` template, keep-k, FT-loop resume): here the
+contracts are about the checkpoint format itself.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint import (CheckpointError, CheckpointManager,
+                              CheckpointNotFound, ChecksumError,
+                              latest_step, list_steps,
+                              restore_checkpoint, save_checkpoint)
+from repro.core.policy import PrecisionSpec
+from repro.quant.prepare import PreparedWeight, prepare_weight
+
+
+def _prepared_tree():
+    """A serving-shaped tree: packed int4 + int8 PreparedWeights (with
+    an act scale), a raw bf16 leaf, a tuple, a None hole."""
+    rng = np.random.default_rng(0)
+    w4 = jnp.asarray(rng.normal(0, 1, (16, 8)), jnp.float32)
+    w8 = jnp.asarray(rng.normal(0, 1, (12, 8)), jnp.float32)
+    p4 = prepare_weight(w4, PrecisionSpec("int4", exact=True),
+                        act_scale=0.125)
+    p8 = prepare_weight(w8, PrecisionSpec("int8", exact=True))
+    assert p4.kind == "int4_packed" and p8.kind == "int8"
+    return {
+        "blocks": {"b0": {"attn": {"wq": p4, "wo": p8}}},
+        "emb": jnp.arange(24, dtype=jnp.bfloat16).reshape(4, 6),
+        "pair": (jnp.ones(3, jnp.float32), None),
+        "ids": [jnp.arange(5, dtype=jnp.int32)],
+    }
+
+
+class TestSelfDescribingRestore:
+    def test_prepared_tree_bit_exact_without_template(self, tmp_path):
+        tree = _prepared_tree()
+        save_checkpoint(str(tmp_path), 3, tree, {"policy": "int4"})
+        out, meta = restore_checkpoint(str(tmp_path), 3)   # no `like`
+        assert meta == {"policy": "int4"}
+
+        got4 = out["blocks"]["b0"]["attn"]["wq"]
+        ref4 = tree["blocks"]["b0"]["attn"]["wq"]
+        assert isinstance(got4, PreparedWeight)
+        assert got4.kind == "int4_packed"
+        # packed nibbles are uint8: any astype round trip would destroy
+        # them — bit-equality here is the whole point of the spec'd path
+        assert got4.data.dtype == ref4.data.dtype
+        np.testing.assert_array_equal(np.asarray(got4.data),
+                                      np.asarray(ref4.data))
+        np.testing.assert_array_equal(np.asarray(got4.scale),
+                                      np.asarray(ref4.scale))
+        np.testing.assert_array_equal(np.asarray(got4.act_scale),
+                                      np.asarray(ref4.act_scale))
+        got8 = out["blocks"]["b0"]["attn"]["wo"]
+        assert got8.kind == "int8" and got8.act_scale is None
+        np.testing.assert_array_equal(np.asarray(got8.data),
+                                      np.asarray(ref8 := tree["blocks"][
+                                          "b0"]["attn"]["wo"].data))
+        assert ref8.dtype == got8.data.dtype
+
+        # container fidelity: tuple stays tuple, list stays list, the
+        # None hole survives, bf16 comes back as bf16 bit-for-bit
+        assert isinstance(out["pair"], tuple) and out["pair"][1] is None
+        assert isinstance(out["ids"], list)
+        assert out["emb"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(out["emb"]).view(np.uint16),
+            np.asarray(tree["emb"]).view(np.uint16))
+
+    def test_like_template_still_casts(self, tmp_path):
+        tree = {"w": jnp.ones((2, 3), jnp.float32)}
+        save_checkpoint(str(tmp_path), 1, tree)
+        like = {"w": jnp.zeros((2, 3), jnp.bfloat16)}
+        out, _ = restore_checkpoint(str(tmp_path), 1, like)
+        assert out["w"].dtype == jnp.bfloat16
+
+    def test_like_shape_mismatch_is_checkpoint_error(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.ones((2, 3))})
+        with pytest.raises(CheckpointError, match="shape"):
+            restore_checkpoint(str(tmp_path), 1,
+                               {"w": jnp.ones((3, 2))})
+
+
+class TestChecksums:
+    def _corrupt(self, tmp_path, step, key):
+        npz = os.path.join(str(tmp_path), f"step_{step:09d}",
+                           "arrays.npz")
+        data = dict(np.load(npz))
+        arr = data[key]
+        flat = arr.reshape(-1).copy()
+        if flat.dtype.kind in "iu":
+            flat[0] ^= 1
+        else:
+            flat[0] = flat[0] + 1.0
+        data[key] = flat.reshape(arr.shape)
+        np.savez(npz, **data)
+
+    def test_corruption_raises_naming_leaf(self, tmp_path):
+        tree = {"alpha": jnp.arange(4, dtype=jnp.int32),
+                "beta": jnp.ones(3, jnp.float32)}
+        save_checkpoint(str(tmp_path), 5, tree)
+        self._corrupt(tmp_path, 5, "a0")        # leaf 0 == 'alpha'
+        with pytest.raises(ChecksumError) as ei:
+            restore_checkpoint(str(tmp_path), 5)
+        assert "alpha" in str(ei.value)
+        # the template path verifies too
+        with pytest.raises(ChecksumError, match="alpha"):
+            restore_checkpoint(str(tmp_path), 5, tree)
+
+    def test_verify_off_skips_the_check(self, tmp_path):
+        tree = {"alpha": jnp.arange(4, dtype=jnp.int32)}
+        save_checkpoint(str(tmp_path), 5, tree)
+        self._corrupt(tmp_path, 5, "a0")
+        out, _ = restore_checkpoint(str(tmp_path), 5, verify=False)
+        assert out["alpha"].shape == (4,)
+
+    def test_intact_checkpoint_verifies_clean(self, tmp_path):
+        tree = _prepared_tree()
+        save_checkpoint(str(tmp_path), 2, tree)
+        restore_checkpoint(str(tmp_path), 2)     # verify=True default
+
+
+class TestMissBehavior:
+    def test_restore_checkpoint_raises_not_found(self, tmp_path):
+        with pytest.raises(CheckpointNotFound):
+            restore_checkpoint(str(tmp_path), 9)
+        save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(2)})
+        with pytest.raises(CheckpointNotFound, match="have steps \\[1\\]"):
+            restore_checkpoint(str(tmp_path), 9)
+
+    def test_restore_latest_unified(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(CheckpointNotFound):
+            mgr.restore_latest()
+        assert mgr.restore_latest(missing_ok=True) == (None, None, {})
+        # CheckpointNotFound doubles as FileNotFoundError for callers
+        # that catch the stdlib type
+        with pytest.raises(FileNotFoundError):
+            mgr.restore_latest()
+
+
+class TestCrashSafetyAndGC:
+    def test_leftover_tmp_ignored_and_cleaned(self, tmp_path):
+        # a writer that died mid-save leaves step_N.tmp behind
+        stale = tmp_path / "step_000000042.tmp"
+        os.makedirs(stale)
+        (stale / "arrays.npz").write_bytes(b"partial")
+        assert latest_step(str(tmp_path)) is None
+        assert list_steps(str(tmp_path)) == []
+        # the next managed save garbage-collects the staging dir
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        mgr.save(1, {"x": jnp.zeros(2)})
+        assert not stale.exists()
+        assert list_steps(str(tmp_path)) == [1]
+
+    def test_keep_last_k(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=1)
+        for s in (1, 2, 3):
+            mgr.save(s, {"x": jnp.full(2, s)})
+        assert list_steps(str(tmp_path)) == [3]
+        step, out, _ = mgr.restore_latest({"x": jnp.zeros(2)})
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(out["x"]), [3.0, 3.0])
+
+    def test_save_over_same_step_replaces(self, tmp_path):
+        save_checkpoint(str(tmp_path), 7, {"x": jnp.zeros(2)})
+        save_checkpoint(str(tmp_path), 7, {"x": jnp.ones(2)})
+        out, _ = restore_checkpoint(str(tmp_path), 7)
+        np.testing.assert_array_equal(np.asarray(out["x"]), [1.0, 1.0])

@@ -1,0 +1,408 @@
+"""Serving-fabric unit contracts (``repro.fabric``).
+
+The wire layer (typed messages, framing, endpoint pairs), the config
+round trips behind serve-ready checkpoints, the scheduler's
+failure-recovery requeue, and the controller's kill → requeue →
+re-admit loop — the latter over deterministic jax-free fake engines so
+the control-plane logic is tested at unit speed. The real-model
+end-to-end (restore bit-exactness, identical streams through real
+engines, CI contract) lives in ``python -m repro.fabric smoke`` and
+TestEngineCheckpoint below.
+"""
+import dataclasses
+
+import msgpack
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoESpec
+from repro.fabric import transport as tp
+from repro.fabric.checkpoint import (engine_config_from_dict,
+                                     engine_config_to_dict,
+                                     model_config_from_dict,
+                                     model_config_to_dict)
+from repro.fabric.controller import (Controller, FabricError,
+                                     LocalWorkerDriver, ManualClock)
+from repro.fabric.worker import FabricWorker
+from repro.obs import ReplicaStats
+from repro.runtime.fault_tolerance import WorkerFailure
+from repro.serving.config import EngineConfig, SamplingParams
+from repro.serving.engine import Request
+from repro.serving.scheduler import AdmissionScheduler, SchedulerFull
+
+
+# ---------------------------------------------------------------- wire
+
+class TestWireProtocol:
+    MESSAGES = [
+        tp.Hello(name="w0", policy="int4_serving", slots=4,
+                 model_config={"d_model": 64, "rec_pattern": []},
+                 cost_correction="online"),
+        tp.SubmitRequest(rid=7, prompt=[1, 2, 3], max_new_tokens=8,
+                         priority=2, tags=["accuracy"],
+                         temperature=0.7, top_k=5, top_p=0.9,
+                         stop_ids=[11], seed=42),
+        tp.TokenChunk(rid=7, tokens=[4, 5], done=True,
+                      finish_reason="stop", truncated=True),
+        tp.StatsSnapshot(name="w0", stats={"tok_per_s": 3.5},
+                         slots=4, completed=9),
+        tp.Heartbeat(tick=12, time=3.25),
+        tp.Drain(), tp.Drained(completed=3), tp.Shutdown(),
+    ]
+
+    @pytest.mark.parametrize("msg", MESSAGES,
+                             ids=lambda m: type(m).__name__)
+    def test_codec_roundtrip(self, msg):
+        assert tp.decode_message(tp.encode_message(msg)) == msg
+
+    def test_unknown_type_rejected(self):
+        with pytest.raises(ValueError, match="unknown fabric message"):
+            tp.decode_message(msgpack.packb({"t": "Nope", "f": {}}))
+        with pytest.raises(TypeError):
+            tp.encode_message({"not": "a message"})
+
+    def test_framing_survives_arbitrary_chunking(self):
+        payloads = [tp.encode_message(m) for m in self.MESSAGES]
+        stream = b"".join(tp.pack_frame(p) for p in payloads)
+        for chunk in (1, 3, len(stream)):      # byte-by-byte .. all-at-once
+            dec = tp.FrameDecoder()
+            frames = []
+            for i in range(0, len(stream), chunk):
+                frames.extend(dec.feed(stream[i:i + chunk]))
+            assert frames == payloads
+
+    def test_local_pair_is_a_framed_wire(self):
+        a, b = tp.local_pair()
+        a.send(tp.Heartbeat(tick=1, time=0.0))
+        a.send(tp.Drain())
+        assert b.poll() == [tp.Heartbeat(tick=1, time=0.0), tp.Drain()]
+        assert b.poll() == []
+        b.send(tp.Drained())
+        assert a.poll() == [tp.Drained()]
+        # closing either side closes both (a dead TCP peer, in memory)
+        b.close()
+        assert a.closed and b.closed
+        with pytest.raises(tp.TransportClosed):
+            a.send(tp.Shutdown())
+
+    def test_socket_endpoints_roundtrip(self):
+        listener = tp.Listener()
+        client = tp.connect(listener.host, listener.port)
+        server = listener.accept(timeout=10.0)
+        listener.close()
+        try:
+            client.send(tp.Hello(name="w", policy="bf16", slots=1))
+            for _ in range(100):
+                got = server.poll()
+                if got:
+                    break
+            assert got == [tp.Hello(name="w", policy="bf16", slots=1)]
+            server.send(tp.Shutdown())
+            for _ in range(100):
+                back = client.poll()
+                if back:
+                    break
+            assert back == [tp.Shutdown()]
+        finally:
+            client.close()
+            server.close()
+
+
+# ------------------------------------------------------- config codecs
+
+def _tiny_cfg(policy="bf16", **kw) -> ModelConfig:
+    return ModelConfig(arch_id="tiny", family="lm", n_layers=1,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab=128, precision_policy=policy, **kw)
+
+
+class TestConfigRoundTrip:
+    def test_model_config_through_the_wire(self):
+        cfg = _tiny_cfg(moe=MoESpec(n_experts=4, top_k=2, d_expert=16),
+                        rec_pattern=("rec", "rec", "attn"))
+        wire = msgpack.unpackb(msgpack.packb(model_config_to_dict(cfg)))
+        back = model_config_from_dict(wire)
+        assert back == cfg                    # tuples/MoESpec restored
+        assert isinstance(back.rec_pattern, tuple)
+        assert isinstance(back.moe, MoESpec)
+
+    def test_model_config_unknown_field_rejected(self):
+        d = model_config_to_dict(_tiny_cfg())
+        d["from_the_future"] = 1
+        with pytest.raises(ValueError, match="unknown fields"):
+            model_config_from_dict(d)
+
+    def test_engine_config_reinjects_act_scales(self):
+        config = EngineConfig(batch_slots=2, cache_len=64,
+                              act_calibration="auto",
+                              cost_correction="online")
+        wire = msgpack.unpackb(msgpack.packb(
+            engine_config_to_dict(config)))
+        assert "act_calibration" not in wire  # never serialized
+        scales = {"block/mlp/w_up": 0.25}
+        back = engine_config_from_dict(wire, scales)
+        # restore swaps 'auto' (a calibration PASS) for the resolved
+        # scales dict (zero-work) and keeps every other knob
+        assert back.act_calibration == scales
+        assert dataclasses.replace(back, act_calibration="auto") == config
+
+    def test_engine_config_unknown_field_rejected(self):
+        with pytest.raises(ValueError, match="unknown fields"):
+            engine_config_from_dict({"warp_drive": True}, None)
+
+
+# --------------------------------------------------- scheduler requeue
+
+class TestSchedulerRequeue:
+    def test_requeue_jumps_the_line_and_bypasses_the_bound(self):
+        sched = AdmissionScheduler(max_queue=2)
+        a, b = Request(rid=1, prompt=np.arange(3)), \
+            Request(rid=2, prompt=np.arange(3))
+        sched.submit(a, now=0.0)
+        sched.submit(b, now=0.0)
+        with pytest.raises(SchedulerFull):
+            sched.submit(Request(rid=3, prompt=np.arange(3)), now=0.0)
+        # recovery re-entries are admitted work: never bounced, placed
+        # ahead of every waiting submit of the same priority class
+        r1 = Request(rid=10, prompt=np.arange(3), submit_time=0.0)
+        r2 = Request(rid=11, prompt=np.arange(3), submit_time=0.0)
+        sched.requeue(r1)
+        sched.requeue(r2)
+        assert sched.requeued == 2 and len(sched) == 4
+        picked = sched.select(4, now=1.0)
+        assert [r.rid for r in picked] == [10, 11, 1, 2]
+
+    def test_requeue_preserves_submit_time_for_promotion(self):
+        sched = AdmissionScheduler(max_wait=5.0)
+        old = Request(rid=1, prompt=np.arange(3), priority=9,
+                      submit_time=0.0)
+        sched.requeue(old)
+        fresh = Request(rid=2, prompt=np.arange(3), priority=0)
+        sched.submit(fresh, now=6.0)
+        # the requeued request kept its original submission clock: it
+        # is already past max_wait and outranks the priority-0 arrival
+        assert [r.rid for r in sched.select(1, now=6.0)] == [1]
+
+
+# ------------------------------------------------ fake-engine fleet
+
+class FakeEngine:
+    """Deterministic jax-free stand-in for ServingEngine: one token per
+    slot per step, value ``(rid * 31 + position) % 97`` — placement-
+    and batch-independent by construction, like greedy decode."""
+
+    def __init__(self, cfg, config, clock):
+        self.cfg = cfg
+        self.config = config
+        self.b = config.batch_slots
+        self.clock = clock
+        self.stats = ReplicaStats()
+        self.scheduler = AdmissionScheduler()
+        self.slot_req = [None] * self.b
+        self.completed = {}
+
+    def submit(self, req):
+        self.scheduler.submit(req, now=self.clock())
+
+    def has_pending(self):
+        return len(self.scheduler) > 0 \
+            or any(r is not None for r in self.slot_req)
+
+    def step(self):
+        now = self.clock()
+        free = [s for s, r in enumerate(self.slot_req) if r is None]
+        for req in self.scheduler.select(len(free), now):
+            self.slot_req[free.pop(0)] = req
+            req.tokens = [int(t) for t in req.prompt]
+        new = 0
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.tokens.append((req.rid * 31 + len(req.tokens)) % 97)
+            new += 1
+            if len(req.tokens) - len(req.prompt) >= req.budget:
+                req.done = True
+                req.finish_reason = "length"
+                self.completed[req.rid] = req
+                self.slot_req[s] = None
+        self.stats.on_tick(now, new, len(self.scheduler),
+                           active_slots=sum(r is not None
+                                            for r in self.slot_req))
+
+
+def _expected_stream(req) -> list:
+    start = len(req.prompt)
+    return [int(t) for t in req.prompt] + [
+        (req.rid * 31 + start + j) % 97 for j in range(req.budget)]
+
+
+def _spawn_fake(ctrl, name, clock, *, slots=2, failure_hook=None):
+    cfg = _tiny_cfg()
+    engine = FakeEngine(cfg, EngineConfig(batch_slots=slots,
+                                          cost_correction="online"),
+                        clock)
+    ctrl_ep, worker_ep = tp.local_pair()
+    worker = FabricWorker(name, engine, worker_ep, clock=clock,
+                          failure_hook=failure_hook)
+    worker.announce()
+    return ctrl.add_worker(ctrl_ep, driver=LocalWorkerDriver(worker),
+                           name=name)
+
+
+def _requests(n, max_new=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid,
+                    prompt=rng.integers(0, 97, int(rng.integers(2, 6)),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for rid in range(n)]
+
+
+def _run(n_requests, *, kill_tick=None, heartbeat_timeout=3.0,
+         max_new=6):
+    clock = ManualClock()
+    ctrl = Controller(heartbeat_timeout=heartbeat_timeout, clock=clock)
+
+    def die(tick):
+        if kill_tick is not None and tick == kill_tick:
+            raise WorkerFailure("injected")
+
+    _spawn_fake(ctrl, "worker-a", clock)
+    _spawn_fake(ctrl, "worker-b", clock, failure_hook=die)
+    reqs = _requests(n_requests, max_new=max_new)
+    for r in reqs:
+        ctrl.submit(r)
+    ctrl.run_until_drained(advance=lambda: clock.advance(1.0))
+    return ctrl, reqs
+
+
+class TestControllerFleet:
+    def test_fleet_completes_with_exact_streams(self):
+        ctrl, reqs = _run(6)
+        assert sorted(ctrl.completed) == [r.rid for r in reqs]
+        for req in reqs:
+            assert req.done and req.tokens == _expected_stream(req)
+        # routing ran over TRANSPORTED stats, not in-process objects
+        report = ctrl.routing_report()
+        assert report["cost_correction"] == "online"
+        for name, rep in report["replicas"].items():
+            assert rep["measured"]["transported"], name
+        routed = ctrl.routing_counters()
+        assert sum(routed.values()) == 6 and all(
+            v > 0 for v in routed.values()), routed
+
+    def test_kill_mid_flight_loses_nothing(self):
+        ref, _ = _run(8, max_new=8)
+        ref_streams = {rid: list(r.tokens)
+                       for rid, r in ref.completed.items()}
+        ctrl, reqs = _run(8, kill_tick=2, max_new=8)
+        assert ctrl.failures == ["worker-b"]
+        assert ctrl.scheduler.requeued > 0
+        assert sorted(ctrl.completed) == sorted(ref_streams)
+        for rid, req in ctrl.completed.items():
+            assert req.tokens == ref_streams[rid], f"rid {rid} diverged"
+        alive = [h.name for h in ctrl.workers.values() if h.alive]
+        assert alive == ["worker-a"]
+
+    def test_closed_endpoint_detected_without_heartbeat_wait(self):
+        clock = ManualClock()
+        ctrl = Controller(heartbeat_timeout=1e9, clock=clock)
+        _spawn_fake(ctrl, "worker-a", clock)
+        hb = _spawn_fake(ctrl, "worker-b", clock)
+        reqs = _requests(4)
+        for r in reqs:
+            ctrl.submit(r)
+        ctrl.tick()
+        hb.endpoint.close()     # process death: socket EOF, no timeout
+        ctrl.run_until_drained(advance=lambda: clock.advance(1.0))
+        assert ctrl.failures == ["worker-b"]
+        assert sorted(ctrl.completed) == [r.rid for r in reqs]
+
+    def test_last_worker_death_is_a_fleet_error(self):
+        clock = ManualClock()
+        ctrl = Controller(heartbeat_timeout=2.0, clock=clock)
+
+        def die(tick):
+            if tick == 1:
+                raise WorkerFailure("injected")
+
+        _spawn_fake(ctrl, "only", clock, failure_hook=die)
+        for r in _requests(3):
+            ctrl.submit(r)
+        with pytest.raises(FabricError, match="no alive workers"):
+            ctrl.run_until_drained(advance=lambda: clock.advance(1.0))
+
+    def test_worker_drain_and_shutdown(self):
+        clock = ManualClock()
+        engine = FakeEngine(_tiny_cfg(), EngineConfig(batch_slots=2),
+                            clock)
+        ctrl_ep, worker_ep = tp.local_pair()
+        worker = FabricWorker("w", engine, worker_ep, clock=clock)
+        req = _requests(1)[0]
+        sp = req.sampling
+        ctrl_ep.send(tp.SubmitRequest(
+            rid=req.rid, prompt=[int(t) for t in req.prompt],
+            max_new_tokens=req.budget, temperature=sp.temperature,
+            top_k=sp.top_k, top_p=sp.top_p))
+        ctrl_ep.send(tp.Drain())
+        for _ in range(32):
+            clock.advance(1.0)
+            worker.tick()
+        msgs = ctrl_ep.poll()
+        drained = [m for m in msgs if isinstance(m, tp.Drained)]
+        assert len(drained) == 1 and drained[0].completed == 1
+        final = [m for m in msgs if isinstance(m, tp.TokenChunk)
+                 and m.done]
+        assert len(final) == 1
+        ctrl_ep.send(tp.Shutdown())
+        assert worker.tick() is False
+
+
+# ------------------------------------------- real-model checkpoint
+
+class TestEngineCheckpoint:
+    def test_prepared_engine_roundtrips_bit_exact(self, tmp_path):
+        import jax
+
+        from repro.configs import reduced
+        from repro.fabric.checkpoint import (build_engine,
+                                             load_engine_checkpoint,
+                                             save_engine_checkpoint)
+        from repro.models import registry
+        from repro.quant.prepare import PreparedWeight
+        from repro.serving.engine import ServingEngine
+
+        cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                                  precision_policy="int4_serving")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        config = EngineConfig(batch_slots=2, cache_len=64,
+                              act_calibration="auto",
+                              cost_correction="online")
+        engine = ServingEngine(cfg, api, params, config=config)
+        save_engine_checkpoint(engine, str(tmp_path), step=0)
+
+        rcfg, rconfig, rparams, rscales, _ = load_engine_checkpoint(
+            str(tmp_path))
+        assert rcfg == cfg
+        assert rconfig == dataclasses.replace(
+            config, act_calibration=rscales)
+        assert rscales == {k: pytest.approx(float(v))
+                           for k, v in engine.act_scales.items()}
+
+        ref_leaves, ref_def = jax.tree_util.tree_flatten(engine.params)
+        got_leaves, got_def = jax.tree_util.tree_flatten(rparams)
+        assert ref_def == got_def
+        assert any(isinstance(x, PreparedWeight)
+                   for x in jax.tree_util.tree_leaves(
+                       rparams,
+                       is_leaf=lambda x: isinstance(x, PreparedWeight)))
+        for ref, got in zip(ref_leaves, got_leaves):
+            assert ref.dtype == got.dtype
+            np.testing.assert_array_equal(np.asarray(ref),
+                                          np.asarray(got))
+
+        # the rebuilt engine skipped quantize/pack/calibrate entirely
+        restored = build_engine(str(tmp_path), api=api)
+        assert restored.weight_quant_trace_count() == 0
+        assert restored.act_quant_trace_count() == 0

@@ -1,0 +1,139 @@
+"""``runtime.fault_tolerance`` contracts beyond the happy paths in
+test_substrates.py: exact batch-order replay across restarts, restart
+metadata persistence, repeated failures, and straggler policy hooks.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.fault_tolerance import (FTConfig, FaultTolerantLoop,
+                                           StragglerMonitor,
+                                           WorkerFailure)
+
+
+def _loop(tmp_path, calls, failure_hook=None, straggler_hook=None,
+          checkpoint_every=4, max_restarts=3):
+    def step_fn(state, batch):
+        return {"w": state["w"] + batch["tokens"].sum()}, {"loss": 0.0}
+
+    def batch_fn(step):
+        calls.append(step)
+        return {"tokens": jnp.full((2,), step, jnp.int32)}
+
+    return FaultTolerantLoop(
+        step_fn, batch_fn, str(tmp_path),
+        FTConfig(checkpoint_every=checkpoint_every,
+                 max_restarts=max_restarts),
+        failure_hook=failure_hook, straggler_hook=straggler_hook)
+
+
+class TestResumeReplay:
+    def test_resume_replays_exact_batch_order(self, tmp_path):
+        """After a failure the loop restores the last checkpoint and
+        re-consumes the data stream from that step: the observed
+        batch-index sequence is exactly (progress so far) + (replay from
+        the checkpoint step) — deterministic, no skipped or duplicated
+        steps relative to the checkpoint."""
+        calls = []
+        fired = {"done": False}
+
+        def fail_at_6(step):
+            if step == 6 and not fired["done"]:
+                fired["done"] = True
+                raise WorkerFailure("injected")
+
+        loop = _loop(tmp_path, calls, failure_hook=fail_at_6)
+        state, step = loop.run({"w": jnp.zeros(())}, 0, 10)
+        assert step == 10
+        # ran 0..5, failed at 6 (before batch_fn), restored step-4
+        # checkpoint, replayed 4 and 5, then continued
+        assert calls == [0, 1, 2, 3, 4, 5, 4, 5, 6, 7, 8, 9]
+        assert float(state["w"]) == sum(2 * s for s in range(10))
+
+    def test_fresh_loop_resumes_from_disk(self, tmp_path):
+        """A NEW loop over the same directory (the restarted-process
+        case) resumes at the checkpointed step instead of step 0."""
+        calls = []
+        loop = _loop(tmp_path, calls)
+        loop.run({"w": jnp.zeros(())}, 0, 8)     # checkpoints at 4, 8
+        calls2 = []
+        loop2 = _loop(tmp_path, calls2)
+        state, step = loop2.run({"w": jnp.zeros(())}, 0, 12)
+        assert step == 12
+        assert calls2 == [8, 9, 10, 11]          # nothing before 8 reran
+        assert float(state["w"]) == sum(2 * s for s in range(12))
+
+    def test_restart_count_persisted_in_metadata(self, tmp_path):
+        calls = []
+        fired = {"n": 0}
+
+        def fail_twice(step):
+            if step == 5 and fired["n"] < 2:
+                fired["n"] += 1
+                raise WorkerFailure("injected")
+
+        loop = _loop(tmp_path, calls, failure_hook=fail_twice)
+        state, step = loop.run({"w": jnp.zeros(())}, 0, 8)
+        assert step == 8 and loop.restarts == 2
+        _, _, meta = CheckpointManager(str(tmp_path)).restore_latest(
+            {"w": jnp.zeros(())})
+        assert meta["restarts"] == 2
+
+    def test_failure_before_first_checkpoint_replays_from_start(
+            self, tmp_path):
+        calls = []
+        fired = {"done": False}
+
+        def fail_at_2(step):
+            if step == 2 and not fired["done"]:
+                fired["done"] = True
+                raise WorkerFailure("injected")
+
+        loop = _loop(tmp_path, calls, failure_hook=fail_at_2,
+                     checkpoint_every=50)
+        state, step = loop.run({"w": jnp.zeros(())}, 0, 5)
+        assert step == 5
+        assert calls == [0, 1, 0, 1, 2, 3, 4]    # full replay from 0
+        assert float(state["w"]) == sum(2 * s for s in range(5))
+
+
+class TestStraggler:
+    def test_hook_fires_on_flagged_step(self, tmp_path, monkeypatch):
+        import repro.runtime.fault_tolerance as ft
+
+        flagged = []
+        calls = []
+        loop = _loop(tmp_path, calls,
+                     straggler_hook=lambda s: flagged.append(s))
+        # scripted clock: the loop reads monotonic() twice per step
+        # (t0, then t0 + duration); step 9 takes 10x the median
+        durations = [1.0] * 9 + [10.0] + [1.0] * 4
+        seq, t = [], 0.0
+        for d in durations:
+            seq += [t, t + d]
+            t += d + 1.0
+        it = iter(seq)
+
+        class _ScriptedTime:
+            monotonic = staticmethod(lambda: next(it))
+
+        # swap the module's `time` reference, not the global time
+        # module — jax internals keep the real clock
+        monkeypatch.setattr(ft, "time", _ScriptedTime)
+        loop.run({"w": jnp.zeros(())}, 0, len(durations))
+        assert loop.monitor.flagged == [9]
+        assert flagged == [9]
+
+    def test_monitor_warmup_and_window(self):
+        mon = StragglerMonitor(FTConfig(deadline_factor=2.0,
+                                        straggler_window=8))
+        # fewer than 8 observations: never flags, even huge outliers
+        for i in range(7):
+            assert not mon.observe(i, 100.0 if i == 3 else 1.0)
+        for i in range(7, 30):
+            mon.observe(i, 1.0)
+        # median of the trailing window is 1.0 now: 2.5 flags
+        assert mon.observe(30, 2.5)
+        assert 30 in mon.flagged

@@ -249,5 +249,6 @@ class TestReplicaStats:
         st = ReplicaStats()
         snap = st.snapshot()
         assert set(snap) == {"tok_per_s", "queue_depth", "active_slots",
-                             "p95_ttft_s", "ttft_samples", "ticks"}
+                             "p95_ttft_s", "ttft_samples", "ticks",
+                             "transported"}
         assert snap["tok_per_s"] is None
