@@ -57,6 +57,7 @@ the full per-policy/router/bursty breakdown under its ``detail`` key.
 schema.)
 """
 import dataclasses
+import os
 import time
 
 import numpy as np
@@ -349,6 +350,65 @@ def _bench_bursty():
     return out
 
 
+FUSED_BLOCK = 8
+
+
+def operand_bytes_per_block(engine, block: int):
+    """Weight-operand memory traffic of one decode block, per datapath:
+    'packed' = the stored operands (int8 rows / packed nibbles / fp
+    codes + scales) the fused kernels stream on every scan step;
+    'staged' = the compute-dtype (bf16) operand the staged fallback
+    materializes once per block and re-reads every step. The ratio is
+    the traffic the fused datapath removes."""
+    from repro.quant.prepare import PreparedWeight, iter_projection_weights
+    paths = registry.projection_paths(engine.cfg)
+    packed = staged = 0
+    for _, w in iter_projection_weights(engine.params, paths):
+        if not isinstance(w, PreparedWeight) or w.kind == "fp16":
+            continue
+        elems = w.data.size * (2 if w.kind.endswith("_packed") else 1)
+        packed += w.nbytes() * block
+        staged += elems * 2 * (block + 1)    # one write + block reads
+    return {"packed": int(packed), "staged": int(staged),
+            "ratio": staged / max(packed, 1)}
+
+
+def _bench_fused(repeats: int = 3):
+    """Fused-vs-staged ablation at one decode block: the same prepared
+    + calibrated int8 engine with ``fused_executors`` on vs off
+    (identical params, scales and block size), interleaved best-of
+    passes, plus the traced staged-materialization counts and the
+    per-block operand-traffic column."""
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy="int8_serving")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    fused = ServingEngine(cfg, api, params, config=EngineConfig(
+        batch_slots=4, cache_len=128, decode_block=FUSED_BLOCK,
+        act_calibration="auto", fused_executors="on"))
+    staged = ServingEngine(cfg, api, fused.params, config=EngineConfig(
+        batch_slots=4, cache_len=128, decode_block=FUSED_BLOCK,
+        act_calibration=fused.act_scales, fused_executors="off"))
+    engines = {"fused": fused, "staged": staged}
+    mats = {k: e.staged_trace_count() for k, e in engines.items()}
+    assert mats["fused"] == 0 < mats["staged"], mats
+    for eng in engines.values():
+        _warmup(eng)
+    best = {k: 0.0 for k in engines}
+    for _ in range(repeats):
+        for name, eng in engines.items():
+            tok_s, _, _ = _timed_pass(eng, cfg)
+            best[name] = max(best[name], tok_s)
+    traffic = operand_bytes_per_block(fused, FUSED_BLOCK)
+    return {
+        "decode_block": FUSED_BLOCK,
+        "tok_per_s": best,
+        "fused_speedup": best["fused"] / max(best["staged"], 1e-9),
+        "staged_materializations_per_block": mats,
+        "operand_bytes_per_block": traffic,
+    }
+
+
 def _bench_trace_overhead(repeats: int = 3):
     """Tracing must observe, not perturb: the same prepared int8
     engine with spans on vs off, interleaved best-of-``repeats`` timed
@@ -446,6 +506,24 @@ def _bench_cold_start(repeats: int = 2):
 
 
 def run(verbose: bool = True, repeats: int = 3):
+    """Whole-bench wrapper: fused executors default to the Pallas
+    backend, which on CPU means interpret mode — pure tracing overhead
+    that would drown the datapath being measured. Pin the identical-math
+    XLA reference backend for the duration of the bench (unless the
+    caller pinned one explicitly) so every wall-clock row, fused or
+    staged, measures real compute."""
+    prev = os.environ.get("REPRO_FUSED_BACKEND")
+    os.environ["REPRO_FUSED_BACKEND"] = prev or "xla"
+    try:
+        return _run(verbose, repeats)
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_FUSED_BACKEND", None)
+        else:
+            os.environ["REPRO_FUSED_BACKEND"] = prev
+
+
+def _run(verbose: bool = True, repeats: int = 3):
     # build + warm every engine of every policy FIRST, then interleave
     # the timed repeat sweeps across policies: each engine's
     # best-of-``repeats`` samples span the whole bench wall-clock
@@ -502,6 +580,17 @@ def run(verbose: bool = True, repeats: int = 3):
             f"{trace_ov['trace_events']} events)")
         if not trace_ov["within_5pct"]:
             print("WARNING: tracing overhead exceeds the 5% budget")
+    fusedr = _bench_fused(repeats)
+    if verbose:
+        t = fusedr["operand_bytes_per_block"]
+        row("serve/fused-vs-staged",
+            1e6 / max(fusedr["tok_per_s"]["fused"], 1e-9),
+            f"{fusedr['tok_per_s']['fused']:.1f} tok/s fused vs "
+            f"{fusedr['tok_per_s']['staged']:.1f} staged "
+            f"({fusedr['fused_speedup']:.2f}x, b{fusedr['decode_block']}), "
+            f"mats={fusedr['staged_materializations_per_block']}, "
+            f"operand {t['packed']}B vs {t['staged']}B "
+            f"({t['ratio']:.2f}x traffic cut)")
     cold = _bench_cold_start()
     if verbose:
         for p, c in cold.items():
@@ -566,6 +655,8 @@ def run(verbose: bool = True, repeats: int = 3):
             "goodput_speedup": bursty["goodput_speedup"],
         },
         "trace_overhead": trace_ov,
+        "fused": fusedr,
+        "operand_bytes_per_block": fusedr["operand_bytes_per_block"],
         "cold_start": {
             "restore_s": {p: cold[p]["restore_s"] for p in POLICIES},
             "raw_s": {p: cold[p]["raw_s"] for p in POLICIES},
@@ -577,7 +668,7 @@ def run(verbose: bool = True, repeats: int = 3):
         # full per-policy/router/bursty breakdown (formerly the
         # separate serve_bench.json artifact)
         "detail": {**results, "router": router_r, "bursty": bursty,
-                   "cold_start": cold},
+                   "fused": fusedr, "cold_start": cold},
     }
     emit("BENCH_serving", summary)
     if verbose:

@@ -50,9 +50,11 @@ def arch_slug(arch: str) -> str:
 
 
 def _candidates(args) -> tuple:
+    group_sizes = tuple(None if g <= 0 else g
+                        for g in getattr(args, "group_sizes", [0]))
     return cand_mod.default_candidates(
         widths=tuple(args.widths), clusters=tuple(args.clusters),
-        modes=tuple(args.modes))
+        modes=tuple(args.modes), group_sizes=group_sizes)
 
 
 def _table(args, engine, arch, shapes):
@@ -78,8 +80,12 @@ def _add_search_args(p: argparse.ArgumentParser):
     p.add_argument("--clusters", type=int, nargs="+", default=[1],
                    help="cluster sizes to enumerate")
     p.add_argument("--modes", nargs="+",
-                   default=["bf16", "fp16_ipu", "int8", "int4"],
+                   default=["bf16", "fp16_ipu", "int8", "int4",
+                            "fp8", "fp4"],
                    help="candidate operand modes")
+    p.add_argument("--group-sizes", type=int, nargs="+", default=[0],
+                   help="per-group weight-scale sizes for the storage "
+                        "modes (0 = per-out-channel scales)")
     p.add_argument("--no-probe", action="store_true",
                    help="skip the model forward-divergence probe "
                         "(analytic accuracy proxy only)")
@@ -146,7 +152,7 @@ def cmd_score(argv: List[str]) -> int:
     for rule in plan.rules:
         assign[rule.group] = cand_mod.canonical(
             rule.mode, w=rule.w, sw_precision=rule.sw_precision,
-            cluster=rule.cluster)
+            cluster=rule.cluster, group_size=rule.group_size)
     missing = [g.name for g in table.groups if g.name not in assign]
     if missing:
         raise SystemExit(f"plan {plan.name} lacks groups {missing}")
@@ -223,7 +229,7 @@ def plan_weight_bytes(arch: str, modes, shapes: str = "full"
         if g.name == "head":
             mode = "fp32"            # never prepared: stays raw resident
         total += g.d_in * g.d_out * count * MODE_BYTES_PER_PARAM[mode]
-        if mode in ("int8", "int4"):
+        if mode in ("int8", "int4", "fp8", "fp4"):
             total += g.d_out * count * 4     # f32 scales per out-channel
     return total
 

@@ -28,7 +28,7 @@ from repro.core.workloads import ConvLayer
 from repro.models.registry import ProjGroup, projection_groups
 
 _TYPES = {"int4": sim.INT4, "int8": sim.INT8, "fp16_ipu": sim.FP16,
-          "bf16": sim.FP16}
+          "bf16": sim.FP16, "fp8": sim.FP8, "fp4": sim.FP4}
 
 
 def _cfg(arch: str, shapes: str):
@@ -111,6 +111,15 @@ def analytic_proxy(mode: str, w: int, sw_precision: int) -> float:
         bits = 4 if mode == "int4" else 8
         # symmetric absmax fake-quant: step ~ 2^(1-bits), RMS step/sqrt(12)
         return 2.0 ** (1 - bits) / math.sqrt(12.0)
+    if mode in ("fp8", "fp4"):
+        # fp storage codecs: relative step of the mantissa grid is
+        # 2^-(man_bits+1) at the bin midpoint; RMS step/sqrt(12). The
+        # exponent field tracks magnitude, so unlike the int modes the
+        # error is relative rather than absmax-absolute — which is the
+        # whole point of the tier — but as a dimensionless proxy the
+        # mantissa-grid RMS is the comparable first-order number.
+        man = 3 if mode == "fp8" else 1
+        return 2.0 ** -(man + 1) / math.sqrt(12.0)
     # fp16_ipu: Theorem-1 FP-IP bound at unit product scale, relative to
     # the n-product sum, plus fp16's own mantissa noise floor
     from repro.core.error_bounds import fp_ip_bound

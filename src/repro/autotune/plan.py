@@ -24,7 +24,7 @@ from repro.core.policy import PrecisionPolicy, PrecisionSpec
 
 PLAN_SCHEMA = "precision-plan-v1"
 
-MODES = ("bf16", "fp32", "int8", "int4", "fp16_ipu")
+MODES = ("bf16", "fp32", "int8", "int4", "fp8", "fp4", "fp16_ipu")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +34,10 @@ class PlanRule:
     ``w``/``sw_precision``/``cluster`` describe the MC-IPU configuration
     the candidate was scored on; only fp16_ipu rules carry them into the
     executed PrecisionSpec (INT modes need no alignment hardware).
+    ``group_size`` (int/fp storage modes) selects per-group weight
+    scales — K/group_size scale groups along the contraction dim —
+    threaded into the PrecisionSpec; None keeps per-out-channel scales.
+    (``group`` is the projection-group *name*, not related.)
     """
 
     group: str
@@ -43,11 +47,15 @@ class PlanRule:
     sw_precision: int = 28
     cluster: int = 1
     exact: bool = False
+    group_size: Any = None
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"invalid plan mode {self.mode!r} "
                              f"(want one of {MODES})")
+        if self.group_size is not None and int(self.group_size) < 1:
+            raise ValueError(f"group_size must be positive, got "
+                             f"{self.group_size}")
 
     def spec(self) -> PrecisionSpec:
         if self.mode == "fp16_ipu":
@@ -55,7 +63,8 @@ class PlanRule:
                 "fp16_ipu", exact=self.exact,
                 ipu=IPUConfig(n=16, w=max(self.w, 10),
                               sw_precision=self.sw_precision))
-        return PrecisionSpec(self.mode, exact=self.exact)
+        gs = None if self.group_size is None else int(self.group_size)
+        return PrecisionSpec(self.mode, exact=self.exact, group_size=gs)
 
 
 @dataclasses.dataclass(frozen=True)

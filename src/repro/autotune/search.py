@@ -206,7 +206,8 @@ def _rules_for(table: ScoreTable, assign: Assignment) -> Tuple[PlanRule, ...]:
                  mode=assign[g.name].mode, w=assign[g.name].w,
                  sw_precision=assign[g.name].sw_precision,
                  cluster=assign[g.name].cluster,
-                 exact=exact_for(assign[g.name].mode, assign[g.name].w))
+                 exact=exact_for(assign[g.name].mode, assign[g.name].w),
+                 group_size=assign[g.name].group_size)
         for g in table.groups)
 
 

@@ -28,8 +28,9 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.simulator import (FP16, INT4, INT8, INT8x4, OperandTypes,
-                                  TileConfig, iterations_per_group)
+from repro.core.simulator import (FP4, FP8, FP16, INT4, INT8, INT8x4,
+                                  OperandTypes, TileConfig,
+                                  iterations_per_group)
 
 F_CLK = 0.488e9  # Hz — matches the paper's 4-TOPS big-tile baseline
 
@@ -117,12 +118,20 @@ class IPUDesign:
         return True
 
     def iterations(self, t: OperandTypes) -> float:
-        """Nibble/serial iterations per inner product for a workload."""
+        """Nibble/serial iterations per inner product for a workload.
+
+        FP iterations scale with the operand *significand* widths
+        (OperandTypes carries them: 12 for FP16, 4 for fp8 e4m3, 2 for
+        fp4 e2m1); the ``fp16_iters`` override models 12-bit-specific
+        decompositions (NVDLA dual-INT8, serial double pass) and so
+        applies only to full-width (>= 12b) significands."""
         if t.is_fp:
-            if self.fp16_iters is not None:
+            if self.fp16_iters is not None and min(t.a_bits,
+                                                   t.b_bits) >= 12:
                 it = self.fp16_iters
             else:
-                it = (-(-12 // self.mult_a)) * (-(-12 // self.mult_b))
+                it = ((-(-t.a_bits // self.mult_a))
+                      * (-(-t.b_bits // self.mult_b)))
             return it * self.fp_mc_factor
         ia = -(-t.a_bits // self.mult_a)
         ib = -(-t.b_bits // self.mult_b)
@@ -314,6 +323,12 @@ PAPER_TABLE1 = {
 }
 
 WORKLOAD_TYPES = {"4x4": INT4, "8x4": INT8x4, "8x8": INT8, "fp16": FP16}
+
+# fp storage-tier workloads (not Table 1 columns — the paper evaluates
+# fp16 only; these score the fp8/fp4 prepared-weight modes the serving
+# stack deploys, on the same alignment datapath with narrower
+# significand iteration counts)
+FP_STORAGE_TYPES = {"fp8": FP8, "fp4": FP4}
 
 # §4.2 relative deltas (16-input tiles)
 PAPER_FIG7_DELTAS = {

@@ -52,13 +52,23 @@ def trace_routing():
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionSpec:
-    mode: str = "bf16"            # bf16|fp32|int8|int4|fp16_ipu
-    exact: bool = False           # route through bit-exact kernels
+    mode: str = "bf16"         # bf16|fp32|int8|int4|fp8|fp4|fp16_ipu
+    exact: bool = False        # route through bit-exact kernels
     ipu: Optional[IPUConfig] = None   # for fp16_ipu exact mode
+    # per-group weight scales: splits the contraction dim into
+    # K/group_size scale groups (int + fp storage modes); None keeps
+    # the per-out-channel layout. Named group_size, not group —
+    # autotune's PlanRule already uses 'group' for the projection-group
+    # name.
+    group_size: Optional[int] = None
 
     def __post_init__(self):
-        if self.mode not in ("bf16", "fp32", "int8", "int4", "fp16_ipu"):
+        if self.mode not in ("bf16", "fp32", "int8", "int4",
+                             "fp8", "fp4", "fp16_ipu"):
             raise ValueError(self.mode)
+        if self.group_size is not None and self.group_size < 1:
+            raise ValueError(f"group_size must be positive, got "
+                             f"{self.group_size}")
 
     @property
     def weight_bits(self) -> Optional[int]:

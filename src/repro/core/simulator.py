@@ -37,22 +37,34 @@ from repro.core.workloads import ConvLayer
 
 @dataclasses.dataclass(frozen=True)
 class OperandTypes:
-    """Workload datatype: integer bits or FP16, per operand."""
+    """Workload datatype: integer bits or an FP format, per operand.
 
-    a_kind: str = "int"   # 'int' | 'fp16'
+    FP operand ``bits`` are *significand magnitude* bits (hidden bit
+    included) — the width the nibble-serial datapath actually iterates
+    over: 12 for FP16 (sign-magnitude mantissa + round bits, paper
+    §2.1), 4 for fp8 e4m3 (1 hidden + 3 mantissa), 2 for fp4 e2m1.
+    Any fp operand engages the exponent-alignment machinery (EHU +
+    shifters), narrower significands just take fewer iterations."""
+
+    a_kind: str = "int"   # 'int' | 'fp16' | 'fp8' | 'fp4'
     a_bits: int = 4
     b_kind: str = "int"
     b_bits: int = 4
 
     @property
     def is_fp(self) -> bool:
-        return self.a_kind == "fp16" or self.b_kind == "fp16"
+        return (self.a_kind.startswith("fp")
+                or self.b_kind.startswith("fp"))
 
 
 INT4 = OperandTypes("int", 4, "int", 4)
 INT8x4 = OperandTypes("int", 8, "int", 4)
 INT8 = OperandTypes("int", 8, "int", 8)
 FP16 = OperandTypes("fp16", 12, "fp16", 12)  # 12b signed magnitudes
+# fp storage tier (quant/prepare): int8 activations against fp-coded
+# weights — the weight side dequantizes through the alignment datapath
+FP8 = OperandTypes("int", 8, "fp8", 4)    # e4m3: 4b significand
+FP4 = OperandTypes("int", 8, "fp4", 2)    # e2m1: 2b significand
 
 
 # ------------------------------------------------------------- exp source

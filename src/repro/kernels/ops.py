@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ipu import IPUConfig
+from repro.kernels import fused as _fused
 from repro.kernels import mpmm as _mpmm
 from repro.kernels import qmm as _qmm
 from repro.kernels import ref as _ref
@@ -69,6 +70,19 @@ def pack_int4(w: jax.Array) -> jax.Array:
 
 def unpack_int4(packed: jax.Array) -> jax.Array:
     return _ref.unpack_int4_ref(packed)
+
+
+def pack_u4(codes: jax.Array) -> jax.Array:
+    """Pack (..., K, N) UNSIGNED 4-bit codes (fp4 e2m1 bit fields) into
+    (..., K//2, N) bytes — same nibble layout as :func:`pack_int4`, but
+    unpacking never sign-extends."""
+    if codes.shape[-2] % 2:
+        raise ValueError("K must be even to pack nibbles")
+    return _ref.pack_u4_ref(codes)
+
+
+def unpack_u4(packed: jax.Array) -> jax.Array:
+    return _ref.unpack_u4_ref(packed)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "interpret"))
@@ -131,6 +145,55 @@ def quantized_matmul_packed(a_q: jax.Array, b_packed: jax.Array,
     return _scale_epilogue(
         int4_matmul_packed(a_q, b_packed, backend=backend),
         scale_a, scale_b)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "backend", "interpret"))
+def _fused_quantized_matmul(x, w, sw, sa, *, kind: str, backend: str,
+                            interpret: bool):
+    if backend == "xla":
+        return _ref.fused_qmm_ref(x, w, sw, sa, kind=kind)
+    return _fused.fused_qmm(x, w, sw, sa, kind=kind, interpret=interpret)
+
+
+def fused_quantized_matmul(x: jax.Array, w: jax.Array, sw: jax.Array,
+                           sa, *, kind: str = "int8",
+                           backend: str = "pallas") -> jax.Array:
+    """Fused exact-int matmul over STORED operands: f32 activations are
+    quantized in-register against the calibrated static scale ``sa``,
+    the int32 accumulation runs on int8 rows (``kind='int8'``/``'int4'``)
+    or nibble-packed int4 bytes (``'int4_packed'``) unpacked in the VMEM
+    block loop, and the per-channel scale epilogue is fused. Bit-exact
+    to ``quantize_symmetric(x, 8, scale=sa)`` + ``quantized_matmul`` /
+    ``quantized_matmul_packed`` — with no staged operand and no
+    materialized int activation tensor."""
+    return _fused_quantized_matmul(x, w, sw, sa, kind=kind,
+                                   backend=backend,
+                                   interpret=kernel_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "act", "backend", "interpret"))
+def _fused_dequant_matmul(x, w, sw, sa, *, kind: str, act: str,
+                          backend: str, interpret: bool):
+    if backend == "xla":
+        return _ref.fused_dequant_mm_ref(x, w, sw, sa, kind=kind, act=act)
+    return _fused.fused_dequant_mm(x, w, sw, sa, kind=kind, act=act,
+                                   interpret=interpret)
+
+
+def fused_dequant_matmul(x: jax.Array, w: jax.Array, sw: jax.Array,
+                         sa=None, *, kind: str = "int8",
+                         act: str = "none",
+                         backend: str = "pallas") -> jax.Array:
+    """General fused dequant matmul: any storage kind (int8/int4/
+    int4_packed/fp8/fp4/fp4_packed) with per-channel ((1, N)) or
+    per-group ((G, N)) scales decoded + dequantized in-register; the
+    optional activation step (``act``: 'none' | 'qdq' fake-quant grid |
+    'quant' exact int) fuses against the static scale ``sa``."""
+    return _fused_dequant_matmul(x, w, sw, sa, kind=kind, act=act,
+                                 backend=backend,
+                                 interpret=kernel_interpret())
 
 
 @functools.partial(jax.jit,

@@ -40,6 +40,70 @@ def unpack_int4_ref(packed: jax.Array) -> jax.Array:
     return out.reshape(*packed.shape[:-2], 2 * k2, n).astype(jnp.int8)
 
 
+def pack_u4_ref(codes: jax.Array) -> jax.Array:
+    """Pack UNSIGNED 4-bit codes (..., K, N) in [0, 15] -> (..., K//2, N)
+    bytes, same (hi << 4) | lo layout as :func:`pack_int4_ref`. Used for
+    fp4 (e2m1) bit-field codes, whose high bit is a sign field — the
+    int4 unpack's sign extension would corrupt codes >= 8."""
+    lo = codes[..., 0::2, :].astype(jnp.int32) & 0xF
+    hi = codes[..., 1::2, :].astype(jnp.int32) & 0xF
+    return ((hi << 4) | lo).astype(jnp.uint8)
+
+
+def unpack_u4_ref(packed: jax.Array) -> jax.Array:
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    k2, n = packed.shape[-2:]
+    out = jnp.stack([lo, hi], axis=-2)
+    return out.reshape(*packed.shape[:-2], 2 * k2, n).astype(jnp.uint8)
+
+
+def fused_qmm_ref(x: jax.Array, w: jax.Array, sw: jax.Array,
+                  sa: jax.Array, *, kind: str = "int8") -> jax.Array:
+    """Oracle for kernels.fused.fused_qmm: the staged exact-int path —
+    static-scale activation quantize, int32 matmul, scale epilogue —
+    composed from the already-verified pieces, in the same op order."""
+    sa = jnp.asarray(sa, jnp.float32)
+    aq = jnp.clip(jnp.round(x.astype(jnp.float32) / sa), -128, 127)
+    wq = unpack_int4_ref(w) if kind == "int4_packed" else w
+    acc = qmm_ref(aq.astype(jnp.int8), wq)
+    return (acc.astype(jnp.float32) * sa
+            * sw.reshape(-1)[None, :].astype(jnp.float32))
+
+
+def fused_dequant_mm_ref(x: jax.Array, w: jax.Array, sw: jax.Array,
+                         sa, *, kind: str = "int8",
+                         act: str = "none") -> jax.Array:
+    """Oracle for kernels.fused.fused_dequant_mm: decode storage to
+    f32, broadcast (G, N) scales over their K-groups, f32 matmul."""
+    from repro.quant.quantize import FP4_E2M1, FP8_E4M3, fp_decode
+    if kind == "int4_packed":
+        wf = unpack_int4_ref(w).astype(jnp.float32)
+    elif kind == "fp4_packed":
+        wf = fp_decode(unpack_u4_ref(w), FP4_E2M1)
+    elif kind in ("fp8", "fp4"):
+        wf = fp_decode(w, FP8_E4M3 if kind == "fp8" else FP4_E2M1)
+    else:
+        wf = w.astype(jnp.float32)
+    sw = jnp.asarray(sw, jnp.float32)
+    if sw.ndim == 1:
+        sw = sw.reshape(1, -1)
+    k, n = wf.shape
+    groups = sw.shape[0]
+    wf = (wf.reshape(groups, k // groups, n)
+          * sw[:, None, :]).reshape(k, n)
+    xf = x.astype(jnp.float32)
+    if act != "none":
+        sa = jnp.asarray(sa, jnp.float32)
+        xf = jnp.clip(jnp.round(xf / sa), -128, 127)
+        if act == "qdq":
+            xf = xf * sa
+    y = jax.lax.dot_general(xf, wf, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return y * sa if act == "quant" else y
+
+
 def mp_matmul_ref(a: jax.Array, b: jax.Array,
                   cfg: IPUConfig = IPUConfig()) -> jax.Array:
     """Oracle for the faithful mpmm kernel: the (already oracle-verified)

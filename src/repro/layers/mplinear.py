@@ -39,7 +39,8 @@ input absmax under the projection's policy path.
 from __future__ import annotations
 
 import contextlib
-from typing import Callable, Dict, List, Optional
+import os
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,32 +49,60 @@ from repro.core.policy import PrecisionSpec
 from repro.kernels import ops as kops
 from repro.layers.common import dense_init
 from repro.quant.prepare import PreparedWeight
-from repro.quant.quantize import fake_quant, quantize_symmetric
+from repro.quant.quantize import (FP_FORMATS, fake_quant, fp_dequantize,
+                                  fp_quantize, quantize_symmetric)
 
 # ------------------------------------------------------------- registry
 
-_EXECUTORS: Dict[str, Callable] = {}
+_EXECUTORS: Dict[Tuple[str, Optional[str]], Callable] = {}
+_EXECUTOR_VARIANT: Optional[str] = None
 
 
-def register_executor(*modes: str):
+def register_executor(*modes: str, variant: Optional[str] = None):
     """Register an executor for one or more policy modes. The executor
     signature is ``fn(w, x, spec, compute_dtype) -> y`` where ``w`` is a
     raw (d_in, d_out) array or a PreparedWeight and ``x`` is
-    (..., d_in); it returns (..., d_out) before bias/cast."""
+    (..., d_in); it returns (..., d_out) before bias/cast.
+
+    ``variant`` registers an alternative datapath for the same mode
+    (e.g. 'fused': the Pallas fused dequant-matmul executors); dispatch
+    prefers the active variant (:func:`executor_variant`) and falls
+    back to the base executor when the mode has no such variant."""
     def deco(fn):
         for m in modes:
-            _EXECUTORS[m] = fn
+            _EXECUTORS[(m, variant)] = fn
         return fn
     return deco
 
 
-def executor_for(mode: str) -> Callable:
+def executor_for(mode: str, variant: Optional[str] = None) -> Callable:
+    if variant is not None:
+        fn = _EXECUTORS.get((mode, variant))
+        if fn is not None:
+            return fn
     try:
-        return _EXECUTORS[mode]
+        return _EXECUTORS[(mode, None)]
     except KeyError:
+        known = sorted({m for m, v in _EXECUTORS if v is None})
         raise ValueError(
             f"no executor registered for precision mode {mode!r} "
-            f"(known: {sorted(_EXECUTORS)})") from None
+            f"(known: {known})") from None
+
+
+@contextlib.contextmanager
+def executor_variant(name: Optional[str]):
+    """Route every ``mp_linear`` dispatch traced while open through the
+    named executor variant (modes without that variant keep their base
+    executor). The serving engine opens this around its traced programs
+    when ``EngineConfig.fused_executors`` resolves on — trace-time
+    scoped, like the counter hooks."""
+    global _EXECUTOR_VARIANT
+    prev = _EXECUTOR_VARIANT
+    _EXECUTOR_VARIANT = name
+    try:
+        yield
+    finally:
+        _EXECUTOR_VARIANT = prev
 
 
 # ------------------------------------------- weight-quantization counter
@@ -221,7 +250,14 @@ def _int_executor(w, x, spec: PrecisionSpec, compute_dtype):
         sa = sa[:, 0]
     else:
         aq, sa = quantize_symmetric(x2, 8, scale=act_scale)
-    if prepared and w.kind == "int4_packed":
+    if prepared and w.scale_groups > 1:
+        # per-group scales vary along K: the column-scale epilogue
+        # can't fold them, so the fused dequant kernel consumes the
+        # stored operand directly and the act scale rides outside
+        y = kops.fused_dequant_matmul(aq.astype(jnp.float32), w.data,
+                                      w.scale, None, kind=w.kind)
+        y = y * (sa[:, None] if sa.ndim else sa)
+    elif prepared and w.kind == "int4_packed":
         y = kops.quantized_matmul_packed(aq, w.data, sa,
                                          _weight_scale_vec(w))
     elif prepared:
@@ -232,6 +268,95 @@ def _int_executor(w, x, spec: PrecisionSpec, compute_dtype):
         wraw = w.dequant() if isinstance(w, PreparedWeight) else w
         wq, sw = quantize_symmetric(wraw, bits, axis=0)
         y = kops.quantized_matmul(aq, wq, sa, sw[0, :])
+    return y.reshape(*lead, -1)
+
+
+_FP_STORAGE_KINDS = ("fp8", "fp4", "fp4_packed",
+                     "staged_fp8", "staged_fp4")
+
+
+@register_executor("fp8", "fp4")
+def _fp_executor(w, x, spec: PrecisionSpec, compute_dtype):
+    """fp8 (e4m3) / fp4 (e2m1) weight-storage tier: weights live as
+    bit-field codes + scales and dequantize to the compute dtype;
+    activations ride through unquantized (weight-only storage modes).
+    Raw weights fake-quant through the codec per call (the dynamic
+    control path); staged containers carry the pre-dequantized block
+    operand."""
+    if isinstance(w, PreparedWeight) and w.kind in _FP_STORAGE_KINDS:
+        wf = w.data if w.staged else w.dequant()
+    else:
+        note_weight_quant()
+        wraw = w.dequant() if isinstance(w, PreparedWeight) else w
+        fmt = FP_FORMATS[spec.mode]
+        codes, s = fp_quantize(wraw.astype(jnp.float32), fmt, axis=0)
+        wf = fp_dequantize(codes, s, fmt)
+    return jnp.dot(x.astype(compute_dtype), wf.astype(compute_dtype),
+                   preferred_element_type=jnp.float32)
+
+
+# ------------------------------------------------ fused Pallas variants
+
+def _fused_backend() -> str:
+    """Backend for the fused executors, resolved at trace time:
+    'pallas' (default; interpret mode on CPU — what CI exercises) or
+    'xla' via ``REPRO_FUSED_BACKEND`` — the identical-math reference
+    path benchmarks use for CPU wall time, where interpreter overhead
+    would drown the datapath being measured."""
+    return os.environ.get("REPRO_FUSED_BACKEND", "pallas")
+
+
+@register_executor("int8", "int4", variant="fused")
+def _int_fused_executor(w, x, spec: PrecisionSpec, compute_dtype):
+    """Fused int datapath (kernels.fused): stored int8 rows / packed
+    nibbles + scales enter the kernel as operands, the calibrated
+    static activation scale quantizes in-register, and the epilogue is
+    fused — no staged compute-dtype operand, no materialized int
+    activation tensor. Exact per-channel specs are bit-exact to the
+    staged exact path; fake-quant specs match it to f32-vs-bf16
+    rounding. Falls back to the base executor when the projection has
+    no prepared storage or no calibrated static scale (dynamic
+    per-token scales need the per-row epilogue)."""
+    bits = spec.weight_bits
+    fusable = (isinstance(w, PreparedWeight) and w.weight_bits == bits
+               and not w.staged and w.act_scale is not None
+               and w.data.ndim == 2)
+    if not fusable:
+        return _int_executor(w, x, spec, compute_dtype)
+    lead = x.shape[:-1]
+    x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+    sa = w.act_scale
+    backend = _fused_backend()
+    if spec.exact and w.scale_groups == 1:
+        y = kops.fused_quantized_matmul(x2, w.data, w.scale, sa,
+                                        kind=w.kind, backend=backend)
+    elif spec.exact:
+        y = kops.fused_dequant_matmul(x2, w.data, w.scale, sa,
+                                      kind=w.kind, act="quant",
+                                      backend=backend)
+    else:
+        y = kops.fused_dequant_matmul(x2, w.data, w.scale, sa,
+                                      kind=w.kind, act="qdq",
+                                      backend=backend)
+    return y.reshape(*lead, -1)
+
+
+@register_executor("fp8", "fp4", variant="fused")
+def _fp_fused_executor(w, x, spec: PrecisionSpec, compute_dtype):
+    """Fused fp8/fp4 datapath: stored e4m3/e2m1 codes decode and
+    dequantize in-register inside the kernel block loop (per-channel or
+    per-group scales); no staged operand. Falls back to the base
+    executor for raw/staged weights."""
+    fusable = (isinstance(w, PreparedWeight)
+               and w.kind in ("fp8", "fp4", "fp4_packed")
+               and w.data.ndim == 2)
+    if not fusable:
+        return _fp_executor(w, x, spec, compute_dtype)
+    lead = x.shape[:-1]
+    x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+    y = kops.fused_dequant_matmul(x2, w.data, w.scale, None,
+                                  kind=w.kind, act="none",
+                                  backend=_fused_backend())
     return y.reshape(*lead, -1)
 
 
@@ -272,7 +397,8 @@ def mp_linear(params, x: jax.Array, spec: PrecisionSpec,
     site resolved the spec with) — only consumed by the calibration
     hook (``collect_act_stats``) to key activation statistics."""
     _note_act_absmax(path, x)
-    y = executor_for(spec.mode)(params["w"], x, spec, compute_dtype)
+    y = executor_for(spec.mode, _EXECUTOR_VARIANT)(
+        params["w"], x, spec, compute_dtype)
     b = params.get("b")
     if b is not None:
         y = y + b.astype(y.dtype)

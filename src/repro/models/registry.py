@@ -16,6 +16,7 @@ to the token sequence.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import re
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
@@ -278,7 +279,8 @@ class DecodeCarry(NamedTuple):
 
 
 def make_block_decode(api: "ModelAPI", n: int, policy=None,
-                      sample: bool = False, tracer=None) -> Callable:
+                      sample: bool = False, tracer=None,
+                      fused: bool = False) -> Callable:
     """Generic multi-token decode block: a ``lax.scan`` of ``n``
     ``api.decode_step`` calls with on-device token selection.
 
@@ -316,6 +318,15 @@ def make_block_decode(api: "ModelAPI", n: int, policy=None,
     registered policy) cannot fail the first blocked dispatch. Resolved
     here — never at trace time — when omitted.
 
+    ``fused=True`` routes the block through the fused Pallas executors
+    instead of per-block staging: the staging walk is skipped entirely
+    (prepared storage — packed nibbles, fp codes, int8 rows — enters
+    the kernels as operands and dequantizes in-register), and the whole
+    scan is traced under ``layers.mplinear.executor_variant('fused')``
+    so every eligible projection takes the fused datapath. No staged
+    compute-dtype operand is ever materialized
+    (``quant.prepare.count_staged`` observes zero).
+
     ``tracer`` (an :class:`repro.obs.Tracer`) marks each jax trace of
     the program with an instant event: the body below runs exactly once
     per compile (jit caches the traced program afterwards), so the
@@ -330,6 +341,7 @@ def make_block_decode(api: "ModelAPI", n: int, policy=None,
         policy = get_policy(api.cfg.precision_policy)
 
     def run(params, carry, state):
+        from repro.layers.mplinear import executor_variant
         from repro.models.sampling import sample_tokens
         from repro.quant.prepare import stage_params
         if tracer is not None:
@@ -338,7 +350,12 @@ def make_block_decode(api: "ModelAPI", n: int, policy=None,
             # the trace phase of each block-decode compilation
             tracer.instant(f"jax_trace:block_decode[n={n}]",
                            cat="compile")
-        params = stage_params(params, policy, projection_paths(api.cfg))
+        variant = contextlib.nullcontext()
+        if fused:
+            variant = executor_variant("fused")
+        else:
+            params = stage_params(params, policy,
+                                  projection_paths(api.cfg))
         c = carry
 
         def body(inner, _):
@@ -365,9 +382,10 @@ def make_block_decode(api: "ModelAPI", n: int, policy=None,
             taken = taken + active.astype(jnp.int32)
             return (tok, pos, rem, taken, keys, st), nxt
 
-        (tok, pos, rem, taken, keys, state), tokens = jax.lax.scan(
-            body, (c.tok, c.pos, c.rem, c.taken, c.keys, state), None,
-            length=n)
+        with variant:
+            (tok, pos, rem, taken, keys, state), tokens = jax.lax.scan(
+                body, (c.tok, c.pos, c.rem, c.taken, c.keys, state),
+                None, length=n)
         out = c._replace(tok=tok, pos=pos, rem=rem, taken=taken,
                          keys=keys)
         return tokens, out, state

@@ -26,21 +26,33 @@ makes prepared and dynamic serving equivalent (tests/test_prepare.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import (Any, Callable, Dict, Mapping, Optional, Sequence,
-                    Tuple, Union)
+from typing import (Any, Callable, Dict, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.policy import PrecisionPolicy, PrecisionSpec
-from repro.quant.quantize import quantize_symmetric
+from repro.quant.quantize import (FP4_E2M1, FP8_E4M3, fp_decode,
+                                  fp_quantize, quantize_symmetric)
 
 # storage bytes per weight element by policy mode (scales excluded);
 # the table tools/plan_report.py and the serving memory columns use
 MODE_BYTES_PER_PARAM = {
     "fp32": 4.0, "bf16": 2.0, "fp16_ipu": 2.0, "int8": 1.0, "int4": 0.5,
+    "fp8": 1.0, "fp4": 0.5,
 }
+
+# storage kind -> the trace-time staged kind stage_params falls back to
+# when the fused executors are not routing the projection
+_STAGED_KIND = {
+    "int8": "staged8", "int4": "staged4", "int4_packed": "staged4",
+    "fp8": "staged_fp8", "fp4": "staged_fp4", "fp4_packed": "staged_fp4",
+}
+_FP_KINDS = ("fp8", "fp4", "fp4_packed")
+_FP_FMT = {"fp8": FP8_E4M3, "fp4": FP4_E2M1, "fp4_packed": FP4_E2M1}
 
 
 @jax.tree_util.register_dataclass
@@ -50,16 +62,24 @@ class PreparedWeight:
 
     ``kind`` (static): 'int8' | 'int4' (int8-storage nibble values) |
     'int4_packed' (two nibbles per byte along the contraction dim) |
-    'fp16'. ``data`` carries the stored operand, ``scale`` the
-    per-out-channel f32 scales (keepdims over axis -2; ``None`` for
-    fp16). Leading stacked-block axes are preserved so scan slices
-    prepared weights exactly like raw ones.
+    'fp8' (e4m3 bit-field codes, uint8) | 'fp4' (e2m1 codes in the low
+    nibble) | 'fp4_packed' (two e2m1 codes per byte along the
+    contraction dim) | 'fp16'. ``data`` carries the stored operand,
+    ``scale`` the f32 weight scales (``None`` for fp16): shape
+    (..., G, N) with G scale groups along the contraction dim — G == 1
+    (the keepdims layout quantize over axis -2 emits) is the
+    per-out-channel case, G > 1 splits the contraction dim into equal
+    groups (``PrecisionSpec.group_size``). Leading stacked-block axes
+    are preserved so scan slices prepared weights exactly like raw
+    ones.
 
-    'staged8' / 'staged4' are *trace-time* kinds (``stage_params``):
-    ``data`` holds the compute-dtype dequantized weights a blocked
-    decode program materializes ONCE per block and reuses every scan
-    step. They never live in engine storage — weight-resident bytes
-    always describe the packed/int forms above.
+    'staged8' / 'staged4' / 'staged_fp8' / 'staged_fp4' are
+    *trace-time* kinds (``stage_params``): ``data`` holds the
+    compute-dtype dequantized weights a blocked decode program
+    materializes ONCE per block and reuses every scan step — the
+    fallback datapath when the fused executors are off. They never
+    live in engine storage — weight-resident bytes always describe the
+    packed/int/fp forms above.
 
     ``act_scale`` optionally carries the *calibrated static activation
     scale* of the projection (f32 scalar, from ``quant.calibrate``):
@@ -80,13 +100,21 @@ class PreparedWeight:
 
     @property
     def staged(self) -> bool:
-        return self.kind in ("staged8", "staged4")
+        return self.kind in ("staged8", "staged4",
+                             "staged_fp8", "staged_fp4")
+
+    @property
+    def scale_groups(self) -> int:
+        """Scale groups along the contraction dim (1 = per-channel)."""
+        return 1 if self.scale is None else int(self.scale.shape[-2])
 
     def unpacked(self) -> jax.Array:
-        """Integer storage with nibbles unpacked (int kinds only)."""
+        """Stored codes with nibbles unpacked (packed kinds only)."""
+        from repro.kernels import ops as kops
         if self.kind == "int4_packed":
-            from repro.kernels import ops as kops
             return kops.unpack_int4(self.data)
+        if self.kind == "fp4_packed":
+            return kops.unpack_u4(self.data)
         return self.data
 
     def dequant(self) -> jax.Array:
@@ -94,7 +122,18 @@ class PreparedWeight:
         value for int kinds (same q * scale on the same q, scale)."""
         if self.kind == "fp16" or self.staged:
             return self.data.astype(jnp.float32)
-        return self.unpacked().astype(jnp.float32) * self.scale
+        q = self.unpacked()
+        if self.kind in _FP_KINDS:
+            vals = fp_decode(q, _FP_FMT[self.kind])
+        else:
+            vals = q.astype(jnp.float32)
+        groups = self.scale_groups
+        if groups == 1:
+            return vals * self.scale
+        k, n = vals.shape[-2:]
+        out = (vals.reshape(*vals.shape[:-2], groups, k // groups, n)
+               * self.scale[..., :, None, :])
+        return out.reshape(vals.shape)
 
     def nbytes(self) -> int:
         return int(self.data.nbytes
@@ -103,14 +142,45 @@ class PreparedWeight:
                       if self.act_scale is not None else 0))
 
 
+def _resolved_groups(k: int, spec: PrecisionSpec) -> int:
+    """Scale groups along the contraction dim for ``spec``: per-group
+    when ``group_size`` divides K with more than one group, else the
+    per-channel fallback (G = 1)."""
+    g = getattr(spec, "group_size", None)
+    if g and k % g == 0 and k // g > 1:
+        return k // g
+    return 1
+
+
+def _quantize_spec(w: jax.Array, spec: PrecisionSpec
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize ``w`` (..., K, N) per ``spec`` -> (stored values or
+    codes (..., K, N), scales (..., G, N))."""
+    wf = w.astype(jnp.float32)
+    k, n = w.shape[-2:]
+    groups = _resolved_groups(k, spec)
+    if groups > 1:
+        wf = wf.reshape(*w.shape[:-2], groups, k // groups, n)
+    if spec.mode in ("fp8", "fp4"):
+        fmt = FP8_E4M3 if spec.mode == "fp8" else FP4_E2M1
+        q, s = fp_quantize(wf, fmt, axis=-2)
+    else:
+        q, s = quantize_symmetric(wf, spec.weight_bits, axis=-2)
+    if groups > 1:
+        q = q.reshape(*w.shape[:-2], k, n)
+        s = jnp.squeeze(s, -2)
+    return q, s
+
+
 def prepare_weight(w: jax.Array, spec: PrecisionSpec,
                    act_scale: Optional[float] = None
                    ) -> Union[jax.Array, "PreparedWeight"]:
     """Prepare ONE weight array (..., d_in, d_out) for ``spec``.
 
     bf16/fp32 (and already-prepared containers) pass through untouched;
-    int modes quantize over axis -2 (per-out-channel scales), int4
-    additionally nibble-packs when the contraction dim is even.
+    int modes quantize over axis -2 (scales per out-channel, or per
+    K-group when ``spec.group_size`` divides the contraction dim), int4
+    and fp4 additionally nibble-pack when the contraction dim is even.
     ``act_scale`` (calibrated static activation scale, int modes only)
     is stored on the container so executors skip the per-token
     activation absmax reduce.
@@ -121,17 +191,25 @@ def prepare_weight(w: jax.Array, spec: PrecisionSpec,
         return w
     if spec.mode == "fp16_ipu":
         return PreparedWeight(w.astype(jnp.float16), None, "fp16")
-    bits = spec.weight_bits
     # the act-scale leaf carries the weight's leading stacked-block axes
     # (broadcast) so scan slices prepared trees exactly like raw ones,
     # leaving a 0-d scalar per block
     a = None if act_scale is None else jnp.full(w.shape[:-2], act_scale,
                                                 jnp.float32)
-    q, s = quantize_symmetric(w.astype(jnp.float32), bits, axis=-2)
-    if bits == 4 and w.shape[-2] % 2 == 0:
+    q, s = _quantize_spec(w, spec)
+    even_k = w.shape[-2] % 2 == 0
+    if spec.mode == "fp8":
+        return PreparedWeight(q, s, "fp8", a)
+    if spec.mode == "fp4":
+        from repro.kernels import ops as kops
+        if even_k:
+            return PreparedWeight(kops.pack_u4(q), s, "fp4_packed", a)
+        return PreparedWeight(q, s, "fp4", a)
+    if spec.weight_bits == 4 and even_k:
         from repro.kernels import ops as kops
         return PreparedWeight(kops.pack_int4(q), s, "int4_packed", a)
-    return PreparedWeight(q, s, "int8" if bits == 8 else "int4", a)
+    return PreparedWeight(q, s,
+                          "int8" if spec.weight_bits == 8 else "int4", a)
 
 
 PathResolver = Union[Callable[[str], Optional[str]], Mapping[str, str]]
@@ -197,12 +275,42 @@ def prepare_params(params, policy: PrecisionPolicy, paths: PathResolver,
     return _map_projections(params, resolve, prep)
 
 
+# --------------------------------------------- staged-operand counter
+
+_STAGED_COUNT: Optional[List[int]] = None
+
+
+@contextlib.contextmanager
+def count_staged():
+    """Count staged compute-dtype operand materializations traced while
+    open: every quantized container ``stage_params`` replaces with a
+    'staged*' container bumps it once. The fused-executor datapath
+    never stages, so a fused decode program traces zero — the
+    serving-smoke contract for the fused fast path."""
+    global _STAGED_COUNT
+    prev = _STAGED_COUNT
+    box = [0]
+    _STAGED_COUNT = box
+    try:
+        yield box
+    finally:
+        _STAGED_COUNT = prev
+
+
+def note_staged(n: int = 1):
+    """stage_params calls this per staged container; a no-op outside
+    count_staged()."""
+    if _STAGED_COUNT is not None:
+        _STAGED_COUNT[0] += n
+
+
 def stage_params(params, policy: PrecisionPolicy, paths: PathResolver,
                  compute_dtype=jnp.bfloat16):
     """Stage every fake-quant projection for a multi-step decode block.
 
-    Called INSIDE a jitted block program (``registry.make_block_decode``):
-    int containers whose spec runs the fake-quant path (``exact=False``)
+    Called INSIDE a jitted block program (``registry.make_block_decode``)
+    — the FALLBACK datapath when the fused executors are off: quantized
+    containers whose spec runs the fake-quant path (``exact=False``)
     are replaced by 'staged' containers holding
     ``dequant().astype(compute_dtype)`` — the exact array the executor
     would otherwise rebuild from storage on every scan step — and
@@ -210,7 +318,10 @@ def stage_params(params, policy: PrecisionPolicy, paths: PathResolver,
     construction (the identical value, computed once instead of N
     times); engine storage is untouched because staging only exists in
     the traced program. Exact-kernel and fp16 specs consume storage
-    operands directly, so they pass through.
+    operands directly, so they pass through. The fused executors make
+    this materialization unnecessary entirely — ``make_block_decode``
+    skips the staging walk when fused (``count_staged`` observes the
+    difference).
     """
     resolve = _resolver(paths)
 
@@ -219,10 +330,12 @@ def stage_params(params, policy: PrecisionPolicy, paths: PathResolver,
         if spec.exact:
             return w
         if isinstance(w, PreparedWeight):
-            if w.weight_bits and not w.staged:
+            staged_kind = _STAGED_KIND.get(w.kind)
+            if staged_kind is not None and not w.staged:
+                note_staged()
                 return PreparedWeight(
                     w.dequant().astype(compute_dtype), None,
-                    f"staged{w.weight_bits}", w.act_scale)
+                    staged_kind, w.act_scale)
             return w
         if spec.mode == "bf16":          # raw weights: one cast per block
             return w.astype(compute_dtype)
@@ -338,27 +451,31 @@ def _leaf_bytes(leaf: Any) -> int:
     return int(nb) if nb is not None else 0
 
 
-def weight_resident_bytes(params, paths: Optional[PathResolver] = None
-                          ) -> Dict[str, Any]:
+def weight_resident_bytes(params, paths: Optional[PathResolver] = None,
+                          by_kind: bool = True) -> Dict[str, Any]:
     """Weight memory actually resident in a param tree.
 
     Returns ``{'total': bytes over every leaf, 'projections': bytes of
     the policy-routed projection weights (when ``paths`` is given),
     'by_kind': projection bytes per storage kind ('raw' = unprepared
-    fp32/bf16 arrays)}`` — the per-replica numbers serving metrics and
-    serve_bench report.
+    fp32/bf16 arrays; every PreparedWeight kind — int8, int4_packed,
+    fp8, fp4_packed, ... — reports under its own key; scales and act
+    scales count toward their container)}`` — the per-replica numbers
+    serving metrics and serve_bench report. ``by_kind=False`` omits the
+    per-kind breakdown.
     """
     total = sum(_leaf_bytes(lf) for lf in jax.tree.leaves(
         params, is_leaf=lambda x: isinstance(x, PreparedWeight)))
     out: Dict[str, Any] = {"total": int(total)}
     if paths is not None:
-        by_kind: Dict[str, int] = {}
+        kinds: Dict[str, int] = {}
         proj = 0
         for _, w in iter_projection_weights(params, paths):
             b = _leaf_bytes(w)
             kind = w.kind if isinstance(w, PreparedWeight) else "raw"
-            by_kind[kind] = by_kind.get(kind, 0) + b
+            kinds[kind] = kinds.get(kind, 0) + b
             proj += b
         out["projections"] = int(proj)
-        out["by_kind"] = by_kind
+        if by_kind:
+            out["by_kind"] = kinds
     return out

@@ -4,13 +4,106 @@ The IPU's INT4/INT8 modes consume symmetric two's-complement operands
 with per-output-channel weight scales and per-tensor (or per-token)
 activation scales — the standard scheme the paper's quantization
 references (Jacob et al., Jung et al.) use.
+
+The fp8 (e4m3) / fp4 (e2m1) codecs below extend the same storage story
+down the floating-point ladder (FlexiBit's INT8/INT4/FP8/FP4 modes):
+weights are scaled so the format's max magnitude covers the channel (or
+group) absmax, then encoded to bit-field codes — uint8 per element, fp4
+codes nibble-packable like int4. Round-to-nearest-even on the mantissa,
+saturating at the format max (e4m3's NaN encodings are never emitted).
+``tools/fp_convert.py`` carries an independent numpy reference of the
+same codec; tests cross-check the two.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FPFormat:
+    """A small saturating IEEE-style format (no inf/NaN emission)."""
+
+    name: str
+    exp_bits: int
+    man_bits: int
+    bias: int
+    max: float          # largest representable magnitude (saturation)
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+
+# OCP 8-bit e4m3: bias 7, max 448 (mantissa 0b111 at top exponent is the
+# NaN pattern — saturation keeps codes below it); subnormals at 2^-9.
+FP8_E4M3 = FPFormat("fp8", exp_bits=4, man_bits=3, bias=7, max=448.0)
+# OCP 4-bit e2m1: bias 1, values {0, .5, 1, 1.5, 2, 3, 4, 6} (+sign);
+# all 16 codes are finite.
+FP4_E2M1 = FPFormat("fp4", exp_bits=2, man_bits=1, bias=1, max=6.0)
+
+FP_FORMATS = {f.name: f for f in (FP8_E4M3, FP4_E2M1)}
+
+
+def fp_encode(x: jax.Array, fmt: FPFormat) -> jax.Array:
+    """fp32 -> uint8 bit-field codes (sign | exp | mantissa).
+
+    Round-to-nearest-even on the mantissa grid, saturating clip at
+    ``fmt.max``; subnormals are exact. fp4 codes occupy the low nibble.
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    sign = jnp.signbit(xf).astype(jnp.int32)
+    ax = jnp.clip(jnp.abs(xf), 0.0, fmt.max)
+    # frexp: ax = m * 2^e with m in [0.5, 1) -> normalized exponent e-1
+    _, e = jnp.frexp(ax)
+    en = jnp.maximum(e - 1, 1 - fmt.bias)      # subnormal exponent floor
+    step = jnp.exp2((en - fmt.man_bits).astype(jnp.float32))
+    q = jnp.round(ax / step).astype(jnp.int32)  # round-half-even
+    # mantissa overflow from rounding bumps the exponent (2^(m+1) ->
+    # significand 2^m one exponent up); saturation above bounds q
+    of = q >= (1 << (fmt.man_bits + 1))
+    en = jnp.where(of, en + 1, en)
+    q = jnp.where(of, q >> 1, q)
+    normal = q >= (1 << fmt.man_bits)
+    exp_field = jnp.where(normal, en + fmt.bias, 0)
+    man = jnp.where(normal, q - (1 << fmt.man_bits), q)
+    code = ((sign << (fmt.exp_bits + fmt.man_bits))
+            | (exp_field << fmt.man_bits) | man)
+    return code.astype(jnp.uint8)
+
+
+def fp_decode(codes: jax.Array, fmt: FPFormat) -> jax.Array:
+    """uint8 bit-field codes -> fp32 (exact)."""
+    c = codes.astype(jnp.int32)
+    sign = (c >> (fmt.exp_bits + fmt.man_bits)) & 1
+    exp_field = (c >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)
+    man = c & ((1 << fmt.man_bits) - 1)
+    normal = exp_field > 0
+    sig = jnp.where(normal, man + (1 << fmt.man_bits), man)
+    e = jnp.where(normal, exp_field - fmt.bias, 1 - fmt.bias)
+    val = sig.astype(jnp.float32) * jnp.exp2(
+        (e - fmt.man_bits).astype(jnp.float32))
+    return jnp.where(sign == 1, -val, val)
+
+
+def fp_quantize(x: jax.Array, fmt: FPFormat, axis=None,
+                scale: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """-> (uint8 codes, f32 scale): scale maps the (per-axis) absmax
+    onto ``fmt.max``, mirroring :func:`quantize_symmetric`."""
+    if scale is None:
+        scale = calibrate_absmax(x, axis=axis) / fmt.max
+    else:
+        scale = jnp.asarray(scale, jnp.float32)
+    return fp_encode(x.astype(jnp.float32) / scale, fmt), scale
+
+
+def fp_dequantize(codes: jax.Array, scale: jax.Array,
+                  fmt: FPFormat) -> jax.Array:
+    return fp_decode(codes, fmt) * scale
 
 
 def calibrate_absmax(x: jax.Array, axis=None, pct: float = 1.0) -> jax.Array:

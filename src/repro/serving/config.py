@@ -43,6 +43,15 @@ class EngineConfig:
     mid-block. Turning both off reproduces the PR-5 between-block
     engine — the ablation baseline.
 
+    ``fused_executors`` selects the fused Pallas datapath
+    (``kernels.fused`` via ``layers.mplinear.executor_variant``):
+    ``"on"`` traces every engine program under the 'fused' variant and
+    skips the per-block staging walk (no staged compute-dtype operand is
+    ever materialized); ``"off"`` keeps the staged path; ``"auto"``
+    (default) turns it on exactly when the engine prepared weights and
+    resolved calibrated activation scales — the operands the fused
+    kernels need.
+
     Observability (``repro.obs``): ``trace=True`` records request
     lifecycle + tick-phase + compile spans on the engine's
     :class:`~repro.obs.Tracer` (``engine.dump_trace(path)`` exports
@@ -61,6 +70,7 @@ class EngineConfig:
     decode_block: int = 1              # decode steps per host dispatch
     prepare_weights: bool = True
     act_calibration: Any = None        # None | {path: scale} | "auto"
+    fused_executors: str = "auto"      # auto | on | off
     mid_block_admission: bool = True
     eos_stopping: bool = True
     eos_id: Optional[int] = None       # engine-wide stop id (e.g. <eos>)
@@ -86,6 +96,10 @@ class EngineConfig:
         if self.decode_block < 1:
             raise ValueError(f"decode_block must be >= 1, got "
                              f"{self.decode_block}")
+        if self.fused_executors not in ("auto", "on", "off"):
+            raise ValueError(
+                f"fused_executors must be 'auto', 'on' or 'off', got "
+                f"{self.fused_executors!r}")
         if self.eos_id is not None and self.eos_id < 0:
             raise ValueError(f"eos_id must be a token id, got "
                              f"{self.eos_id}")

@@ -74,6 +74,22 @@ from repro.parallel import sharding as shd
 from repro.serving.config import (MAX_STOP_IDS, EngineConfig,
                                   SamplingParams)
 
+
+def _with_variant(fn: Callable, name: Optional[str]) -> Callable:
+    """Trace ``fn`` under ``layers.mplinear.executor_variant(name)``:
+    the context is held over the function *body* (which jax executes at
+    trace time), so every mp_linear dispatch the program contains
+    resolves against the named executor variant."""
+    if name is None:
+        return fn
+    from repro.layers.mplinear import executor_variant
+
+    def wrapped(*args, **kwargs):
+        with executor_variant(name):
+            return fn(*args, **kwargs)
+
+    return wrapped
+
 # families whose prefill consumes only tokens and whose caches are
 # position-tagged (padding-safe): eligible for the chunked prefill path
 _FAST_PREFILL_FAMILIES = ("lm",)
@@ -198,6 +214,12 @@ class ServingEngine:
         self.params = api.prepare(params, self.policy,
                                   act_scales=self.act_scales) \
             if self.prepared else params
+        # fused Pallas executors (kernels.fused): 'on'/'off' explicit,
+        # 'auto' exactly when the operands the fused kernels consume
+        # exist — prepared storage plus calibrated static activation
+        # scales for int routes (fp8/fp4 routes need no act scale)
+        self.fused = self._resolve_fused(params)
+        self._variant = "fused" if self.fused else None
         self.caches = api.init_cache(self.b, self.cache_len)
         self.pos = np.zeros(self.b, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * self.b
@@ -248,8 +270,10 @@ class ServingEngine:
         self._g_occ = self.registry.rolling("batch_occupancy", w)
         self._g_short = self.registry.rolling("short_block", w)
         self._decode = traced_jit(
-            jax.jit(lambda p, tok, pos, c: api.decode_step(
-                p, {"token": tok, "pos": pos}, c)),
+            jax.jit(_with_variant(
+                lambda p, tok, pos, c: api.decode_step(
+                    p, {"token": tok, "pos": pos}, c),
+                self._variant)),
             "decode_step", self.tracer)
         # per-slot sampling state mirrored on host, scattered into the
         # decode programs per dispatch (rows reset when slots free)
@@ -273,9 +297,11 @@ class ServingEngine:
             self.prefill_chunk = max(
                 min(self.prefill_chunk, min(caps), self.cache_len), 1)
             self._prefill_chunk_fn = traced_jit(
-                jax.jit(lambda p, tokens, offs, lens, c: api.prefill_chunk(
-                    p, {"tokens": tokens, "offsets": offs,
-                        "lengths": lens}, c)),
+                jax.jit(_with_variant(
+                    lambda p, tokens, offs, lens, c: api.prefill_chunk(
+                        p, {"tokens": tokens, "offsets": offs,
+                            "lengths": lens}, c),
+                    self._variant)),
                 "prefill_chunk", self.tracer)
         # blocked-decode programs, one jit cache entry per (block
         # length, sample?) pair — at most 2 * decode_block compiles
@@ -320,6 +346,28 @@ class ServingEngine:
                 return scales
         from repro.quant.calibrate import calibrate_act_scales
         return calibrate_act_scales(self.cfg, self.api, params)
+
+    def _resolve_fused(self, params) -> bool:
+        mode = self.config.fused_executors
+        if mode == "off":
+            return False
+        if mode == "on":
+            if not self.prepared:
+                raise ValueError(
+                    "fused_executors='on' requires prepared weights "
+                    "(the fused kernels consume prepared storage)")
+            return True
+        return self.prepared and (self.act_scales is not None
+                                  or self._routes_fp(params))
+
+    def _routes_fp(self, params) -> bool:
+        """Does the policy route any projection to an fp storage mode
+        (fp8/fp4)? Those fuse without calibrated activation scales."""
+        from repro.quant.prepare import iter_projection_weights
+        paths = registry.projection_paths(self.cfg)
+        return any(
+            self.policy.spec_for(paths(prefix)).mode in ("fp8", "fp4")
+            for prefix, _ in iter_projection_weights(params, paths))
 
     def _routes_int(self, params) -> bool:
         """Does the policy route any projection of this param tree to an
@@ -369,7 +417,8 @@ class ServingEngine:
         with hook() as captured:
             if self.decode_block > 1:
                 fn = registry.make_block_decode(self.api, 1,
-                                                policy=self.policy)
+                                                policy=self.policy,
+                                                fused=self.fused)
                 zeros = jnp.zeros((self.b,), jnp.int32)
                 carry = registry.DecodeCarry(
                     tok=zeros, pos=zeros,
@@ -386,8 +435,10 @@ class ServingEngine:
                 tok = jnp.zeros((self.b, 1), jnp.int32)
                 pos = jnp.zeros((self.b,), jnp.int32)
                 jax.eval_shape(
-                    lambda p, c: self.api.decode_step(
-                        p, {"token": tok, "pos": pos}, c),
+                    _with_variant(
+                        lambda p, c: self.api.decode_step(
+                            p, {"token": tok, "pos": pos}, c),
+                        self._variant),
                     self.params, self.caches)
         return captured
 
@@ -419,6 +470,15 @@ class ServingEngine:
         from repro.layers import mplinear
         return self._trace_decode(mplinear.count_act_quant)[0]
 
+    def staged_trace_count(self) -> int:
+        """Staged compute-dtype operand materializations traced into ONE
+        decode dispatch (the ``quant.prepare.count_staged`` hook through
+        the same program the engine runs). Zero on the fused datapath —
+        prepared storage enters the kernels directly — and > 0 for any
+        staged-path blocked engine with fake-quant int/fp projections."""
+        from repro.quant import prepare
+        return self._trace_decode(prepare.count_staged)[0]
+
     def metrics(self) -> Dict:
         """Aggregate request latency metrics + engine counters (the
         ``counters`` block keeps the pre-registry plain-dict schema),
@@ -432,6 +492,7 @@ class ServingEngine:
         m["active_slots"] = sum(r is not None for r in self.slot_req)
         m["prepared_weights"] = self.prepared
         m["act_calibrated"] = self.act_scales is not None
+        m["fused_executors"] = self.fused
         m["decode_block"] = self.decode_block
         m["mid_block_admission"] = self.config.mid_block_admission
         m["eos_stopping"] = self.config.eos_stopping
@@ -647,7 +708,7 @@ class ServingEngine:
             fn = traced_jit(
                 jax.jit(registry.make_block_decode(
                     self.api, n, policy=self.policy, sample=sample,
-                    tracer=self.tracer)),
+                    tracer=self.tracer, fused=self.fused)),
                 f"block_decode[n={n},{kind}]", self.tracer)
             self._block_fns[(n, sample)] = fn
         return fn

@@ -26,6 +26,14 @@ autotune-smoke cold/warm contract:
     zero per-step weight quants still, and zero per-token activation
     absmax reduces (``mplinear.count_act_quant`` — static calibrated
     scales);
+  * the FUSED datapath holds its contracts: the blocked + calibrated
+    replica resolves ``fused_executors="auto"`` onto the fused
+    dequant-matmul executors and its traced decode step materializes
+    zero staged compute-dtype operands (``quant.prepare.count_staged``),
+    a staged control shows the counter is live, ``fused_executors="on"``
+    without prepared weights refuses construction, and an exact
+    per-channel int8 (fidelity_int8) fused engine reproduces the staged
+    engine's greedy streams token-for-token (bit-exact integer math);
   * the CONTINUOUS-BATCHING loop holds its contracts on a bursty
     tick-driven arrival trace (staggered submits landing mid-decode): a
     long prompt streams through multiple prefill waves while decode
@@ -124,6 +132,48 @@ def _run_blocked_pair(decode_block: int, requests: int, slots: int,
         eng.run_until_drained()
         engines[blk] = eng
         tokens[blk] = {r.rid: list(r.tokens) for r in reqs}
+    return engines, tokens
+
+
+def _run_fused_pair(decode_block: int, requests: int, slots: int,
+                    max_new: int, seed: int):
+    """The same workload through a fused (``fused_executors='on'``) and
+    a base (``'off'``) fidelity_int8 engine (shared params + scales):
+    exact per-channel int8, so the fused kernels must reproduce the
+    base datapath BIT-exactly — greedy streams are asserted identical,
+    not merely close. Returns both engines and the token streams."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import reduced
+    from repro.models import registry
+    from repro.serving.config import EngineConfig
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy="fidelity_int8")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    scales = None
+    engines, tokens = {}, {}
+    for mode in ("on", "off"):
+        eng = ServingEngine(cfg, api, params, config=EngineConfig(
+            batch_slots=slots, cache_len=64, decode_block=decode_block,
+            act_calibration=scales or "auto", fused_executors=mode))
+        scales = eng.act_scales
+        rng = np.random.default_rng(seed)
+        reqs = [Request(rid=rid,
+                        prompt=rng.integers(0, cfg.vocab,
+                                            int(rng.integers(3, 12)),
+                                            dtype=np.int32),
+                        max_new_tokens=max_new)
+                for rid in range(requests)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        engines[mode] = eng
+        tokens[mode] = {r.rid: list(r.tokens) for r in reqs}
     return engines, tokens
 
 
@@ -416,6 +466,57 @@ def main(argv: Optional[List[str]] = None) -> int:
     assert dyn.act_quant_trace_count() > 0, \
         "dynamic control engine counted no activation quants"
 
+    # --- fused executors: the blocked + calibrated replica resolved
+    # fused_executors="auto" onto the fused datapath — its traced decode
+    # program materializes ZERO staged compute-dtype operands (prepared
+    # storage enters the kernels directly), and the token-identity
+    # assert above therefore already pinned fused block invariance; a
+    # staged control (fused_executors="off", same params + scales) shows
+    # the count_staged hook is live
+    assert engines[blk].fused, "calibrated blocked replica did not fuse"
+    assert engines[blk].staged_trace_count() == 0, \
+        "fused replica still materializes staged operands"
+    import jax
+
+    from repro.serving.engine import ServingEngine as _SE
+    staged_ctl = _SE(engines[blk].cfg, engines[blk].api,
+                     engines[blk].api.init(jax.random.PRNGKey(args.seed)),
+                     config=EngineConfig(
+                         batch_slots=args.slots, cache_len=64,
+                         decode_block=blk,
+                         act_calibration=engines[blk].act_scales,
+                         fused_executors="off"))
+    staged_mats = staged_ctl.staged_trace_count()
+    assert staged_mats > 0, "staged control counted no materializations"
+    # fused_executors="on" is a hard contract: without prepared weights
+    # there is no fused storage to consume, so construction must refuse
+    try:
+        _SE(engines[blk].cfg, engines[blk].api, staged_ctl.params,
+            config=EngineConfig(batch_slots=args.slots, cache_len=64,
+                                prepare_weights=False,
+                                fused_executors="on"))
+    except ValueError:
+        pass
+    else:
+        raise AssertionError(
+            "fused_executors='on' accepted prepare_weights=False")
+
+    # --- fused bit-exactness: exact per-channel int8 (fidelity_int8)
+    # through fused vs staged executors produces IDENTICAL greedy
+    # streams — the fused kernels are the same integer math, not an
+    # approximation of it
+    fus_engines, fus_tokens = _run_fused_pair(
+        blk, args.requests, args.slots, args.max_new, args.seed)
+    assert fus_tokens["on"] == fus_tokens["off"], \
+        "fused exact-int8 streams diverged from the base datapath"
+    # exact specs never stage (storage operands feed the kernels on
+    # both paths), so BOTH engines trace zero materializations — the
+    # int8_serving staged control above is what proves the hook is live
+    assert fus_engines["on"].staged_trace_count() == 0 \
+        and fus_engines["off"].staged_trace_count() == 0, \
+        (fus_engines["on"].staged_trace_count(),
+         fus_engines["off"].staged_trace_count())
+
     # --- continuous batching: bursty arrivals, chunked prefill
     # continuation, mid-block admission, EOS stopping — all against a
     # flags-off baseline on the same trace
@@ -484,6 +585,8 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"{fast['host_syncs']} syncs / {fast['decode_steps']} steps "
           f"(per-token: {per_tok['host_syncs']}), 0 act quants/step "
           f"(dynamic control: {dyn.act_quant_trace_count()}); "
+          f"fused: 0 staged mats/step (staged control: {staged_mats}), "
+          f"exact-int8 fused==staged streams; "
           f"continuous: {cc['prefill_calls']} prefill waves, "
           f"{cc['short_blocks']} short blocks, "
           f"{cc['mid_block_admits']} mid-block admits, "

@@ -60,7 +60,7 @@ class TestPolicyMatching:
         with pytest.raises(ValueError):
             PrecisionSpec("int3")
         with pytest.raises(ValueError):
-            PlanRule("g", "pat", "fp8")
+            PlanRule("g", "pat", "fp3")
         with pytest.raises(ValueError):
             PrecisionPlan(name="p", arch=ARCH, default_mode="int3")
 

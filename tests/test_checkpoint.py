@@ -75,6 +75,36 @@ class TestSelfDescribingRestore:
             np.asarray(out["emb"]).view(np.uint16),
             np.asarray(tree["emb"]).view(np.uint16))
 
+    def test_fp_and_per_group_tree_bit_exact(self, tmp_path):
+        """The fp storage tier round-trips: e4m3/e2m1 bit-field codes
+        (uint8, packed or not) and (G, N) per-group scales restore
+        bit-for-bit with no template."""
+        rng = np.random.default_rng(1)
+        w8 = jnp.asarray(rng.normal(0, 1, (32, 8)), jnp.float32)
+        w4 = jnp.asarray(rng.normal(0, 1, (32, 8)), jnp.float32)
+        p8 = prepare_weight(w8, PrecisionSpec("fp8", group_size=8),
+                            act_scale=0.25)
+        p4 = prepare_weight(w4, PrecisionSpec("fp4"))
+        assert p8.kind == "fp8" and p8.scale_groups == 4
+        assert p4.kind == "fp4_packed"
+        tree = {"fp8": p8, "fp4": p4}
+        save_checkpoint(str(tmp_path), 1, tree, {"tier": "fp"})
+        out, meta = restore_checkpoint(str(tmp_path), 1)
+        assert meta == {"tier": "fp"}
+        for key, want in tree.items():
+            got = out[key]
+            assert isinstance(got, PreparedWeight)
+            assert got.kind == want.kind
+            assert got.data.dtype == want.data.dtype
+            assert got.scale.shape == want.scale.shape
+            np.testing.assert_array_equal(np.asarray(got.data),
+                                          np.asarray(want.data))
+            np.testing.assert_array_equal(np.asarray(got.scale),
+                                          np.asarray(want.scale))
+        # dequant of the restored container reproduces the original grid
+        np.testing.assert_array_equal(np.asarray(out["fp8"].dequant()),
+                                      np.asarray(p8.dequant()))
+
     def test_like_template_still_casts(self, tmp_path):
         tree = {"w": jnp.ones((2, 3), jnp.float32)}
         save_checkpoint(str(tmp_path), 1, tree)

@@ -1,0 +1,304 @@
+"""Fused dequant-matmul kernel + executor-variant coverage.
+
+The tentpole contract: the fused Pallas kernels (kernels/fused.py) take
+STORED operands — int8 rows, nibble-packed int4, fp8/fp4 bit-field
+codes, per-channel or per-group scales — and must reproduce the staged
+datapath they replace:
+
+  * exact-int per-channel (fused_quantized_matmul): bit-exact to
+    static-scale quantize + quantized_matmul[_packed] (int32 math);
+  * general dequant (fused_dequant_matmul): allclose to decode + f32
+    matmul (f32 accumulation order differs between the block loop and
+    one big dot);
+  * every storage kind x scale granularity x MXU-unaligned shape;
+  * the 'fused' executor variant routes mp_linear through them and
+    falls back to the base executors when operands aren't fusable.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+pytestmark = [pytest.mark.kernel, pytest.mark.slow]
+
+from repro.core.policy import PrecisionSpec
+from repro.kernels import ops, ref
+from repro.layers import mplinear
+from repro.layers.mplinear import executor_variant, mp_linear
+from repro.quant.prepare import PreparedWeight, prepare_weight
+from repro.quant.quantize import (FP4_E2M1, FP8_E4M3, fp_quantize,
+                                  quantize_symmetric)
+
+SHAPES = [(8, 16, 8), (16, 32, 128), (33, 64, 17), (1, 16, 1),
+          (130, 48, 257)]
+INT_KINDS = ["int8", "int4", "int4_packed"]
+ALL_KINDS = INT_KINDS + ["fp8", "fp4", "fp4_packed"]
+
+
+def _stored(rng, k, n, kind, groups=1):
+    """(stored operand, (G, N) scales) for one storage kind."""
+    w = jnp.asarray(rng.normal(0, 1, (k, n)), jnp.float32)
+    wg = w.reshape(groups, k // groups, n) if groups > 1 else w
+    ax = -2
+    if kind in ("fp8", "fp4", "fp4_packed"):
+        fmt = FP8_E4M3 if kind == "fp8" else FP4_E2M1
+        q, s = fp_quantize(wg, fmt, axis=ax)
+    else:
+        bits = 8 if kind == "int8" else 4
+        q, s = quantize_symmetric(wg, bits, axis=ax)
+    if groups > 1:
+        q = q.reshape(k, n)
+        s = jnp.squeeze(s, -2)
+    else:
+        s = s.reshape(1, n)
+    if kind == "int4_packed":
+        q = ops.pack_int4(q)
+    elif kind == "fp4_packed":
+        q = ops.pack_u4(q)
+    return q, s
+
+
+def _x(rng, m, k):
+    return jnp.asarray(rng.normal(0, 2, (m, k)), jnp.float32)
+
+
+class TestPackU4:
+    def test_roundtrip_preserves_high_codes(self):
+        """fp4 codes with the sign bit set (>= 8) survive the unsigned
+        pack — the int4 unpack's sign extension would corrupt them."""
+        rng = np.random.default_rng(0)
+        codes = jnp.asarray(rng.integers(0, 16, (3, 10, 6)), jnp.uint8)
+        np.testing.assert_array_equal(
+            np.asarray(ops.unpack_u4(ops.pack_u4(codes))),
+            np.asarray(codes))
+        signed = np.asarray(ops.unpack_int4(
+            ops.pack_int4(codes.astype(jnp.int8))))
+        assert (signed < 0).any(), "test codes never exercised bit 3"
+
+    def test_odd_k_rejected(self):
+        with pytest.raises(ValueError):
+            ops.pack_u4(jnp.zeros((3, 4), jnp.uint8))
+
+
+class TestFusedQMM:
+    """The exact-int fused kernel: bit-exact to the staged composition."""
+
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("kind", INT_KINDS)
+    def test_pallas_matches_ref(self, shape, kind):
+        m, k, n = shape
+        rng = np.random.default_rng(hash((shape, kind)) % 2**32)
+        w, sw = _stored(rng, k, n, kind)
+        x = _x(rng, m, k)
+        sa = jnp.float32(0.11)
+        got = ops.fused_quantized_matmul(x, w, sw, sa, kind=kind)
+        want = ref.fused_qmm_ref(x, w, sw, sa, kind=kind)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("kind", INT_KINDS)
+    def test_bit_exact_to_staged_pipeline(self, kind):
+        """The acceptance bar: fused == static-scale activation quantize
+        + quantized_matmul[_packed], bitwise, with zero staged arrays."""
+        rng = np.random.default_rng(7)
+        m, k, n = 9, 32, 21
+        w, sw = _stored(rng, k, n, kind)
+        x = _x(rng, m, k)
+        sa = jnp.float32(0.2)
+        aq, _ = quantize_symmetric(x, 8, scale=sa)
+        if kind == "int4_packed":
+            staged = ops.quantized_matmul_packed(aq, w, sa, sw.reshape(-1))
+        else:
+            staged = ops.quantized_matmul(aq, w, sa, sw.reshape(-1))
+        fused = ops.fused_quantized_matmul(x, w, sw, sa, kind=kind)
+        np.testing.assert_array_equal(np.asarray(fused),
+                                      np.asarray(staged))
+
+    def test_backends_agree(self):
+        rng = np.random.default_rng(11)
+        w, sw = _stored(rng, 48, 40, "int8")
+        x = _x(rng, 24, 48)
+        sa = jnp.float32(0.15)
+        p = ops.fused_quantized_matmul(x, w, sw, sa, kind="int8",
+                                       backend="pallas")
+        r = ops.fused_quantized_matmul(x, w, sw, sa, kind="int8",
+                                       backend="xla")
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(r))
+
+
+class TestFusedDequant:
+    """The general fused kernel: every kind x scale granularity x act."""
+
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("kind", ALL_KINDS)
+    def test_per_channel_matches_ref(self, shape, kind):
+        m, k, n = shape
+        rng = np.random.default_rng(hash((shape, kind, "pc")) % 2**32)
+        w, sw = _stored(rng, k, n, kind)
+        x = _x(rng, m, k)
+        got = ops.fused_dequant_matmul(x, w, sw, kind=kind)
+        want = ref.fused_dequant_mm_ref(x, w, sw, None, kind=kind)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("groups", [2, 4, 8])
+    @pytest.mark.parametrize("kind", ALL_KINDS)
+    def test_per_group_matches_ref(self, groups, kind):
+        m, k, n = 13, 64, 19
+        rng = np.random.default_rng(hash((groups, kind)) % 2**32)
+        w, sw = _stored(rng, k, n, kind, groups=groups)
+        assert sw.shape == (groups, n)
+        x = _x(rng, m, k)
+        got = ops.fused_dequant_matmul(x, w, sw, kind=kind)
+        want = ref.fused_dequant_mm_ref(x, w, sw, None, kind=kind)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("act", ["qdq", "quant"])
+    @pytest.mark.parametrize("kind", ["int8", "int4_packed", "fp8",
+                                      "fp4_packed"])
+    def test_act_epilogue_matches_ref(self, act, kind):
+        m, k, n = 7, 32, 23
+        rng = np.random.default_rng(hash((act, kind)) % 2**32)
+        w, sw = _stored(rng, k, n, kind, groups=4)
+        x = _x(rng, m, k)
+        sa = jnp.float32(0.17)
+        got = ops.fused_dequant_matmul(x, w, sw, sa, kind=kind, act=act)
+        want = ref.fused_dequant_mm_ref(x, w, sw, sa, kind=kind, act=act)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_backends_agree(self):
+        rng = np.random.default_rng(13)
+        w, sw = _stored(rng, 64, 24, "fp8", groups=4)
+        x = _x(rng, 10, 64)
+        p = ops.fused_dequant_matmul(x, w, sw, kind="fp8",
+                                     backend="pallas")
+        r = ops.fused_dequant_matmul(x, w, sw, kind="fp8", backend="xla")
+        np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------ executor variant
+
+def _prep(mode, k=32, n=24, exact=False, group_size=None, act_scale=0.2,
+          seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, (k, n)), jnp.float32)
+    spec = PrecisionSpec(mode, exact=exact, group_size=group_size)
+    return prepare_weight(w, spec, act_scale=act_scale), w, spec
+
+
+class TestExecutorVariant:
+    def test_variant_dispatch_and_fallback(self):
+        base = mplinear.executor_for("int8")
+        fused = mplinear.executor_for("int8", "fused")
+        assert fused is not base
+        # modes without the variant keep their base executor
+        assert mplinear.executor_for("bf16", "fused") \
+            is mplinear.executor_for("bf16")
+        with pytest.raises(ValueError, match="no executor"):
+            mplinear.executor_for("int12", "fused")
+
+    def test_context_scopes_and_restores(self):
+        assert mplinear._EXECUTOR_VARIANT is None
+        with executor_variant("fused"):
+            assert mplinear._EXECUTOR_VARIANT == "fused"
+            with executor_variant(None):
+                assert mplinear._EXECUTOR_VARIANT is None
+            assert mplinear._EXECUTOR_VARIANT == "fused"
+        assert mplinear._EXECUTOR_VARIANT is None
+
+    @pytest.mark.parametrize("mode", ["int8", "int4"])
+    def test_fused_exact_bit_exact_to_base(self, mode):
+        """Per-channel exact int: the fused variant is bit-exact to the
+        staged executor path on the same prepared container."""
+        pw, _, spec = _prep(mode, exact=True)
+        x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (2, 5, 32)),
+                        jnp.float32)
+        y_base = mp_linear({"w": pw}, x, spec)
+        with executor_variant("fused"):
+            y_fused = mp_linear({"w": pw}, x, spec)
+        np.testing.assert_array_equal(np.asarray(y_base),
+                                      np.asarray(y_fused))
+
+    @pytest.mark.parametrize("mode,exact", [("int8", False),
+                                            ("int4", False),
+                                            ("int8", True)])
+    def test_fused_per_group_close_to_base(self, mode, exact):
+        pw, _, spec = _prep(mode, k=64, exact=exact, group_size=16,
+                            seed=2)
+        assert pw.scale_groups == 4
+        x = jnp.asarray(np.random.default_rng(3).normal(0, 1, (6, 64)),
+                        jnp.float32)
+        y_base = mp_linear({"w": pw}, x, spec)
+        with executor_variant("fused"):
+            y_fused = mp_linear({"w": pw}, x, spec)
+        np.testing.assert_allclose(np.asarray(y_base, np.float32),
+                                   np.asarray(y_fused, np.float32),
+                                   rtol=0.05, atol=0.05)
+
+    @pytest.mark.parametrize("mode", ["fp8", "fp4"])
+    def test_fused_fp_close_to_base(self, mode):
+        pw, _, spec = _prep(mode, k=64, group_size=16, act_scale=None,
+                            seed=4)
+        assert pw.kind in ("fp8", "fp4_packed")
+        x = jnp.asarray(np.random.default_rng(5).normal(0, 1, (6, 64)),
+                        jnp.float32)
+        y_base = mp_linear({"w": pw}, x, spec)
+        with executor_variant("fused"):
+            y_fused = mp_linear({"w": pw}, x, spec)
+        np.testing.assert_allclose(np.asarray(y_base, np.float32),
+                                   np.asarray(y_fused, np.float32),
+                                   rtol=0.05, atol=0.05)
+
+    def test_unfusable_falls_back_to_base(self):
+        """No calibrated act scale -> the int fused executor must produce
+        the base executor's value exactly (it delegates)."""
+        pw, _, spec = _prep("int8", exact=True, act_scale=None)
+        assert pw.act_scale is None
+        x = jnp.asarray(np.random.default_rng(6).normal(0, 1, (4, 32)),
+                        jnp.float32)
+        y_base = mp_linear({"w": pw}, x, spec)
+        with executor_variant("fused"):
+            y_fused = mp_linear({"w": pw}, x, spec)
+        np.testing.assert_array_equal(np.asarray(y_base),
+                                      np.asarray(y_fused))
+
+    def test_fused_counts_no_dynamic_quant(self):
+        """The fused datapath neither absmax-reduces activations nor
+        re-quantizes weights — the serving counters stay zero."""
+        pw, _, spec = _prep("int8", exact=True)
+        x = jnp.asarray(np.random.default_rng(7).normal(0, 1, (4, 32)),
+                        jnp.float32)
+        with mplinear.count_weight_quant() as wq, \
+                mplinear.count_act_quant() as aq, \
+                executor_variant("fused"):
+            mp_linear({"w": pw}, x, spec)
+        assert wq[0] == 0 and aq[0] == 0
+
+
+class TestPreparedStorageKinds:
+    @pytest.mark.parametrize("mode,kind", [("fp8", "fp8"),
+                                           ("fp4", "fp4_packed")])
+    def test_fp_prepare_kinds(self, mode, kind):
+        pw, w, spec = _prep(mode, act_scale=None)
+        assert pw.kind == kind
+        # dequant reproduces the codec's q*scale grid value
+        fmt = FP8_E4M3 if mode == "fp8" else FP4_E2M1
+        q, s = fp_quantize(w, fmt, axis=-2)
+        from repro.quant.quantize import fp_dequantize
+        np.testing.assert_array_equal(np.asarray(pw.dequant()),
+                                      np.asarray(fp_dequantize(q, s, fmt)))
+
+    def test_fp4_odd_k_falls_back_unpacked(self):
+        pw = prepare_weight(jnp.ones((5, 4)), PrecisionSpec("fp4"))
+        assert pw.kind == "fp4"
+
+    def test_group_size_not_dividing_k_falls_back(self):
+        pw, _, _ = _prep("int8", k=30, group_size=7)
+        assert pw.scale_groups == 1
+
+    def test_staged_kind_mapping(self):
+        from repro.quant.prepare import _STAGED_KIND
+        for kind in ALL_KINDS:
+            assert _STAGED_KIND[kind].startswith("staged")

@@ -199,6 +199,89 @@ class TestModelScale:
         assert prep["projections"] * 6 <= raw["projections"], (prep, raw)
         assert prep["total"] < raw["total"]
 
+    def test_byte_contracts_per_kind(self):
+        """The storage-tier byte contracts, pinned per kind on one
+        weight: packed int4 and packed fp4 are ~1/8 of fp32 (one byte
+        per two elements + per-channel scales), int8 and fp8 ~1/4."""
+        k, n = 256, 64
+        w = jnp.asarray(np.random.default_rng(0).normal(0, 1, (k, n)),
+                        jnp.float32)
+        fp32_bytes = w.nbytes
+        scale_bytes = 4 * n
+        expect = {"int4": fp32_bytes / 8, "fp4": fp32_bytes / 8,
+                  "int8": fp32_bytes / 4, "fp8": fp32_bytes / 4}
+        for mode, payload in expect.items():
+            pw = prepare_weight(w, PrecisionSpec(mode))
+            assert pw.nbytes() == payload + scale_bytes, (mode, pw.kind)
+
+    def test_by_kind_breakdown(self):
+        """weight_resident_bytes(by_kind=True) reports each storage
+        kind under its own key and the parts sum to the total."""
+        policy = PrecisionPolicy(
+            "kinds_t",
+            rules=((r"attn/", PrecisionSpec("fp4")),
+                   (r"mlp/w_gate", PrecisionSpec("int8")),),
+            default=PrecisionSpec("bf16"))
+        cfg = dataclasses.replace(reduced(ARCH), precision_policy="bf16")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        paths = registry.projection_paths(cfg)
+        prep = prepare_params(params, policy, paths)
+        rep = weight_resident_bytes(prep, paths, by_kind=True)
+        kinds = rep["by_kind"]
+        assert "fp4_packed" in kinds and "int8" in kinds
+        assert "raw" in kinds            # head/default groups stay raw
+        assert sum(kinds.values()) == rep["projections"]
+        assert "by_kind" not in weight_resident_bytes(
+            prep, paths, by_kind=False)
+
+
+# ------------------------------------------------- fp codec cross-check
+
+def _load_fp_convert():
+    import importlib.util
+    import os
+    import sys
+    spec = importlib.util.spec_from_file_location(
+        "fp_convert", os.path.join(os.path.dirname(__file__), "..",
+                                   "tools", "fp_convert.py"))
+    fc = importlib.util.module_from_spec(spec)
+    sys.modules["fp_convert"] = fc       # dataclasses resolve __module__
+    spec.loader.exec_module(fc)
+    return fc
+
+
+class TestFPConvertReference:
+    """tools/fp_convert.py is an independent numpy codec; the jax codec
+    in quant.quantize must agree with it bit-for-bit."""
+
+    @pytest.mark.parametrize("name", ["fp8", "fp4"])
+    def test_encode_decode_agree(self, name):
+        fc = _load_fp_convert()
+        from repro.quant.quantize import FP_FORMATS, fp_decode, fp_encode
+        jf, nf = FP_FORMATS[name], fc.FORMATS[name]
+        assert (jf.exp_bits, jf.man_bits, jf.bias, jf.max) == \
+            (nf.exp_bits, nf.man_bits, nf.bias, nf.max)
+        rng = np.random.default_rng(0)
+        x = np.concatenate([
+            rng.normal(0, nf.max / 3, 2048).astype(np.float32),
+            fc.decode_table(nf), -fc.decode_table(nf),
+            np.asarray([0.0, -0.0, nf.max, -nf.max, 1e9, -1e9],
+                       np.float32)])
+        codes_np = fc.encode(x, nf)
+        codes_jax = np.asarray(fp_encode(jnp.asarray(x), jf))
+        np.testing.assert_array_equal(codes_np, codes_jax)
+        np.testing.assert_array_equal(
+            fc.decode(codes_np, nf),
+            np.asarray(fp_decode(jnp.asarray(codes_np), jf)))
+
+    def test_roundtrip_report_exact_on_grid(self):
+        fc = _load_fp_convert()
+        for fmt in fc.FORMATS.values():
+            rep = fc.roundtrip_report(fmt, samples=512)
+            assert rep["grid_roundtrip_exact"], fmt.name
+            assert rep["max_rel_err"] <= 1.0
+
 
 # ------------------------------------------------------------- serving
 

@@ -635,6 +635,89 @@ class TestRoutingReport:
         assert routes["block/full/attn/wo"] == "bf16"
 
 
+class TestFusedExecutors:
+    """EngineConfig.fused_executors routing: the on/off/auto contract,
+    the staged-materialization trace counter, and the fp storage tier
+    serving end-to-end from an autotune plan through a checkpoint."""
+
+    def test_on_requires_prepared(self, lm_setup):
+        with pytest.raises(ValueError, match="prepared"):
+            _engine(lm_setup, prepare_weights=False,
+                    fused_executors="on")
+
+    def test_auto_resolution_and_staged_counter(self, lm_setup):
+        # prepared + calibrated resolves onto the fused datapath: zero
+        # staged compute-dtype materializations in the traced program
+        eng = _engine(lm_setup, act_calibration="auto", decode_block=4)
+        assert eng.fused
+        assert eng.staged_trace_count() == 0
+        assert eng.metrics()["fused_executors"] is True
+        # "off" pins the staged fallback — the counter hook is live
+        off = _engine(lm_setup, act_calibration=eng.act_scales,
+                      decode_block=4, fused_executors="off")
+        assert not off.fused
+        assert off.staged_trace_count() > 0
+        assert off.metrics()["fused_executors"] is False
+        # prepared int without act scales cannot fuse (the int kernels
+        # need a static activation scale), nor can a dynamic engine
+        assert not _engine(lm_setup).fused
+        assert not _engine(lm_setup, prepare_weights=False).fused
+
+    @pytest.mark.slow
+    def test_fp_plan_serves_end_to_end(self, tmp_path):
+        """The acceptance path: an autotune plan selecting fp8 (per
+        -group scales) + fp4 prepares fp storage, resolves fused WITHOUT
+        activation scales (fp kernels need none), survives a fabric
+        checkpoint round trip, and the rebuilt engine serves identical
+        greedy streams."""
+        import jax
+
+        from repro.autotune.plan import PlanRule, PrecisionPlan
+        from repro.fabric.checkpoint import (build_engine,
+                                             save_engine_checkpoint)
+        from repro.models import registry
+        from repro.models.registry import projection_groups
+        from repro.quant.prepare import iter_projection_weights
+
+        groups = {g.name: g for g in projection_groups(reduced(ARCH))}
+        plan = PrecisionPlan(
+            name="fp_tier", arch=ARCH,
+            rules=(PlanRule("attn_qkv", groups["attn_qkv"].pattern,
+                            "fp8", group_size=8),
+                   PlanRule("ffn_in", groups["ffn_in"].pattern, "fp4")),
+            default_mode="bf16")
+        path = str(tmp_path / "plan.json")
+        plan.save(path)
+        cfg = dataclasses.replace(reduced(ARCH),
+                                  precision_policy=f"plan:{path}")
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, api, params, config=EngineConfig(
+            batch_slots=2, cache_len=64, decode_block=4))
+        assert eng.prepared and eng.fused
+        assert eng.staged_trace_count() == 0
+        kinds = {w.kind for _, w in iter_projection_weights(
+                     eng.params, registry.projection_paths(cfg))
+                 if hasattr(w, "kind")}
+        assert {"fp8", "fp4_packed"} <= kinds, kinds
+        reqs = _requests(cfg, [5, 7], [4, 4])
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        want = {r.rid: list(r.tokens) for r in reqs}
+        assert all(len(t) >= 4 for t in want.values()), want
+
+        ckpt = str(tmp_path / "ckpt")
+        save_engine_checkpoint(eng, ckpt, step=1)
+        eng2 = build_engine(ckpt)
+        assert eng2.prepared and eng2.fused
+        reqs2 = _requests(cfg, [5, 7], [4, 4])
+        for r in reqs2:
+            eng2.submit(r)
+        eng2.run_until_drained()
+        assert {r.rid: list(r.tokens) for r in reqs2} == want
+
+
 def test_launch_serve_shim():
     from repro.launch import serve as shim
     from repro.serving import config as cfg_mod

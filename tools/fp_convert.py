@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Standalone fp32 -> fp8 (e4m3) / fp4 (e2m1) reference converter.
+
+An independent numpy implementation of the storage codecs in
+``repro.quant.quantize`` (which are jax and frexp-based): here each
+format's full positive code grid is materialized by bit-field
+arithmetic and encoding is a nearest-grid-value search with ties
+broken to the even code — equivalent to round-to-nearest-even on the
+mantissa grid because adjacent codes alternate mantissa parity and
+exponent-boundary midpoints round up to the mantissa-0 code.
+
+The prepare/quantize unit tests import this module as the reference
+codec; disagreement between the two implementations fails CI.
+
+CLI: round-trip report over a random sample and the exact code grid::
+
+    python tools/fp_convert.py --fmt fp4 --samples 10000
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Format:
+    name: str
+    exp_bits: int
+    man_bits: int
+    bias: int
+    max: float
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+
+FP8_E4M3 = Format("fp8", exp_bits=4, man_bits=3, bias=7, max=448.0)
+FP4_E2M1 = Format("fp4", exp_bits=2, man_bits=1, bias=1, max=6.0)
+FORMATS: Dict[str, Format] = {f.name: f for f in (FP8_E4M3, FP4_E2M1)}
+
+
+def decode_table(fmt: Format) -> np.ndarray:
+    """value of every non-negative code, ascending (code order = value
+    order for these inf/NaN-free formats)."""
+    codes = np.arange(1 << (fmt.bits - 1), dtype=np.int64)
+    exp_field = (codes >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)
+    man = codes & ((1 << fmt.man_bits) - 1)
+    normal = exp_field > 0
+    sig = np.where(normal, man + (1 << fmt.man_bits), man)
+    e = np.where(normal, exp_field - fmt.bias, 1 - fmt.bias)
+    return (sig * np.exp2((e - fmt.man_bits).astype(np.float64))
+            ).astype(np.float32)
+
+
+def decode(codes: np.ndarray, fmt: Format) -> np.ndarray:
+    """bit-field codes (any uint/int array) -> fp32, exact."""
+    c = np.asarray(codes).astype(np.int64) & ((1 << fmt.bits) - 1)
+    mag = decode_table(fmt)[c & ((1 << (fmt.bits - 1)) - 1)]
+    sign = (c >> (fmt.bits - 1)) & 1
+    return np.where(sign == 1, -mag, mag).astype(np.float32)
+
+
+def encode(x: np.ndarray, fmt: Format) -> np.ndarray:
+    """fp32 -> uint8 codes: saturating clip at fmt.max, then nearest
+    grid value with ties to the even code."""
+    xf = np.asarray(x, np.float32)
+    sign = np.signbit(xf).astype(np.int64)
+    ax = np.minimum(np.abs(xf), np.float32(fmt.max))
+    grid = decode_table(fmt)
+    hi = np.clip(np.searchsorted(grid, ax), 1, len(grid) - 1)
+    lo = hi - 1
+    d_lo = ax - grid[lo]
+    d_hi = grid[hi] - ax
+    pick_hi = (d_hi < d_lo) | ((d_hi == d_lo) & (hi % 2 == 0))
+    code = np.where(pick_hi, hi, lo)
+    return (code | (sign << (fmt.bits - 1))).astype(np.uint8)
+
+
+def fp32_to_fp8(x: np.ndarray) -> np.ndarray:
+    return encode(x, FP8_E4M3)
+
+
+def fp8_to_fp32(codes: np.ndarray) -> np.ndarray:
+    return decode(codes, FP8_E4M3)
+
+
+def fp32_to_fp4(x: np.ndarray) -> np.ndarray:
+    return encode(x, FP4_E2M1)
+
+
+def fp4_to_fp32(codes: np.ndarray) -> np.ndarray:
+    return decode(codes, FP4_E2M1)
+
+
+def roundtrip_report(fmt: Format, samples: int = 10_000,
+                     seed: int = 0) -> Dict:
+    """Exactness on the code grid + error stats on a random sample."""
+    # restrict to emittable codes: e4m3's exp=15/man=7 NaN pattern
+    # decodes as 480 in the table but encode saturates at fmt.max
+    grid = decode_table(fmt)
+    grid = grid[grid <= fmt.max]
+    regrid = decode(encode(grid, fmt), fmt)
+    grid_exact = bool(np.array_equal(grid, regrid))
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, fmt.max / 4.0, samples).astype(np.float32)
+    y = decode(encode(x, fmt), fmt)
+    clipped = np.clip(x, -fmt.max, fmt.max)
+    err = np.abs(y - clipped)
+    nz = np.abs(clipped) > 0
+    rel = err[nz] / np.abs(clipped[nz])
+    # half-ULP bound of the mantissa grid for normal values
+    rel_bound = 2.0 ** -(fmt.man_bits + 1)
+    return {
+        "format": fmt.name,
+        "bits": fmt.bits,
+        "codes": 1 << fmt.bits,
+        "max": fmt.max,
+        "grid_roundtrip_exact": grid_exact,
+        "samples": samples,
+        "max_abs_err": float(err.max()),
+        "mean_abs_err": float(err.mean()),
+        "max_rel_err": float(rel.max()),
+        "mean_rel_err": float(rel.mean()),
+        "rel_half_ulp_bound": rel_bound,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fmt", choices=sorted(FORMATS), default=None,
+                    help="format to report (default: all)")
+    ap.add_argument("--samples", type=int, default=10_000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    names = [args.fmt] if args.fmt else sorted(FORMATS)
+    reports = [roundtrip_report(FORMATS[n], args.samples, args.seed)
+               for n in names]
+    json.dump(reports, sys.stdout, indent=1)
+    sys.stdout.write("\n")
+    return 0 if all(r["grid_roundtrip_exact"] for r in reports) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
