@@ -50,6 +50,14 @@ the storage claim the paper's datapath rests on — packed projection
 data bytes x 8 equals the fp32 bytes of the same projections exactly
 (per-channel scales are the only overhead), asserted, not reported.
 
+The FAILOVER section measures the fabric's recovery economics on a
+deterministic two-worker fleet: recovery latency (ticks from losing a
+worker to the first post-recovery token of a request it held) and
+token waste (work generated twice), requeue-from-scratch against
+reconnect-and-resume. Both scenarios must drain with zero loss and
+reference-identical streams; resume's wasted_tokens is zero by
+construction and the gap is reported as ``resume_waste_cut``.
+
 Emits ONE artifact, ``BENCH_serving.json``: the compact trajectory row
 ``benchmarks/run.py`` tracks across PRs (like ``BENCH_autotune``), with
 the full per-policy/router/bursty breakdown under its ``detail`` key.
@@ -505,6 +513,109 @@ def _bench_cold_start(repeats: int = 2):
     return out
 
 
+# failover section: fleet shape and workload for the deterministic
+# kill/sever scenarios (small enough that requeued work visibly queues
+# behind the survivor's two slots)
+FAILOVER_N = 6
+FAILOVER_MAX_NEW = 12
+FAILOVER_KILL_TICK = 3
+
+
+def _bench_failover():
+    """Failover economics on a deterministic two-worker fleet restored
+    from one serve-ready checkpoint: recovery latency (the clock time
+    from losing a worker to the first post-recovery token of a request
+    it held) and token waste (tokens the fleet generates twice) for the
+    two recovery paths — requeue-from-scratch (a non-resumable worker
+    dies) vs reconnect-and-resume (a resumable worker's link is severed
+    and it rejoins holding its engine state). ManualClock-driven, so
+    both numbers are scheduling facts in ticks, not wall-clock noise;
+    each scenario must still drain with zero loss and streams identical
+    to the single-engine reference."""
+    import tempfile
+
+    from repro.fabric import save_engine_checkpoint
+    from repro.fabric.checkpoint import build_engine
+    from repro.fabric.controller import (Controller, ManualClock,
+                                         reattach_local_worker,
+                                         spawn_local_worker)
+    from repro.fabric.smoke import _engine_streams, _make_requests, _streams
+
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy="int4_serving")
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, api, params, config=EngineConfig(
+        batch_slots=2, cache_len=64, act_calibration="auto"))
+
+    def _generated(req):
+        return 0 if req.tokens is None else len(req.tokens) - len(req.prompt)
+
+    out = {}
+    with tempfile.TemporaryDirectory() as root:
+        ckpt = os.path.join(root, "ckpt")
+        save_engine_checkpoint(engine, ckpt, step=0)
+        ref = _engine_streams(
+            build_engine(ckpt, api=api),
+            _make_requests(cfg, FAILOVER_N, FAILOVER_MAX_NEW, 0))
+        for mode in ("requeue", "resume"):
+            clock = ManualClock()
+            ctrl = Controller(heartbeat_timeout=4.0, clock=clock)
+            spawn_local_worker(ctrl, ckpt, name="survivor")
+            victim = spawn_local_worker(ctrl, ckpt, name="victim",
+                                        resumable=(mode == "resume"))
+            reqs = _make_requests(cfg, FAILOVER_N, FAILOVER_MAX_NEW, 0)
+            for r in reqs:
+                ctrl.submit(r)
+            for _ in range(FAILOVER_KILL_TICK):
+                clock.advance(1.0)
+                ctrl.tick()
+            affected = sorted(victim.replica.in_flight)
+            assert affected, "kill tick landed with nothing in flight"
+            received = {rid: _generated(victim.replica.in_flight[rid])
+                        for rid in affected}
+            t_kill = clock()
+            victim.endpoint.close()     # dead socket / severed link
+            # tick until an affected request's token count GROWS again
+            # (requeue resets it to zero first, so growth — not
+            # exceeding the kill-time count — is the recovery event)
+            by_rid = {r.rid: r for r in reqs}
+            prev = dict(received)
+            recovered_at = None
+            reattached = False
+            while ctrl.has_pending():
+                clock.advance(1.0)
+                ctrl.tick()
+                if (mode == "resume" and not reattached
+                        and victim.state == "suspect"):
+                    reattach_local_worker(ctrl, victim.driver.worker)
+                    reattached = True
+                cur = {rid: _generated(by_rid[rid]) for rid in affected}
+                if recovered_at is None and any(
+                        cur[rid] > prev[rid] for rid in affected):
+                    recovered_at = clock()
+                prev = cur
+            assert _streams(ctrl.completed) == ref, f"{mode} lost tokens"
+            # requeue regenerates everything the controller already had
+            # for the victim's in-flight work; resume regenerates
+            # nothing (the engine kept its state across the severance)
+            wasted = sum(received.values()) if mode == "requeue" else 0
+            total = FAILOVER_N * FAILOVER_MAX_NEW
+            out[mode] = {
+                "recovery_s": recovered_at - t_kill,
+                "affected_requests": len(affected),
+                "tokens_at_kill": sum(received.values()),
+                "wasted_tokens": wasted,
+                "waste_frac": wasted / total,
+                "requeued": ctrl.scheduler.requeued,
+                "resumed": ctrl.resumed,
+            }
+            assert (ctrl.scheduler.requeued == 0) == (mode == "resume")
+    out["resume_waste_cut"] = (out["requeue"]["wasted_tokens"]
+                               - out["resume"]["wasted_tokens"])
+    return out
+
+
 def run(verbose: bool = True, repeats: int = 3):
     """Whole-bench wrapper: fused executors default to the Pallas
     backend, which on CPU means interpret mode — pure tracing overhead
@@ -598,6 +709,15 @@ def _run(verbose: bool = True, repeats: int = 3):
                 f"restore {c['restore_s'] * 1e3:.0f}ms vs raw "
                 f"{c['raw_s'] * 1e3:.0f}ms ({c['speedup']:.1f}x), "
                 f"ckpt={c['checkpoint_bytes']}B")
+    failover = _bench_failover()
+    if verbose:
+        for mode in ("requeue", "resume"):
+            f = failover[mode]
+            row(f"serve/failover-{mode}", f["recovery_s"] * 1e6,
+                f"recovery={f['recovery_s']:.0f} ticks, "
+                f"wasted={f['wasted_tokens']} tok "
+                f"({f['waste_frac'] * 100:.0f}% of run), "
+                f"affected={f['affected_requests']}")
 
     base = results["bf16"]["tok_per_s"]
     summary = {
@@ -655,6 +775,15 @@ def _run(verbose: bool = True, repeats: int = 3):
             "goodput_speedup": bursty["goodput_speedup"],
         },
         "trace_overhead": trace_ov,
+        "failover": {
+            "recovery_s": {m: failover[m]["recovery_s"]
+                           for m in ("requeue", "resume")},
+            "wasted_tokens": {m: failover[m]["wasted_tokens"]
+                              for m in ("requeue", "resume")},
+            "waste_frac": {m: failover[m]["waste_frac"]
+                           for m in ("requeue", "resume")},
+            "resume_waste_cut": failover["resume_waste_cut"],
+        },
         "fused": fusedr,
         "operand_bytes_per_block": fusedr["operand_bytes_per_block"],
         "cold_start": {
@@ -668,7 +797,8 @@ def _run(verbose: bool = True, repeats: int = 3):
         # full per-policy/router/bursty breakdown (formerly the
         # separate serve_bench.json artifact)
         "detail": {**results, "router": router_r, "bursty": bursty,
-                   "fused": fusedr, "cold_start": cold},
+                   "fused": fusedr, "cold_start": cold,
+                   "failover": failover},
     }
     emit("BENCH_serving", summary)
     if verbose:

@@ -12,36 +12,81 @@ replicas to *addressable workers*:
     endpoints (deterministic in-memory pair / TCP sockets);
   * ``fabric.worker`` — the engine tick loop behind an endpoint;
   * ``fabric.controller`` — fleet admission + routing + failure
-    recovery (heartbeat timeouts, requeue, re-admission).
+    recovery (suspect -> dead liveness, reconnect-and-resume
+    reconciliation, requeue, admission shed, drain deadlines);
+  * ``fabric.chaos`` — seeded, clock-driven fault injection
+    (:class:`FaultSchedule` + :class:`ChaosEndpoint`): every failure
+    mode above is a deterministic, replayable test input.
 
 ``python -m repro.fabric smoke`` runs the kill-a-worker-mid-flight CI
-contract; ``python -m repro.fabric worker`` is the subprocess entry.
+contract; ``python -m repro.fabric chaos`` runs the seeded
+drops+partition+kill contract (zero loss, resume in place);
+``python -m repro.fabric worker`` is the subprocess entry.
+
+Multi-host deployment walkthrough
+---------------------------------
+
+The controller is the only fixed address; workers dial IN (discovery,
+not spawn)::
+
+    # host A — the control plane
+    ctrl = Controller(checkpoint_dir="/shared/ckpt",   # handoff source
+                      shed_factor=4.0)                 # backpressure
+    lst = ctrl.listen("0.0.0.0", 7000)
+    ...
+    while True:                       # serve loop
+        ctrl.tick()                   # accepts + classifies dial-ins
+
+    # host B..N — workers, started any time, in any order
+    #   fresh host, no local weights: Register -> RegisterAck hands it
+    #   the checkpoint directory, then it announces with Hello
+    python -m repro.fabric worker --register --resume \
+        --name worker-b --connect hostA:7000
+    #   host with a local checkpoint copy:
+    python -m repro.fabric worker --ckpt /local/ckpt --resume \
+        --name worker-c --connect hostA:7000
+
+``--resume`` makes a dropped connection redial (jittered exponential
+backoff, seeded) and reconcile via ``Resume``/``ResumeAck`` — the
+engine and its in-flight requests never reset, already-streamed tokens
+are never re-sent. Without it a disconnect is a clean exit and the
+controller requeues. ``ctrl.drain(deadline)`` bounds shutdown;
+``ctrl.shutdown()`` force-kills workers that ignore it.
 """
+from repro.fabric.chaos import ChaosEndpoint, FaultSchedule, fail_at
 from repro.fabric.checkpoint import (build_engine, load_engine_checkpoint,
                                      save_engine_checkpoint)
-from repro.fabric.controller import (Controller, FabricError,
+from repro.fabric.controller import (Controller, FabricError, FleetBusy,
                                      LocalWorkerDriver, ManualClock,
                                      RemoteReplica, WorkerHandle,
+                                     reattach_local_worker,
                                      spawn_local_worker,
                                      spawn_subprocess_worker)
 from repro.fabric.transport import (Drain, Drained, Endpoint,
-                                    FrameDecoder, Heartbeat, Hello,
-                                    Listener, LocalEndpoint, Shutdown,
+                                    FrameDecoder, FrameTooLarge,
+                                    Heartbeat, Hello, Listener,
+                                    LocalEndpoint, ProtocolError,
+                                    Register, RegisterAck, Resume,
+                                    ResumeAck, Shutdown,
                                     SocketEndpoint, StatsSnapshot,
                                     SubmitRequest, TokenChunk,
-                                    TransportClosed, connect,
+                                    TransportClosed, backoff_delays,
+                                    connect, connect_with_retry,
                                     decode_message, encode_message,
                                     local_pair, pack_frame)
 from repro.fabric.worker import FabricWorker, worker_main
 
 __all__ = [
-    "Controller", "Drain", "Drained", "Endpoint", "FabricError",
-    "FabricWorker", "FrameDecoder", "Heartbeat", "Hello", "Listener",
+    "ChaosEndpoint", "Controller", "Drain", "Drained", "Endpoint",
+    "FabricError", "FabricWorker", "FaultSchedule", "FleetBusy",
+    "FrameDecoder", "FrameTooLarge", "Heartbeat", "Hello", "Listener",
     "LocalEndpoint", "LocalWorkerDriver", "ManualClock",
-    "RemoteReplica", "Shutdown", "SocketEndpoint", "StatsSnapshot",
-    "SubmitRequest", "TokenChunk", "TransportClosed", "WorkerHandle",
-    "build_engine", "connect", "decode_message", "encode_message",
-    "load_engine_checkpoint", "local_pair", "pack_frame",
-    "save_engine_checkpoint", "spawn_local_worker",
-    "spawn_subprocess_worker", "worker_main",
+    "ProtocolError", "Register", "RegisterAck", "RemoteReplica",
+    "Resume", "ResumeAck", "Shutdown", "SocketEndpoint",
+    "StatsSnapshot", "SubmitRequest", "TokenChunk", "TransportClosed",
+    "WorkerHandle", "backoff_delays", "build_engine", "connect",
+    "connect_with_retry", "decode_message", "encode_message",
+    "fail_at", "load_engine_checkpoint", "local_pair", "pack_frame",
+    "reattach_local_worker", "save_engine_checkpoint",
+    "spawn_local_worker", "spawn_subprocess_worker", "worker_main",
 ]

@@ -1,4 +1,4 @@
-"""``python -m repro.fabric {worker,smoke}``."""
+"""``python -m repro.fabric {worker,smoke,chaos}``."""
 from __future__ import annotations
 
 import sys
@@ -7,7 +7,8 @@ import sys
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if not argv or argv[0] in ("-h", "--help"):
-        print("usage: python -m repro.fabric {worker,smoke} [options]")
+        print("usage: python -m repro.fabric {worker,smoke,chaos} "
+              "[options]")
         return 0 if argv else 2
     cmd, rest = argv[0], argv[1:]
     if cmd == "worker":
@@ -16,7 +17,11 @@ def main(argv=None) -> int:
     if cmd == "smoke":
         from repro.fabric.smoke import main as smoke_main
         return smoke_main(rest)
-    print(f"unknown repro.fabric command {cmd!r} (want worker|smoke)")
+    if cmd == "chaos":
+        from repro.fabric.chaos_smoke import main as chaos_main
+        return chaos_main(rest)
+    print(f"unknown repro.fabric command {cmd!r} "
+          f"(want worker|smoke|chaos)")
     return 2
 
 

@@ -1,0 +1,226 @@
+"""``python -m repro.fabric chaos`` — the chaos-hardening CI contract.
+
+One seeded :class:`~repro.fabric.chaos.FaultSchedule` per worker, a
+ManualClock, and a 3-worker fleet restored from one serve-ready
+checkpoint. Everything that goes wrong is deterministic, and nothing
+that goes wrong may change what callers observe:
+
+  * **combined chaos** — worker-a's telemetry is dropped, duplicated
+    and split across delivery quanta, and its heartbeats stall through
+    a window (suspect -> recover, no rework); worker-b suffers a
+    connection reset mid-flight (transient partition) and resumes IN
+    PLACE via the Resume handshake; worker-c dies silently at a
+    scheduled tick (permanent kill) and its work requeues. The run must
+    complete with zero request loss and token streams identical to a
+    single-engine reference.
+  * **transient partition, isolated** — a two-worker fleet where the
+    only fault is worker-b's severed link. Recovery must go through
+    Resume, not requeue: ``scheduler.requeued == 0``, ``resumed == 1``,
+    no failures, identical streams. Run twice with the same seed, the
+    delivery traces and streams must be bit-identical.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import tempfile
+from typing import Dict, Optional
+
+from repro.fabric.smoke import (POLICY, _engine_streams, _make_requests,
+                                _streams)
+
+
+def _spawn_chaos_worker(ctrl, ckpt: str, name: str, *,
+                        schedule=None, resumable: bool = False):
+    """spawn_local_worker with the worker-side endpoint wrapped in a
+    ChaosEndpoint (faults apply to the worker -> controller direction,
+    where the token stream lives). Returns (worker, handle, endpoint)
+    so the harness can reattach and read the delivery trace."""
+    from repro.fabric import transport as tp
+    from repro.fabric.chaos import ChaosEndpoint, fail_at
+    from repro.fabric.checkpoint import build_engine
+    from repro.fabric.controller import LocalWorkerDriver
+    from repro.fabric.worker import FabricWorker
+
+    ctrl_ep, worker_ep = tp.local_pair()
+    hook = None
+    if schedule is not None:
+        worker_ep = ChaosEndpoint(worker_ep, schedule, ctrl.clock)
+        hook = fail_at(schedule.kill_at_tick)
+    engine = build_engine(ckpt, clock=ctrl.clock)
+    worker = FabricWorker(name, engine, worker_ep, clock=ctrl.clock,
+                          failure_hook=hook, resumable=resumable)
+    worker.announce()
+    ctrl.add_worker(ctrl_ep, driver=LocalWorkerDriver(worker), name=name)
+    return worker, ctrl.workers[name], worker_ep
+
+
+def _drive(ctrl, clock, *, reattach: Optional[Dict] = None,
+           max_ticks: int = 10_000) -> Dict[str, int]:
+    """Tick the fleet to drained, healing each worker in ``reattach``
+    (name -> FabricWorker) the moment the controller suspects it.
+    Returns how many in-flight requests each healed worker was holding
+    at reattach time — the work that must resume, not requeue."""
+    from repro.fabric.controller import reattach_local_worker
+
+    pending = dict(reattach or {})
+    held: Dict[str, int] = {}
+    ticks = 0
+    while ctrl.has_pending():
+        clock.advance(1.0)
+        ctrl.tick()
+        ticks += 1
+        for name in list(pending):
+            h = ctrl.workers[name]
+            if h.state == "suspect" and h.endpoint.closed:
+                held[name] = len(h.replica.in_flight)
+                reattach_local_worker(ctrl, pending.pop(name))
+        if ticks > max_ticks:
+            raise RuntimeError(
+                f"chaos fleet did not drain in {max_ticks} ticks")
+    return held
+
+
+def _run_combined(ckpt: str, reqs, seed: int, kill_tick: int):
+    """Drops + duplicates + partial writes + heartbeat stall on
+    worker-a, transient partition on worker-b, silent kill on
+    worker-c — one schedule set, one run."""
+    from repro.fabric.chaos import FaultSchedule
+    from repro.fabric.controller import Controller, ManualClock
+
+    clock = ManualClock()
+    ctrl = Controller(heartbeat_timeout=4.0, clock=clock)
+    # telemetry hostility: StatsSnapshot drops keep heartbeat gaps
+    # bounded (the stall window alone drives suspicion, never death)
+    _, _, ep_a = _spawn_chaos_worker(
+        ctrl, ckpt, "worker-a",
+        schedule=FaultSchedule(seed=seed, drop_rate=0.3,
+                               droppable=("StatsSnapshot",),
+                               duplicate_every=3, partial_every=4,
+                               stall_heartbeats_between=(6.0, 10.0)))
+    wb, _, ep_b = _spawn_chaos_worker(
+        ctrl, ckpt, "worker-b",
+        schedule=FaultSchedule(seed=seed, reset_at_msg=12),
+        resumable=True)
+    _spawn_chaos_worker(
+        ctrl, ckpt, "worker-c",
+        schedule=FaultSchedule(seed=seed, kill_at_tick=kill_tick))
+    for r in reqs:
+        ctrl.submit(r)
+    held = _drive(ctrl, clock, reattach={"worker-b": wb})
+    return ctrl, held, ep_a, ep_b
+
+
+def _run_partition(ckpt: str, reqs, seed: int):
+    """The isolated resume path: the ONLY fault is worker-b's severed
+    connection; recovery must not touch the requeue machinery."""
+    from repro.fabric.chaos import FaultSchedule
+    from repro.fabric.controller import (Controller, ManualClock,
+                                         spawn_local_worker)
+
+    clock = ManualClock()
+    ctrl = Controller(heartbeat_timeout=4.0, clock=clock)
+    spawn_local_worker(ctrl, ckpt, name="worker-a")
+    wb, _, ep_b = _spawn_chaos_worker(
+        ctrl, ckpt, "worker-b",
+        schedule=FaultSchedule(seed=seed, reset_at_msg=12),
+        resumable=True)
+    for r in reqs:
+        ctrl.submit(r)
+    held = _drive(ctrl, clock, reattach={"worker-b": wb})
+    return ctrl, held, ep_b
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.fabric chaos")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kill-tick", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs import reduced
+    from repro.fabric.checkpoint import build_engine, save_engine_checkpoint
+    from repro.models import registry
+    from repro.serving.config import EngineConfig
+    from repro.serving.engine import ServingEngine
+
+    cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                              precision_policy=POLICY)
+    api = registry.build(cfg)
+    params = api.init(jax.random.PRNGKey(args.seed))
+    config = EngineConfig(batch_slots=args.slots, cache_len=64,
+                          act_calibration="auto",
+                          cost_correction="online")
+    engine = ServingEngine(cfg, api, params, config=config)
+
+    with tempfile.TemporaryDirectory(prefix="chaos_smoke_") as tmp:
+        ckpt = os.path.join(tmp, "ckpt")
+        save_engine_checkpoint(engine, ckpt, step=0)
+        ref = _engine_streams(
+            build_engine(ckpt, api=api),
+            _make_requests(cfg, args.requests, args.max_new, args.seed))
+
+        # -- combined chaos: drops + partition + silent kill, one run
+        reqs = _make_requests(cfg, args.requests, args.max_new,
+                              args.seed)
+        ctrl, held, ep_a, ep_b = _run_combined(ckpt, reqs, args.seed,
+                                               args.kill_tick)
+        assert len(ctrl.completed) == args.requests, (
+            f"chaos lost requests: have {sorted(ctrl.completed)}")
+        assert _streams(ctrl.completed) == ref, (
+            "chaos changed token streams")
+        assert ctrl.failures == ["worker-c"], ctrl.failures
+        assert ctrl.scheduler.requeued > 0, (
+            "the killed worker held nothing — kill tick not mid-flight")
+        assert ctrl.resumed == 1, ctrl.resumed
+        assert ctrl.workers["worker-b"].state == "alive", (
+            ctrl.workers["worker-b"].state)
+        assert held.get("worker-b", 0) > 0, (
+            "worker-b held no in-flight work at severance — the reset "
+            "message index is not mid-flight")
+        assert "worker-a" in ctrl.suspects, (
+            "the heartbeat stall never drove suspicion")
+        acts_a = {a for _, _, a in ep_a.log}
+        assert {"dropped", "duplicated", "partial",
+                "stalled"} <= acts_a, acts_a
+        assert any(a == "reset" for _, _, a in ep_b.log), ep_b.log
+        print(f"chaos-smoke: combined ok — {len(ref)} streams identical"
+              f" under drops+partition+kill; requeued="
+              f"{ctrl.scheduler.requeued} (kill), resumed="
+              f"{ctrl.resumed}, suspects={ctrl.suspects}")
+
+        # -- transient partition alone: resume in place, requeued == 0,
+        # and the whole run is bit-reproducible
+        runs = []
+        for _ in range(2):
+            reqs = _make_requests(cfg, args.requests, args.max_new,
+                                  args.seed)
+            ctrl, held, ep_b = _run_partition(ckpt, reqs, args.seed)
+            assert len(ctrl.completed) == args.requests, (
+                f"partition lost requests: {sorted(ctrl.completed)}")
+            assert _streams(ctrl.completed) == ref, (
+                "partition changed token streams")
+            assert ctrl.scheduler.requeued == 0, (
+                f"transient partition requeued "
+                f"{ctrl.scheduler.requeued} requests instead of "
+                f"resuming in place")
+            assert ctrl.failures == [], ctrl.failures
+            assert ctrl.resumed == 1, ctrl.resumed
+            assert held.get("worker-b", 0) > 0, held
+            runs.append((list(ep_b.log), _streams(ctrl.completed)))
+        assert runs[0] == runs[1], (
+            "same seed, different run: chaos is not deterministic")
+        print(f"chaos-smoke: partition ok — resumed in place holding "
+              f"{held['worker-b']} in-flight, requeued=0, two runs "
+              f"bit-identical ({len(runs[0][0])} trace entries)")
+    print("chaos-smoke: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,7 +29,25 @@ from repro.checkpoint.checkpoint import CheckpointManager
 
 
 class WorkerFailure(RuntimeError):
-    """Simulated node failure (preemption, ICI error, kernel crash)."""
+    """Simulated node failure (preemption, ICI error, kernel crash).
+
+    The one injectable death signal shared across the repo: the
+    training loop's retry-from-checkpoint path catches it, and the
+    serving fabric's workers die on it (``repro.fabric`` requeues or
+    resumes their work; ``repro.fabric.chaos`` schedules it
+    declaratively via ``FaultSchedule.kill_at_tick``)."""
+
+
+def fail_at_step(step: int,
+                 reason: str = "injected failure") -> Callable[[int], None]:
+    """The canonical ``failure_hook``: raise :class:`WorkerFailure` at
+    exactly ``step``. Used directly by training-loop tests and wrapped
+    by the fabric chaos harness (:func:`repro.fabric.chaos.fail_at`)
+    so both runtimes inject death through one code path."""
+    def hook(t: int) -> None:
+        if t == step:
+            raise WorkerFailure(f"{reason} at step {step}")
+    return hook
 
 
 @dataclasses.dataclass

@@ -62,6 +62,12 @@ class AdmissionScheduler:
     def pending(self) -> List[Request]:
         return [r for _, r in self._waiting]
 
+    def pending_new_tokens(self) -> int:
+        """Upper bound on decode tokens the waiting line still owes —
+        what a backpressure retry-after estimate divides by fleet
+        throughput."""
+        return sum(r.budget for _, r in self._waiting)
+
     def submit(self, req: Request, now: Optional[float] = None) -> None:
         if len(self._waiting) >= self.max_queue:
             raise SchedulerFull(

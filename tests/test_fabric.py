@@ -17,12 +17,14 @@ import pytest
 
 from repro.configs.base import ModelConfig, MoESpec
 from repro.fabric import transport as tp
+from repro.fabric.chaos import ChaosEndpoint, FaultSchedule, fail_at
 from repro.fabric.checkpoint import (engine_config_from_dict,
                                      engine_config_to_dict,
                                      model_config_from_dict,
                                      model_config_to_dict)
-from repro.fabric.controller import (Controller, FabricError,
-                                     LocalWorkerDriver, ManualClock)
+from repro.fabric.controller import (Controller, FabricError, FleetBusy,
+                                     LocalWorkerDriver, ManualClock,
+                                     reattach_local_worker)
 from repro.fabric.worker import FabricWorker
 from repro.obs import ReplicaStats
 from repro.runtime.fault_tolerance import WorkerFailure
@@ -37,16 +39,20 @@ class TestWireProtocol:
     MESSAGES = [
         tp.Hello(name="w0", policy="int4_serving", slots=4,
                  model_config={"d_model": 64, "rec_pattern": []},
-                 cost_correction="online"),
+                 cost_correction="online", resumable=True),
         tp.SubmitRequest(rid=7, prompt=[1, 2, 3], max_new_tokens=8,
                          priority=2, tags=["accuracy"],
                          temperature=0.7, top_k=5, top_p=0.9,
                          stop_ids=[11], seed=42),
         tp.TokenChunk(rid=7, tokens=[4, 5], done=True,
-                      finish_reason="stop", truncated=True),
+                      finish_reason="stop", truncated=True, start=3),
         tp.StatsSnapshot(name="w0", stats={"tok_per_s": 3.5},
                          slots=4, completed=9),
         tp.Heartbeat(tick=12, time=3.25),
+        tp.Register(name="fresh", need_checkpoint=True),
+        tp.RegisterAck(ckpt_dir="/shared/ckpt", step=7),
+        tp.Resume(name="w0", progress={3: 5, 9: 0}),
+        tp.ResumeAck(progress={3: 4}, cancel=[9]),
         tp.Drain(), tp.Drained(completed=3), tp.Shutdown(),
     ]
 
@@ -84,6 +90,61 @@ class TestWireProtocol:
         assert a.closed and b.closed
         with pytest.raises(tp.TransportClosed):
             a.send(tp.Shutdown())
+
+    def test_hostile_frames_raise_typed_errors(self):
+        # corrupt msgpack payload
+        with pytest.raises(tp.ProtocolError, match="malformed"):
+            tp.decode_message(b"\xc1\xff\x00garbage")
+        # valid msgpack, but not the typed envelope
+        with pytest.raises(tp.ProtocolError, match="envelope"):
+            tp.decode_message(msgpack.packb([1, 2, 3]))
+        # envelope whose fields are not a map
+        with pytest.raises(tp.ProtocolError, match="not a map"):
+            tp.decode_message(msgpack.packb({"t": "Drain", "f": [1]}))
+        # right type, wrong fields
+        with pytest.raises(tp.ProtocolError, match="bad Heartbeat"):
+            tp.decode_message(msgpack.packb(
+                {"t": "Heartbeat", "f": {"warp": 9}}))
+        # every ProtocolError is a ValueError: containment code that
+        # predates the subclass keeps working
+        assert issubclass(tp.ProtocolError, ValueError)
+
+    def test_oversized_frames_rejected_both_directions(self):
+        with pytest.raises(tp.FrameTooLarge):
+            tp.pack_frame(b"\x00" * (tp.MAX_FRAME + 1))
+        dec = tp.FrameDecoder()
+        # a hostile header announcing an absurd payload is refused at
+        # the 4-byte mark — no buffering of unbounded garbage
+        import struct
+        with pytest.raises(tp.FrameTooLarge):
+            dec.feed(struct.pack(">I", tp.MAX_FRAME + 1))
+
+    def test_truncated_stream_is_visible_not_fatal(self):
+        dec = tp.FrameDecoder()
+        frame = tp.pack_frame(tp.encode_message(tp.Drain()))
+        assert dec.feed(frame[:5]) == []
+        assert dec.pending_bytes == 5          # mid-frame truncation
+        assert dec.feed(frame[5:]) == [tp.encode_message(tp.Drain())]
+        assert dec.pending_bytes == 0
+
+    def test_backoff_is_seeded_and_bounded(self):
+        a = tp.backoff_delays(8, seed=3)
+        b = tp.backoff_delays(8, seed=3)
+        c = tp.backoff_delays(8, seed=4)
+        assert a == b and a != c               # pure function of seed
+        assert all(0 < d <= 5.0 for d in a)
+        # exponential envelope: undelayed upper bounds double
+        assert all(d <= 0.1 * (2.0 ** k) for k, d in enumerate(a))
+
+    def test_connect_with_retry_exhausts_into_typed_error(self):
+        lst = tp.Listener()
+        host, port = lst.host, lst.port
+        lst.close()                            # nobody home
+        slept = []
+        with pytest.raises(tp.TransportClosed, match="after 3 attempts"):
+            tp.connect_with_retry(host, port, attempts=3,
+                                  sleep=slept.append)
+        assert slept == tp.backoff_delays(3)[:len(slept)]
 
     def test_socket_endpoints_roundtrip(self):
         listener = tp.Listener()
@@ -358,6 +419,336 @@ class TestControllerFleet:
         assert worker.tick() is False
 
 
+# ---------------------------------------------------- chaos endpoint
+
+class TestChaosEndpoint:
+    def _pair(self, schedule, t0=0.0):
+        clock = ManualClock(t0)
+        ctrl_side, worker_side = tp.local_pair()
+        return clock, ctrl_side, ChaosEndpoint(worker_side, schedule,
+                                               clock)
+
+    def test_deterministic_delivery_trace(self):
+        def run():
+            sched = FaultSchedule(seed=5, drop_rate=0.5,
+                                  duplicate_every=3, partial_every=4)
+            clock, ctrl_side, ep = self._pair(sched)
+            got = []
+            for i in range(40):
+                clock.advance(1.0)
+                ep.send(tp.Heartbeat(tick=i, time=clock.t))
+                ep.send(tp.TokenChunk(rid=1, tokens=[i], start=i))
+                got.extend(ctrl_side.poll())
+            got.extend(ctrl_side.poll())
+            return list(ep.log), got
+        assert run() == run()          # same seed -> bit-identical run
+
+    def test_drop_only_touches_droppable_types(self):
+        sched = FaultSchedule(seed=0, drop_rate=1.0)   # drop EVERYTHING
+        clock, ctrl_side, ep = self._pair(sched)
+        for i in range(10):
+            ep.send(tp.Heartbeat(tick=i, time=0.0))
+            ep.send(tp.TokenChunk(rid=1, tokens=[i], start=i))
+        got = ctrl_side.poll()
+        # every heartbeat gone, every data-plane chunk intact: TCP
+        # does not drop individual frames, so the data plane may only
+        # fail by severance (reset_at_msg), never silent frame loss
+        assert [m for m in got if isinstance(m, tp.Heartbeat)] == []
+        chunks = [m for m in got if isinstance(m, tp.TokenChunk)]
+        assert [c.tokens[0] for c in chunks] == list(range(10))
+
+    def test_partial_write_reassembles_across_polls(self):
+        sched = FaultSchedule(seed=0, partial_every=1)  # split all
+        clock, ctrl_side, ep = self._pair(sched)
+        ep.send(tp.Heartbeat(tick=1, time=0.0))
+        assert ctrl_side.poll() == []          # only the head arrived
+        ep.send(tp.Heartbeat(tick=2, time=0.0))   # flushes held tail
+        got = ctrl_side.poll()
+        assert tp.Heartbeat(tick=1, time=0.0) in got
+
+    def test_delay_holds_until_clock_matures(self):
+        sched = FaultSchedule(seed=0, delay_msgs=((0, 5.0),))
+        clock, ctrl_side, ep = self._pair(sched)
+        ep.send(tp.Heartbeat(tick=1, time=0.0))
+        assert ctrl_side.poll() == []
+        clock.advance(4.0)
+        ep.send(tp.Drain())                    # flush: not matured yet
+        assert [type(m).__name__ for m in ctrl_side.poll()] == ["Drain"]
+        clock.advance(2.0)
+        ep.send(tp.Drain())                    # now past the deadline
+        assert tp.Heartbeat(tick=1, time=0.0) in ctrl_side.poll()
+
+    def test_reset_severs_and_leaks_a_truncated_frame(self):
+        sched = FaultSchedule(seed=0, reset_at_msg=2)
+        clock, ctrl_side, ep = self._pair(sched)
+        ep.send(tp.Heartbeat(tick=1, time=0.0))
+        ep.send(tp.Heartbeat(tick=2, time=0.0))
+        with pytest.raises(tp.TransportClosed, match="reset"):
+            ep.send(tp.Heartbeat(tick=3, time=0.0))
+        assert ep.tripped and ep.closed and ctrl_side.closed
+        got = ctrl_side.poll()                 # pre-reset frames drain
+        assert len(got) == 2
+        with pytest.raises(tp.TransportClosed):
+            ep.send(tp.Drain())
+
+    def test_schedule_validation(self):
+        with pytest.raises(ValueError, match="drop_rate"):
+            FaultSchedule(drop_rate=1.5)
+        with pytest.raises(ValueError, match="duplicate_every"):
+            FaultSchedule(duplicate_every=-1)
+        assert fail_at(None) is None
+        hook = fail_at(3)
+        hook(2)
+        with pytest.raises(WorkerFailure):
+            hook(3)
+
+
+# ------------------------------------------- suspect/resume liveness
+
+def _spawn_resumable(ctrl, name, clock, *, slots=2):
+    cfg = _tiny_cfg()
+    engine = FakeEngine(cfg, EngineConfig(batch_slots=slots,
+                                          cost_correction="online"),
+                        clock)
+    ctrl_ep, worker_ep = tp.local_pair()
+    worker = FabricWorker(name, engine, worker_ep, clock=clock,
+                          resumable=True)
+    worker.announce()
+    handle = ctrl.add_worker(ctrl_ep, driver=LocalWorkerDriver(worker),
+                             name=name)
+    return worker, handle
+
+
+class TestSuspectResume:
+    def _fleet(self, **ctrl_kw):
+        clock = ManualClock()
+        ctrl = Controller(heartbeat_timeout=4.0, clock=clock, **ctrl_kw)
+        _spawn_fake(ctrl, "worker-a", clock)
+        worker_b, handle_b = _spawn_resumable(ctrl, "worker-b", clock)
+        return clock, ctrl, worker_b, handle_b
+
+    def test_transient_partition_resumes_in_place(self):
+        ref_ctrl, ref_reqs = _run(8, max_new=8)
+        ref = {r.rid: list(r.tokens) for r in ref_reqs}
+
+        clock, ctrl, worker_b, hb = self._fleet()
+        reqs = _requests(8, max_new=8)
+        for r in reqs:
+            ctrl.submit(r)
+        # let work land on both workers, then sever worker-b's link
+        for _ in range(2):
+            clock.advance(1.0)
+            ctrl.tick()
+        assert hb.replica.in_flight, "worker-b got no work"
+        held = dict(hb.replica.in_flight)
+        worker_b.endpoint.close()
+        clock.advance(1.0)
+        ctrl.tick()
+        assert hb.state == "suspect"
+        # suspicion HOLDS in-flight work (no requeue) and stops new
+        # routing, the suspect's requests stay owned by it
+        assert ctrl.scheduler.requeued == 0
+        assert dict(hb.replica.in_flight) == held
+        # heal: fresh pair, worker dials back in with Resume
+        reattach_local_worker(ctrl, worker_b)
+        ctrl.run_until_drained(advance=lambda: clock.advance(1.0))
+        assert ctrl.scheduler.requeued == 0    # resume path, not requeue
+        assert ctrl.resumed == 1
+        assert ctrl.failures == []
+        assert hb.state == "alive"
+        assert worker_b.reconnects == 1
+        assert sorted(ctrl.completed) == sorted(ref)
+        for rid, req in ctrl.completed.items():
+            assert req.tokens == ref[rid], f"rid {rid} diverged"
+
+    def test_grace_expiry_requeues_and_late_resume_rejoins_empty(self):
+        clock, ctrl, worker_b, hb = self._fleet(resume_grace=2.0)
+        reqs = _requests(6, max_new=8)
+        for r in reqs:
+            ctrl.submit(r)
+        for _ in range(2):
+            clock.advance(1.0)
+            ctrl.tick()
+        assert hb.replica.in_flight
+        worker_b.endpoint.close()
+        # stay gone past the grace: the controller gives up holding
+        for _ in range(4):
+            clock.advance(1.0)
+            ctrl.tick()
+        assert hb.state == "dead"
+        assert ctrl.failures == ["worker-b"]
+        assert ctrl.scheduler.requeued > 0
+        # the worker finally comes back: everything it held was
+        # rerouted, so the ResumeAck cancels it all and it rejoins
+        # as an empty-handed alive worker
+        reattach_local_worker(ctrl, worker_b)
+        ctrl.run_until_drained(advance=lambda: clock.advance(1.0))
+        assert hb.state == "alive" and ctrl.resumed == 1
+        # the cancel wiped its pre-death ledger; anything live now is
+        # post-resume work it finished and retains for resume safety
+        assert all(req.done for req, _ in worker_b._live.values())
+        assert sorted(ctrl.completed) == [r.rid for r in reqs]
+        for req in reqs:
+            assert req.tokens == _expected_stream(req)
+
+    def test_duplicated_chunks_never_duplicate_tokens(self):
+        clock = ManualClock()
+        ctrl = Controller(heartbeat_timeout=4.0, clock=clock)
+        handle = _spawn_fake(ctrl, "w", clock)
+        req = _requests(1, max_new=4)[0]
+        ctrl.submit(req)
+        for _ in range(32):
+            if req.done:
+                break
+            clock.advance(1.0)
+            ctrl.tick()
+            if req.tokens is None or req.done:
+                continue
+            gen = [int(t) for t in req.tokens[len(req.prompt):]]
+            # faithful duplicate of everything streamed so far: the
+            # start offset trims it to nothing
+            ctrl._on_tokens(handle, tp.TokenChunk(
+                rid=req.rid, tokens=gen, start=0))
+            # chunk from the future (its predecessor was lost): the
+            # gap means it must be ignored outright
+            ctrl._on_tokens(handle, tp.TokenChunk(
+                rid=req.rid, tokens=[99], start=len(gen) + 5))
+        assert req.done and req.tokens == _expected_stream(req)
+
+    def test_suspect_worker_gets_no_new_work(self):
+        clock, ctrl, worker_b, hb = self._fleet()
+        for r in _requests(2, max_new=30):
+            ctrl.submit(r)
+        clock.advance(1.0)
+        ctrl.tick()
+        worker_b.endpoint.close()
+        clock.advance(1.0)
+        ctrl.tick()
+        assert hb.state == "suspect"
+        routed_before = hb.replica.routed
+        for r in _requests(4, max_new=4, seed=9)[2:]:
+            r.rid += 100
+            ctrl.submit(r)
+        for _ in range(3):
+            clock.advance(0.1)             # stay inside the grace
+            ctrl.tick()
+        assert hb.replica.routed == routed_before
+
+
+# --------------------------------------------- graceful degradation
+
+class TestDegradation:
+    def test_shed_factor_raises_retriable_fleet_busy(self):
+        clock = ManualClock()
+        ctrl = Controller(heartbeat_timeout=4.0, clock=clock,
+                          shed_factor=1.0)
+        _spawn_fake(ctrl, "w", clock, slots=2)   # capacity 2, limit 2
+        reqs = _requests(5, max_new=4)
+        ctrl.submit(reqs[0])
+        ctrl.submit(reqs[1])
+        with pytest.raises(FleetBusy) as ei:
+            ctrl.submit(reqs[2])
+        assert ei.value.retry_after > 0
+        assert ctrl.shed == 1
+        # FleetBusy is a FabricError: existing handlers still catch it
+        assert isinstance(ei.value, FabricError)
+        # the queue drains, admission reopens
+        ctrl.run_until_drained(advance=lambda: clock.advance(1.0))
+        ctrl.submit(reqs[2])
+        ctrl.run_until_drained(advance=lambda: clock.advance(1.0))
+        assert sorted(ctrl.completed) == [0, 1, 2]
+
+    def test_malformed_frames_contained_not_fatal(self):
+        clock = ManualClock()
+        ctrl = Controller(heartbeat_timeout=4.0, clock=clock)
+        _spawn_fake(ctrl, "worker-a", clock)
+        hb = _spawn_fake(ctrl, "worker-b", clock)
+        reqs = _requests(6, max_new=6)
+        for r in reqs:
+            ctrl.submit(r)
+        clock.advance(1.0)
+        ctrl.tick()
+        # worker-b's stream turns to garbage mid-run
+        hb.endpoint._in.append(b"\x00\x00\x00\x04ABCD")
+        ctrl.run_until_drained(advance=lambda: clock.advance(1.0))
+        assert "worker-b" in ctrl.peer_errors
+        assert "worker-b" in ctrl.failures
+        assert hb.endpoint.closed
+        # the fleet routed around the bad peer with zero loss
+        assert sorted(ctrl.completed) == [r.rid for r in reqs]
+        for req in reqs:
+            assert req.tokens == _expected_stream(req)
+
+    def test_drain_deadline_reports_stragglers(self):
+        clock = ManualClock()
+        ctrl = Controller(heartbeat_timeout=1e9, clock=clock)
+
+        def hang(tick):
+            if tick >= 2:
+                raise WorkerFailure("hung mid-drain")
+
+        _spawn_fake(ctrl, "good", clock)
+        _spawn_fake(ctrl, "hung", clock, failure_hook=hang)
+        clock.advance(1.0)
+        ctrl.tick()
+        # the hung worker never answers Drained and (with the huge
+        # heartbeat window) never dies either: the deadline must fire
+        assert ctrl.drain(5.0,
+                          advance=lambda: clock.advance(1.0)) is False
+        assert ctrl.workers["good"].drained
+        assert not ctrl.workers["hung"].drained
+
+    def test_drain_completes_on_a_healthy_fleet(self):
+        clock = ManualClock()
+        ctrl = Controller(heartbeat_timeout=4.0, clock=clock)
+        _spawn_fake(ctrl, "a", clock)
+        _spawn_fake(ctrl, "b", clock)
+        for r in _requests(4, max_new=3):
+            ctrl.submit(r)
+        assert ctrl.drain(50.0,
+                          advance=lambda: clock.advance(1.0)) is True
+        assert all(h.drained for h in ctrl.workers.values())
+        assert len(ctrl.completed) == 4
+
+
+# ------------------------------------------------ controller clocking
+
+class TestControllerClock:
+    def test_await_hello_deadline_runs_on_injected_clock(self):
+        clock = ManualClock()
+        ctrl = Controller(clock=clock, hello_timeout=5.0)
+        endpoint, _ = tp.local_pair()       # peer that never speaks
+
+        class MuteDriver:
+            dead = False
+
+            def tick(self):
+                clock.advance(1.0)          # only the INJECTED clock moves
+
+        with pytest.raises(FabricError, match="never announced"):
+            ctrl.add_worker(endpoint, driver=MuteDriver())
+        # the deadline fired from ManualClock advances alone — under
+        # the old time.monotonic() mixing this would spin ~forever
+        assert clock.t <= 7.0
+
+    def test_await_hello_detects_closed_endpoint(self):
+        clock = ManualClock()
+        ctrl = Controller(clock=clock)
+        a, b = tp.local_pair()
+        b.close()
+        with pytest.raises(FabricError, match="closed before Hello"):
+            ctrl.add_worker(a, driver=None)
+
+    def test_await_hello_contains_pre_hello_garbage(self):
+        clock = ManualClock()
+        ctrl = Controller(clock=clock)
+        a, b = tp.local_pair()
+        b.send_bytes(b"\x00\x00\x00\x02\xc1\xff")
+        with pytest.raises(FabricError, match="garbage before Hello"):
+            ctrl.add_worker(a, driver=None)
+        assert a.closed
+
+
 # ------------------------------------------- real-model checkpoint
 
 class TestEngineCheckpoint:
@@ -406,3 +797,60 @@ class TestEngineCheckpoint:
         restored = build_engine(str(tmp_path), api=api)
         assert restored.weight_quant_trace_count() == 0
         assert restored.act_quant_trace_count() == 0
+
+
+# ------------------------------------------------- subprocess fleet
+
+@pytest.mark.slow
+class TestSubprocessFleet:
+    """The real multi-process path: forked ``python -m repro.fabric
+    worker`` processes dialing the controller's TCP listener — one
+    from a local checkpoint, one via the Register -> RegisterAck
+    checkpoint handoff. Real sockets, real wall clock, real engines.
+    The fabric-smoke CI lane runs this; the default lane skips it."""
+
+    def test_tcp_fleet_handoff_drain_shutdown(self, tmp_path):
+        import jax
+
+        from repro.configs import reduced
+        from repro.fabric.checkpoint import (build_engine,
+                                             save_engine_checkpoint)
+        from repro.fabric.controller import spawn_subprocess_worker
+        from repro.fabric.smoke import (POLICY, _engine_streams,
+                                        _make_requests, _streams)
+        from repro.models import registry
+        from repro.serving.engine import ServingEngine
+
+        cfg = dataclasses.replace(reduced("qwen2-0.5b"),
+                                  precision_policy=POLICY)
+        api = registry.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        config = EngineConfig(batch_slots=2, cache_len=64,
+                              act_calibration="auto",
+                              cost_correction="online")
+        engine = ServingEngine(cfg, api, params, config=config)
+        ckpt = str(tmp_path / "ckpt")
+        save_engine_checkpoint(engine, ckpt, step=0)
+        ref = _engine_streams(build_engine(ckpt, api=api),
+                              _make_requests(cfg, 4, 6, 0))
+
+        ctrl = Controller(heartbeat_timeout=120.0,
+                          checkpoint_dir=ckpt)
+        ctrl.listen("127.0.0.1", 0)
+        try:
+            spawn_subprocess_worker(ctrl, ckpt, name="proc-a")
+            # fresh host: forked WITHOUT --ckpt, takes its checkpoint
+            # directory from the controller's RegisterAck handoff
+            spawn_subprocess_worker(ctrl, name="proc-b",
+                                    register=True)
+            for r in _make_requests(cfg, 4, 6, 0):
+                ctrl.submit(r)
+            ctrl.run_until_drained(max_ticks=500_000)
+            assert _streams(ctrl.completed) == ref
+            assert ctrl.failures == []
+            assert ctrl.drain(60.0) is True
+        finally:
+            ctrl.shutdown()
+        for h in ctrl.workers.values():
+            assert h.process is not None
+            assert h.process.poll() is not None   # actually exited
